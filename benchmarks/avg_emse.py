@@ -1,0 +1,34 @@
+"""Figs 5–6: EMSE and |bias| of scaled addition u = (x+y)/2 via control mux."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import N_VALUES, loglog_slope, sample_xy, timer
+from repro.core import ops
+
+
+def run(full: bool = False):
+    t = timer()
+    n_pairs = 1000 if full else 200
+    trials = 100 if full else 25
+    x, y = sample_xy(n_pairs, seed=3)
+    u = (x + y) / 2.0
+    key = jax.random.PRNGKey(11)
+    rows = []
+    for scheme in ["stochastic", "deterministic", "dither"]:
+        es, bs = [], []
+        for n in N_VALUES:
+            outs = []
+            for tr in range(1 if scheme == "deterministic" else trials):
+                k = jax.random.fold_in(jax.random.fold_in(key, n), tr)
+                outs.append(ops.scaled_add_pulses(k, x, y, n, scheme))
+            e = jnp.stack(outs)
+            es.append(float(jnp.mean((e - u[None]) ** 2)))
+            bs.append(float(jnp.abs(jnp.mean(e - u[None]))))
+        rows.append((f"fig5_avg_emse_slope[{scheme}]", t(),
+                     f"{loglog_slope(N_VALUES, es):.2f}"))
+        rows.append((f"fig6_avg_bias_at_N{N_VALUES[-1]}[{scheme}]", t(),
+                     f"{bs[-1]:.2e}"))
+    return rows

@@ -1,0 +1,30 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_VALUES = [8, 16, 32, 64, 128, 256]
+
+
+def timer():
+    t0 = time.time()
+    return lambda: (time.time() - t0) * 1e6  # µs
+
+
+def loglog_slope(ns, ys):
+    """Least-squares slope of log(y) vs log(N) — the asymptotic exponent."""
+    ns = np.asarray(ns, float)
+    ys = np.maximum(np.asarray(ys, float), 1e-30)
+    return float(np.polyfit(np.log(ns), np.log(ys), 1)[0])
+
+
+def sample_xy(n_pairs: int, seed: int = 0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (n_pairs,))
+    y = jax.random.uniform(ky, (n_pairs,))
+    return x, y

@@ -1,0 +1,91 @@
+"""Figs 15–16: 3-layer ReLU MLP on the harder (Fashion-MNIST-like) synthetic
+task; every matmul (3 weight layers) quantised separately before multiply
+(the §VIII 'separate' scheme, as in the paper's Fashion-MNIST setup)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timer
+from repro.core.matmul import quantized_matmul
+from repro.data.mnist_like import make_dataset
+
+
+def train_mlp(x, y, hidden=(128, 64), steps=1500, lr=0.15, seed=0):
+    rs = np.random.RandomState(seed)
+    dims = [x.shape[1], *hidden, 10]
+    ws = [rs.normal(0, np.sqrt(2.0 / dims[i]), (dims[i], dims[i + 1])).astype(np.float32)
+          for i in range(3)]
+    bs = [np.zeros((d,), np.float32) for d in dims[1:]]
+    n = x.shape[0]
+    for s in range(steps):
+        idx = rs.randint(0, n, 256)
+        xb, yb = x[idx], y[idx]
+        h1 = np.maximum(xb @ ws[0] + bs[0], 0)
+        h2 = np.maximum(h1 @ ws[1] + bs[1], 0)
+        logits = h2 @ ws[2] + bs[2]
+        logits -= logits.max(1, keepdims=True)
+        p = np.exp(logits); p /= p.sum(1, keepdims=True)
+        p[np.arange(len(yb)), yb] -= 1.0
+        p /= len(yb)
+        g2 = h2.T @ p
+        dh2 = (p @ ws[2].T) * (h2 > 0)
+        g1 = h1.T @ dh2
+        dh1 = (dh2 @ ws[1].T) * (h1 > 0)
+        g0 = xb.T @ dh1
+        for w_, g_ in zip(ws, (g0, g1, g2)):
+            w_ -= lr * g_
+        bs[2] -= lr * p.sum(0); bs[1] -= lr * dh2.sum(0); bs[0] -= lr * dh1.sum(0)
+    return ws, bs
+
+
+def _qmm(a, w, bits, scheme, seed):
+    """Fixed [-1,1] quantizer range (paper §VII); activations are clipped to
+    [0,1] between layers so the range convention holds at every layer."""
+    return np.asarray(quantized_matmul(jnp.asarray(a), jnp.asarray(w), bits=bits,
+                                       scheme=scheme, variant="separate",
+                                       seed=seed, lo=-1.0, hi=1.0))
+
+
+def quantized_mlp_acc(x, y, ws, bs, bits, scheme, trials, seed=0):
+    # per-layer weight scaling to [-1,1]; ReLU is scale-equivariant so the
+    # cumulative factor c keeps biases consistent and argmax unchanged.
+    scales = [float(np.abs(w).max()) for w in ws]
+    accs = []
+    for tr in range(1 if scheme == "deterministic" else trials):
+        s = seed + 31 * tr
+        c = 1.0
+        h = x
+        for li in range(2):
+            c *= scales[li]
+            h = np.maximum(_qmm(h, ws[li] / scales[li], bits, scheme, s + li)
+                           + bs[li] / c, 0)
+            h = np.clip(h, 0.0, 1.0)  # keep activations in the quantizer range
+        c *= scales[2]
+        logits = _qmm(h, ws[2] / scales[2], bits, scheme, s + 2) + bs[2] / c
+        accs.append(float((np.argmax(logits, 1) == y).mean()))
+    return float(np.mean(accs)), float(np.var(accs))
+
+
+def run(full: bool = False):
+    t = timer()
+    n_tr, n_te = (6000, 1000) if full else (2000, 400)
+    trials = 20 if full else 6
+    x_tr, y_tr, x_te, y_te = make_dataset(n_tr, n_te, hard=True, seed=9,
+                                          noise=0.3, sharp=0.7)
+    ws, bs = train_mlp(x_tr, y_tr)
+    h1 = np.maximum(x_te @ ws[0] + bs[0], 0)
+    h2 = np.maximum(h1 @ ws[1] + bs[1], 0)
+    base = float((np.argmax(h2 @ ws[2] + bs[2], 1) == y_te).mean())
+    rows = [("fig15_baseline_acc", t(), f"{base:.3f}")]
+    for k in ([2, 3, 4, 6] if full else [2, 4]):
+        accs = {}
+        for scheme in ["deterministic", "stochastic", "dither"]:
+            m, v = quantized_mlp_acc(x_te, y_te, ws, bs, k, scheme, trials)
+            accs[scheme] = (m, v)
+        rows.append((f"fig15_acc_k{k}", t(),
+                     " ".join(f"{s[:5]}={m:.3f}" for s, (m, _) in accs.items())))
+        rows.append((f"fig16_var_k{k}", t(),
+                     f"dith={accs['dither'][1]:.2e} stoch={accs['stochastic'][1]:.2e}"))
+    return rows

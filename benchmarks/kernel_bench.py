@@ -1,0 +1,38 @@
+"""Pallas kernel benchmark: block-shape sweep for the fused dither matmul
+(interpret mode on CPU — relative numbers guide BlockSpec choices; absolute
+TPU perf comes from the §Roofline dry-run terms)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timer
+from repro.kernels import ops as kops, ref
+
+
+def run(full: bool = False):
+    t = timer()
+    m = k = n = 256 if full else 128
+    a = jax.random.uniform(jax.random.PRNGKey(0), (m, k))
+    b = jax.random.uniform(jax.random.PRNGKey(1), (k, n))
+    rows = []
+    ref_out = ref.dither_matmul_ref(a, b, bits=8, scheme="dither")
+    for blk in [(64, 64, 64), (128, 128, 128), (128, 128, 64)]:
+        t0 = time.time()
+        out = kops.dither_matmul(a, b, bits=8, scheme="dither", block=blk)
+        out.block_until_ready()
+        dt = (time.time() - t0) * 1e6
+        err = float(jnp.max(jnp.abs(out - ref_out)))
+        rows.append((f"kernel_dither_matmul_blk{blk}", dt, f"max_err={err:.1e}"))
+    # elementwise quantize kernel
+    x = jax.random.uniform(jax.random.PRNGKey(2), (512, 512), minval=-1, maxval=1)
+    for blk in [(128, 128), (256, 256)]:
+        t0 = time.time()
+        codes = kops.quantize_2d(x, bits=8, lo=-1, hi=1, scheme="dither", block=blk)
+        codes.block_until_ready()
+        dt = (time.time() - t0) * 1e6
+        rows.append((f"kernel_quantize_blk{blk}", dt, f"mean_code={float(codes.mean()):.1f}"))
+    return rows

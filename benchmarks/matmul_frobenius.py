@@ -1,0 +1,48 @@
+"""Fig 8: Frobenius error ‖AB − Ĉ‖_F of k-bit rounded matmul, entries in
+[0, 0.5) (narrow range vs quantizer), per rounding scheme and k.
+
+Also exercises the Pallas fused kernel ('separate' variant) so the bench
+covers both the reference path and the production kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timer
+from repro.core.matmul import matmul_error, quantized_matmul
+from repro.kernels import ops as kops
+
+
+def run(full: bool = False):
+    t = timer()
+    size = 100
+    n_mats = 20 if full else 5
+    ks = [1, 2, 3, 4, 6, 8]
+    rows = []
+    errs = {s: {k: [] for k in ks} for s in
+            ["deterministic", "stochastic", "dither", "dither_pallas"]}
+    for m in range(n_mats):
+        rs = np.random.RandomState(m)
+        a = jnp.asarray(rs.rand(size, size).astype(np.float32) * 0.5)
+        b = jnp.asarray(rs.rand(size, size).astype(np.float32) * 0.5)
+        for k in ks:
+            for scheme in ["deterministic", "stochastic", "dither"]:
+                c = quantized_matmul(a, b, bits=k, scheme=scheme,
+                                     variant="per_partial", seed=m)
+                errs[scheme][k].append(float(matmul_error(a, b, c)))
+            ck = kops.dither_matmul(a, b, bits=k, scheme="dither", counter=m,
+                                    block=(64, 64, 64))
+            errs["dither_pallas"][k].append(float(matmul_error(a, b, ck)))
+    for k in ks:
+        vals = {s: float(np.mean(errs[s][k])) for s in errs}
+        rows.append((f"fig8_ef_k{k}", t(),
+                     " ".join(f"{s[:6]}={v:.3f}" for s, v in vals.items())))
+    # the paper's qualitative claims
+    small_k_win = np.mean(errs["dither"][1]) < np.mean(errs["deterministic"][1])
+    dither_le_stoch = np.mean(errs["dither"][2]) <= np.mean(errs["stochastic"][2]) * 1.1
+    rows.append(("fig8_dither_beats_det_at_k1", t(), str(bool(small_k_win))))
+    rows.append(("fig8_dither_le_stoch_at_k2", t(), str(bool(dither_le_stoch))))
+    return rows

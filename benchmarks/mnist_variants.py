@@ -1,0 +1,20 @@
+"""Figs 11–14: the §VIII rounding-placement variants on the MNIST-like task.
+
+Fig 11/12: 'round_a_once' (input quantised once, pq(r+1) roundings).
+Fig 13/14: 'separate' (both matrices quantised once, (p+r)q roundings).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import timer
+from benchmarks.mnist_rounding import run as run_base
+
+
+def run(full: bool = False):
+    t = timer()
+    rows = []
+    for fig, variant in (("fig11_12", "round_a_once"), ("fig13_14", "separate")):
+        for name, us, derived in run_base(full, variant=variant):
+            rows.append((name.replace("fig9", f"{fig}_acc")
+                             .replace("fig10", f"{fig}_var"), t(), derived))
+    return rows

@@ -1,0 +1,64 @@
+"""Figs 1–2: EMSE L and |bias| of representing x, per scheme and N.
+
+Validates: stochastic L ≈ 1/(6N); deterministic L ≈ 1/(12N²);
+dither L ≤ 2/N² with ~zero bias; bias SEM slope dither ≈ -1 vs
+stochastic ≈ -1/2 (paper's Fig 2 discussion).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import N_VALUES, loglog_slope, sample_xy, timer
+from repro.core import representations as rep
+from repro.core import theory
+
+
+def _estimate(scheme: str, x, n: int, trials: int, key):
+    outs = []
+    for t in range(trials):
+        k = jax.random.fold_in(key, t)
+        if scheme == "stochastic":
+            p = rep.stochastic_encode(k, x, n)
+        elif scheme == "deterministic":
+            p = rep.deterministic_encode(x, n)
+        else:
+            p = rep.dither_encode(k, x, n)
+        outs.append(rep.decode(p))
+        if scheme == "deterministic":
+            break  # deterministic: single trial (paper footnote 2)
+    e = jnp.stack(outs)
+    emse = float(jnp.mean((e - x[None]) ** 2))
+    bias = float(jnp.abs(jnp.mean(e - x[None])))
+    return emse, bias
+
+
+def run(full: bool = False):
+    t = timer()
+    n_pairs = 1000 if full else 200
+    trials = 200 if full else 40
+    x, _ = sample_xy(n_pairs)
+    key = jax.random.PRNGKey(42)
+    rows = []
+    curves = {}
+    for scheme in ["stochastic", "deterministic", "dither"]:
+        es, bs = [], []
+        for n in N_VALUES:
+            emse, bias = _estimate(scheme, x, n, trials, jax.random.fold_in(key, n))
+            es.append(emse)
+            bs.append(bias)
+        curves[scheme] = (es, bs)
+        rows.append((f"fig1_emse_slope[{scheme}]", t(), f"{loglog_slope(N_VALUES, es):.2f}"))
+    # paper checks
+    n0 = N_VALUES[-1]
+    checks = {
+        "stoch_vs_1/(6N)": curves["stochastic"][0][-1] * 6 * n0,
+        "det_vs_1/(12N^2)": curves["deterministic"][0][-1] * 12 * n0 * n0,
+        "dither_under_2/N^2": curves["dither"][0][-1] * n0 * n0 / 2.0,
+    }
+    for k, v in checks.items():
+        rows.append((f"fig1_{k}", t(), f"{v:.2f}"))
+    rows.append(("fig2_bias_dither_lt_stoch",
+                 t(), f"{curves['dither'][1][-1] < curves['stochastic'][1][-1]}"))
+    return rows

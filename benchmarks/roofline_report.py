@@ -1,0 +1,68 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md §Roofline markdown table."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt(x, pct=False):
+    if pct:
+        return f"{100*x:.0f}%"
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def step_time_bound(rt):
+    """Optimistic step time = max of the three terms (perfect overlap)."""
+    return max(rt["compute"], rt["memory"], rt["collective"])
+
+
+def roofline_fraction(x):
+    """compute_term / max(all terms): 1.0 = compute-bound at peak."""
+    rt = x["roofline_seconds"]
+    t = step_time_bound(rt)
+    return rt["compute"] / t if t > 0 else 0.0
+
+
+def render(path, mesh_filter="single"):
+    rows = json.load(open(path))
+    out = []
+    out.append("| arch | shape | mesh | compute | memory | collective | dominant "
+               "| roofline frac | useful FLOPs (6ND/HLO) | one-line fix |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|"[:-4])
+    fixes = {
+        "compute": "reduce remat recompute / quantized (int8) matmul path",
+        "memory": "int8 KV cache + wider decode batch per chip",
+        "collective": "overlap DP reduce w/ backward; dither-compress grads; "
+                      "localise MoE dispatch",
+    }
+    for x in rows:
+        if x.get("mesh") != mesh_filter and mesh_filter != "all":
+            continue
+        if x["status"] == "skip":
+            out.append(f"| {x['arch']} | {x['shape']} | {x['mesh']} | — | — | — | "
+                       f"skip | — | — | {x['reason'][:60]}… |")
+            continue
+        if x["status"] != "ok":
+            continue
+        rt = x["roofline_seconds"]
+        out.append(
+            f"| {x['arch']} | {x['shape']} | {x['mesh']} "
+            f"| {fmt(rt['compute'])} | {fmt(rt['memory'])} "
+            f"| {fmt(rt['collective'])} | {x['dominant']} "
+            f"| {fmt(roofline_fraction(x), pct=True)} "
+            f"| {x['useful_flops_ratio']:.2f} | {fixes[x['dominant']][:58]} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun_baseline.json"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "all"
+    print(render(path, mesh))

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` restores paper-scale
+trial counts (slower); default is CI-sized.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "repr_emse",        # Figs 1-2
+    "mult_emse",        # Figs 3-4
+    "avg_emse",         # Figs 5-6
+    "table1_asymptotics",  # Table I
+    "matmul_frobenius",    # Fig 8
+    "mnist_rounding",      # Figs 9-10
+    "mnist_variants",      # Figs 11-14
+    "fashion_mlp",         # Figs 15-16
+    "kernel_bench",        # Pallas kernels
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    mods = [m for m in MODULES if args.only is None or m in args.only.split(",")]
+    print("name,us_per_call,derived")
+    failed = []
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row_name, us, derived in mod.run(full=args.full):
+                print(f"{row_name},{us:.0f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Table I: asymptotic orders of bias/variance/EMSE for all 3 schemes × 3 ops.
+
+Fits log-log slopes of sample estimates against N and compares with the
+paper's claimed exponents (None = exactly-zero bias → checked as 'small').
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import N_VALUES, loglog_slope, sample_xy, timer
+from repro.core import ops, representations as rep, theory
+
+
+def _samples(scheme, op, x, y, n, trials, key):
+    outs = []
+    for tr in range(1 if scheme == "deterministic" else trials):
+        k = jax.random.fold_in(key, tr)
+        if op == "repr":
+            if scheme == "stochastic":
+                outs.append(rep.decode(rep.stochastic_encode(k, x, n)))
+            elif scheme == "deterministic":
+                outs.append(rep.decode(rep.deterministic_encode(x, n)))
+            else:
+                outs.append(rep.decode(rep.dither_encode(k, x, n)))
+        elif op == "mult":
+            outs.append(ops.multiply_estimate(k, x, y, n, scheme))
+        else:
+            outs.append(ops.scaled_add_pulses(k, x, y, n, scheme))
+    return jnp.stack(outs)
+
+
+def run(full: bool = False):
+    t = timer()
+    n_pairs = 600 if full else 150
+    trials = 60 if full else 20
+    x, y = sample_xy(n_pairs, seed=5)
+    target = {"repr": x, "mult": x * y, "avg": (x + y) / 2}
+    rows = []
+    for (scheme, op), want in theory.TABLE_I.items():
+        vs = []
+        for n in N_VALUES:
+            e = _samples(scheme, op, x, y, n, trials,
+                         jax.random.fold_in(jax.random.PRNGKey(13), n))
+            var = float(jnp.mean(jnp.var(e, axis=0)))
+            vs.append(max(var, 1e-18))
+        slope = loglog_slope(N_VALUES, vs)
+        claim = want["var"]
+        if claim is None:
+            verdict = "var~0" if vs[-1] < 1e-6 else f"var={vs[-1]:.1e}"
+        else:
+            verdict = f"slope={slope:.2f} (claim -{claim})"
+        rows.append((f"table1_var[{scheme},{op}]", t(), verdict))
+    return rows

@@ -1,0 +1,16 @@
+"""Mini reproduction of the paper's figures on your laptop:
+
+  * Figs 1–2 (representation EMSE/bias vs N),
+  * Fig 8 (k-bit matmul Frobenius error),
+  * the MNIST-style accuracy ordering (Fig 9).
+
+  PYTHONPATH=src python examples/rounding_study.py
+"""
+
+from benchmarks import matmul_frobenius, mnist_rounding, repr_emse
+
+for mod, name in [(repr_emse, "Figs 1-2"), (matmul_frobenius, "Fig 8"),
+                  (mnist_rounding, "Figs 9-10")]:
+    print(f"== {name} ==")
+    for row, _, derived in mod.run(full=False):
+        print(f"  {row:42s} {derived}")

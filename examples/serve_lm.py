@@ -1,0 +1,29 @@
+"""Serving demo: continuous batching over the ring-buffer KV cache engine.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.numerics.policy import QuantPolicy
+from repro.serve.engine import Engine, Request
+
+cfg = get_config("smollm_135m").reduced()
+params = registry.init_model(jax.random.PRNGKey(0), cfg)
+
+engine = Engine(params, cfg, batch=4, max_len=128,
+                policy=QuantPolicy(scheme="dither", bits=8))
+for rid in range(8):
+    engine.submit(Request(rid=rid, prompt=[1 + rid, 2, 3], max_new=12))
+
+t0 = time.time()
+done = engine.run(ticks=400)
+dt = time.time() - t0
+for r in sorted(done, key=lambda r: r.rid):
+    print(f"request {r.rid}: {r.out}")
+print(f"{len(done)} requests, {sum(len(r.out) for r in done)} tokens "
+      f"in {dt:.1f}s")

@@ -1,0 +1,3 @@
+"""repro: dither computing (Wu, ARITH 2021) as a production JAX numerics substrate."""
+
+__version__ = "0.1.0"

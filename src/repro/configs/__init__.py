@@ -1,0 +1,33 @@
+"""Assigned-architecture registry: one module per arch, exact public configs."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "qwen2_1_5b",
+    "smollm_135m",
+    "granite_3_8b",
+    "minicpm_2b",
+    "recurrentgemma_9b",
+    "internvl2_1b",
+    "granite_moe_1b_a400m",
+    "qwen2_moe_a2_7b",
+    "mamba2_370m",
+    "whisper_small",
+]
+
+# CLI ids (dashes) → module names
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict:
+    return {a: get_config(a) for a in ARCH_IDS}

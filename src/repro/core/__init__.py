@@ -1,0 +1,14 @@
+"""Core dither-computing library: the paper's contribution, faithfully.
+
+Modules:
+  representations - §II pulse encodings (stochastic / deterministic / dither)
+  ops             - §III multiply (AND), §IV scaled addition (mux)
+  rounding        - §II-C/§VII rounding schemes incl. counter-based dither
+  quantizers      - §VII k-bit fixed-point quantiser
+  matmul          - §VII-§VIII quantised matmul, 3 rounding-placement variants
+  theory          - closed-form bias/variance/EMSE oracles (Table I)
+"""
+
+from repro.core import matmul, ops, quantizers, representations, rounding, theory
+
+__all__ = ["matmul", "ops", "quantizers", "representations", "rounding", "theory"]

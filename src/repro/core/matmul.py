@@ -1,0 +1,151 @@
+"""k-bit quantised matrix multiplication with rounding-scheme variants
+(paper §VII Fig. 7 and §VIII).
+
+Three placements of the rounding operation for C = A·B, A: p×q, B: q×r:
+
+* ``per_partial``  — every partial product A_ij·B_jk rounds both operands
+  (2·pqr roundings, Fig. 7 / Fig. 9).  For dither rounding, N_A = r and
+  N_B = p: element A_ij is used r times (once per output column k, the
+  counter), B_jk p times (once per output row i) — exactly the paper's
+  prescription "each element of A is used r times … set N = N_A = r".
+* ``round_a_once`` — A rounded once per element, B per partial product
+  (pq(r+1) roundings, Figs. 11–12: "the input is only quantised once").
+* ``separate``     — both matrices rounded once, then a plain matmul
+  ((p+r)q roundings, Figs. 13–14).  This is the variant that scales to deep
+  learning and is what the LM framework / Pallas kernel use.
+
+All math is done on the k-bit integer grid (codes in {0..2^k−1} after affine
+rescale of [lo,hi]) and mapped back, mirroring the paper's "k-bit fixed point
+multiplier" setup.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import rounding
+from repro.core.quantizers import QuantSpec, dequantize, quantize
+
+Variant = Literal["per_partial", "round_a_once", "separate"]
+Scheme = Literal["deterministic", "stochastic", "dither"]
+
+__all__ = ["quantized_matmul", "matmul_error"]
+
+
+def _codes_expanded(
+    x: jax.Array,
+    spec: QuantSpec,
+    scheme: str,
+    counter_axis_len: int,
+    counter_on: str,  # 'new_last' (A: counter = output col) | 'new_first' (B: counter = output row)
+    n_pulses: int,
+    seed: int,
+) -> jax.Array:
+    """Round every *use* of x: expand with a new counter axis of given length.
+
+    Returns codes with shape x.shape + (L,) for 'new_last' or (L,) + x.shape
+    for 'new_first', where use index along the new axis is the dither/hash
+    counter.  Deterministic rounding collapses to a broadcast (no use-dep).
+    """
+    scaled = (jnp.asarray(x, jnp.float32) - spec.lo) * spec.scale
+    fl = jnp.floor(scaled)
+    f = scaled - fl
+    L = counter_axis_len
+
+    if counter_on == "new_last":
+        fl_e, f_e = fl[..., None], f[..., None]
+        counter = jnp.arange(L, dtype=jnp.uint32)  # broadcasts against trailing axis
+        idx = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)[..., None]
+    else:
+        fl_e, f_e = fl[None, ...], f[None, ...]
+        counter = jnp.arange(L, dtype=jnp.uint32).reshape((L,) + (1,) * x.ndim)
+        idx = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)[None, ...]
+
+    if scheme == "deterministic":
+        codes = jnp.broadcast_to(
+            rounding.deterministic_round(scaled)[..., None]
+            if counter_on == "new_last"
+            else rounding.deterministic_round(scaled)[None, ...],
+            fl_e.shape[:-1] + (L,) if counter_on == "new_last" else (L,) + x.shape,
+        )
+    elif scheme == "stochastic":
+        u = rounding.hash_uniform(seed, idx, counter)
+        codes = fl_e + (u < f_e).astype(jnp.float32)
+    elif scheme == "dither":
+        slot = rounding.lcg_slot(counter, idx, n_pulses, seed=seed)
+        u = rounding.hash_uniform(rounding._u32(seed) ^ np.uint32(0xD1CE), idx, counter)
+        codes = fl_e + rounding.dither_bit(f_e, slot, u, n_pulses)
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return jnp.clip(codes, 0, spec.levels)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "scheme", "variant", "lo", "hi")
+)
+def quantized_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bits: int,
+    scheme: Scheme = "dither",
+    variant: Variant = "separate",
+    seed: int = 0,
+    lo: float = 0.0,
+    hi: float = 1.0,
+) -> jax.Array:
+    """Compute A·B through a k-bit fixed-point multiplier (paper §VII–§VIII).
+
+    Returns Ĉ in the real domain (rescaled back from the code grid).
+    Entries of A and B are assumed in [lo, hi].
+    """
+    p, q = a.shape
+    q2, r = b.shape
+    assert q == q2, (a.shape, b.shape)
+    spec = QuantSpec(bits, lo, hi)
+
+    if variant == "separate":
+        ca = quantize(a, spec, scheme, counter=0, seed=seed, n_pulses=max(r, 2),
+                      out_dtype=jnp.float32)
+        cb = quantize(b, spec, scheme, counter=0, seed=seed + 1, n_pulses=max(p, 2),
+                      out_dtype=jnp.float32)
+        cc = ca @ cb
+    elif variant == "round_a_once":
+        ca = quantize(a, spec, scheme, counter=0, seed=seed, n_pulses=max(r, 2),
+                      out_dtype=jnp.float32)
+        # B_jk rounded per partial product: counter = output row i, N_B = p.
+        cb = _codes_expanded(b, spec, scheme, p, "new_first", max(p, 2), seed + 1)
+        cc = jnp.einsum("ij,ijk->ik", ca, cb)
+    elif variant == "per_partial":
+        # A_ij rounded per use: counter = output column k, N_A = r.
+        ca = _codes_expanded(a, spec, scheme, r, "new_last", max(r, 2), seed)
+        cb = _codes_expanded(b, spec, scheme, p, "new_first", max(p, 2), seed + 1)
+        cc = jnp.einsum("ijk,ijk->ik", ca, cb)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    # Map the code-grid product back to the real domain:
+    # x ≈ lo + code/s  ⇒  C[i,k] = cc/s² + (lo/s)·(Σ_j ca + Σ_j cb) + q·lo².
+    c = cc / (spec.scale * spec.scale)
+    if lo != 0.0:
+        if variant == "separate":
+            sum_a = ca.sum(axis=1)[:, None]  # (p,1): Σ_j ca[i,j]
+            sum_b = cb.sum(axis=0)[None, :]  # (1,r): Σ_j cb[j,k]
+        elif variant == "round_a_once":
+            sum_a = ca.sum(axis=1)[:, None]  # (p,1)
+            sum_b = cb.sum(axis=1)           # (p,r): Σ_j cb[i,j,k]
+        else:  # per_partial
+            sum_a = ca.sum(axis=1)           # (p,r): Σ_j ca[i,j,k]
+            sum_b = cb.sum(axis=1)           # (p,r)
+        c = c + lo * (sum_a + sum_b) / spec.scale + q * lo * lo
+    return c
+
+
+def matmul_error(a: jax.Array, b: jax.Array, c_hat: jax.Array) -> jax.Array:
+    """Frobenius error e_f = ‖AB − Ĉ‖_F (the paper's §VII metric)."""
+    return jnp.linalg.norm(a @ b - c_hat)

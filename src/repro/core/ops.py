@@ -1,0 +1,118 @@
+"""Arithmetic on pulse sequences (paper §III multiplication, §IV scaled addition).
+
+Multiplication of two pulse sequences is a bitwise AND (Z_i = X_i · Y_i);
+scaled addition (averaging) multiplexes the two sequences with a control
+sequence W_i: U_i = W_i X_i + (1−W_i) Y_i.  The three schemes differ only in
+how the operand sequences / control sequence are generated:
+
+* stochastic:   both operands iid Bernoulli; W_i iid Bernoulli(1/2).
+* deterministic: x unary (Format 1), y spread (Format 2); W_i alternating.
+* dither:       x dither/unary, y dither/spread with random phase T (§III-C);
+                W is one of the two alternating phases chosen with prob 1/2
+                (§IV-C) — W_i correlated across i, E(W_i)=1/2.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import representations as rep
+
+__all__ = [
+    "multiply_pulses",
+    "scaled_add_pulses",
+    "encode_pair_for_multiply",
+    "encode_pair_for_add",
+    "control_sequence",
+]
+
+
+def multiply_pulses(x_pulses: jax.Array, y_pulses: jax.Array) -> jax.Array:
+    """Z_i = X_i · Y_i (bitwise AND for {0,1} pulses), §III."""
+    return x_pulses * y_pulses
+
+
+def control_sequence(key: jax.Array, batch_shape: tuple, n_pulses: int, scheme: str) -> jax.Array:
+    """The §IV control sequence W for scaled addition, per scheme."""
+    if scheme == "stochastic":
+        return jax.random.bernoulli(key, 0.5, batch_shape + (n_pulses,)).astype(jnp.float32)
+    s = (jnp.arange(n_pulses) % 2).astype(jnp.float32)  # s_i = 1 for i odd (0-based even)
+    if scheme == "deterministic":
+        return jnp.broadcast_to(s, batch_shape + (n_pulses,))
+    if scheme == "dither":
+        # With prob 1/2 use {s_i}, else {1-s_i}: W_i correlated, E(W_i)=1/2 (§IV-C).
+        flip = jax.random.bernoulli(key, 0.5, batch_shape)[..., None].astype(jnp.float32)
+        return flip * (1.0 - s) + (1.0 - flip) * s
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def encode_pair_for_multiply(
+    key: jax.Array, x: jax.Array, y: jax.Array, n_pulses: int, scheme: str
+):
+    """Encode operands with the §III/§VI operand-asymmetric formats."""
+    kx, ky, kt = jax.random.split(key, 3)
+    if scheme == "stochastic":
+        return (
+            rep.stochastic_encode(kx, x, n_pulses),
+            rep.stochastic_encode(ky, y, n_pulses),
+        )
+    if scheme == "deterministic":
+        return (
+            rep.deterministic_encode(x, n_pulses, fmt="unary"),
+            rep.deterministic_encode(y, n_pulses, fmt="spread"),
+        )
+    if scheme == "dither":
+        phase = jax.random.uniform(kt, jnp.shape(y))  # the §III-C random offset T
+        return (
+            rep.dither_encode(kx, x, n_pulses, fmt="unary"),
+            rep.dither_encode(ky, y, n_pulses, fmt="spread", phase=phase),
+        )
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def encode_pair_for_add(key: jax.Array, x: jax.Array, y: jax.Array, n_pulses: int, scheme: str):
+    """Encode operands for §IV scaled addition (both Format 1)."""
+    kx, ky = jax.random.split(key)
+    if scheme == "stochastic":
+        return (
+            rep.stochastic_encode(kx, x, n_pulses),
+            rep.stochastic_encode(ky, y, n_pulses),
+        )
+    if scheme == "deterministic":
+        return (
+            rep.deterministic_encode(x, n_pulses, fmt="unary"),
+            rep.deterministic_encode(y, n_pulses, fmt="unary"),
+        )
+    if scheme == "dither":
+        return (
+            rep.dither_encode(kx, x, n_pulses, fmt="unary"),
+            rep.dither_encode(ky, y, n_pulses, fmt="unary"),
+        )
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("n_pulses", "scheme"))
+def scaled_add_pulses(
+    key: jax.Array, x: jax.Array, y: jax.Array, n_pulses: int, scheme: str
+) -> jax.Array:
+    """Full §IV pipeline: encode, multiplex, decode → estimate of (x+y)/2."""
+    kenc, kw = jax.random.split(key)
+    xp, yp = encode_pair_for_add(kenc, x, y, n_pulses, scheme)
+    w = control_sequence(kw, jnp.shape(jnp.asarray(x)), n_pulses, scheme)
+    u = w * xp + (1.0 - w) * yp
+    return rep.decode(u)
+
+
+@functools.partial(jax.jit, static_argnames=("n_pulses", "scheme"))
+def multiply_estimate(
+    key: jax.Array, x: jax.Array, y: jax.Array, n_pulses: int, scheme: str
+) -> jax.Array:
+    """Full §III pipeline: encode, AND, decode → estimate of x·y."""
+    xp, yp = encode_pair_for_multiply(key, x, y, n_pulses, scheme)
+    return rep.decode(multiply_pulses(xp, yp))
+
+
+__all__.append("multiply_estimate")

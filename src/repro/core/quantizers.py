@@ -1,0 +1,83 @@
+"""k-bit fixed-point quantisation (paper §VII).
+
+The paper's quantiser: q(x) = round(x) clipped to [0, 2^k − 1]; real inputs in
+[lo, hi] are affinely rescaled to the code range first, rounded with one of
+the three schemes, and (for analysis / dequantised arithmetic) mapped back.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rounding
+
+__all__ = ["QuantSpec", "quantize", "dequantize", "quantize_dequantize"]
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """A k-bit affine quantiser over the real interval [lo, hi]."""
+
+    bits: int
+    lo: float = 0.0
+    hi: float = 1.0
+
+    @property
+    def levels(self) -> int:
+        return (1 << self.bits) - 1  # 2^k − 1 (top code)
+
+    @property
+    def scale(self) -> float:
+        return self.levels / (self.hi - self.lo)
+
+
+def _round(scaled: jax.Array, scheme: str, *, counter, seed, n_pulses: int) -> jax.Array:
+    if scheme == "deterministic":
+        return rounding.deterministic_round(scaled)
+    if scheme == "stochastic":
+        return rounding.stochastic_round(scaled, seed, counter)
+    if scheme == "dither":
+        return rounding.dither_round(scaled, counter, seed, n_pulses)
+    raise ValueError(f"unknown rounding scheme {scheme!r}")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "scheme", "n_pulses", "out_dtype")
+)
+def quantize(
+    x: jax.Array,
+    spec: QuantSpec,
+    scheme: str = "deterministic",
+    *,
+    counter=0,
+    seed: int = 0,
+    n_pulses: int = 16,
+    out_dtype=jnp.int32,
+) -> jax.Array:
+    """Real → integer codes in {0..2^k−1}, with under/overflow clipping."""
+    scaled = (jnp.asarray(x, jnp.float32) - spec.lo) * spec.scale
+    codes = _round(scaled, scheme, counter=counter, seed=seed, n_pulses=n_pulses)
+    return jnp.clip(codes, 0, spec.levels).astype(out_dtype)
+
+
+def dequantize(codes: jax.Array, spec: QuantSpec) -> jax.Array:
+    return codes.astype(jnp.float32) / spec.scale + spec.lo
+
+
+def quantize_dequantize(
+    x: jax.Array,
+    spec: QuantSpec,
+    scheme: str = "deterministic",
+    *,
+    counter=0,
+    seed: int = 0,
+    n_pulses: int = 16,
+) -> jax.Array:
+    """The fake-quant round trip used for EMSE measurement and QAT."""
+    return dequantize(
+        quantize(x, spec, scheme, counter=counter, seed=seed, n_pulses=n_pulses), spec
+    )

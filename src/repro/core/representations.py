@@ -1,0 +1,175 @@
+"""Pulse-sequence representations of reals in [0, 1] (paper §II).
+
+Three schemes, each mapping x ∈ [0,1] to an N-bit pulse sequence whose mean
+estimates x:
+
+* ``stochastic_encode``    — §II-A: iid Bernoulli(x) pulses.  Unbiased,
+  Var = x(1-x)/N = Ω(1/N).
+* ``deterministic_encode`` — §II-B: unary counting (Format 1) or evenly-spread
+  (Format 2).  Var = 0, |bias| ≤ 1/(2N).
+* ``dither_encode``        — §II-D: n = ⌊Nx⌋ deterministic 1-pulses under a
+  permutation σ plus Bernoulli(δ) residual pulses.  Unbiased,
+  Var ≤ 2/N² = Θ(1/N²).
+
+All functions are vectorised over arbitrary leading batch dims and jittable
+with static ``n_pulses``.  The pulse axis is appended last.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Format = Literal["unary", "spread"]
+
+__all__ = [
+    "stochastic_encode",
+    "deterministic_encode",
+    "dither_encode",
+    "decode",
+    "lcg_permutation",
+    "spread_ones",
+]
+
+
+def decode(pulses: jax.Array) -> jax.Array:
+    """Estimate x from its pulse sequence: X_s = (1/N) Σ X_i (paper §II)."""
+    return jnp.mean(pulses.astype(jnp.float32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# §II-A stochastic computing
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_pulses",))
+def stochastic_encode(key: jax.Array, x: jax.Array, n_pulses: int) -> jax.Array:
+    """iid Bernoulli(x) pulses: P(X_i = 1) = x.  Shape: x.shape + (N,)."""
+    x = jnp.asarray(x, jnp.float32)
+    u = jax.random.uniform(key, x.shape + (n_pulses,))
+    return (u < x[..., None]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# §II-B deterministic variant (Jenson & Riedel)
+# ---------------------------------------------------------------------------
+
+
+def spread_ones(n_ones: jax.Array, n_pulses: int, phase: jax.Array | None = None) -> jax.Array:
+    """Evenly-spread placement of ``n_ones`` 1-bits among N slots (Format 2).
+
+    Slot i carries a 1 iff ⌊(i+1)·m/N⌋ ≠ ⌊i·m/N⌋ (a Bresenham spread placing
+    exactly m ones as uniformly as possible) — the paper's §III-B rule
+    "P(Y_i)=1 if ⌊iy⌋ ≠ ⌊(i+1)y⌋" with y = m/N.  ``phase`` (∈[0,1), optional)
+    rotates the pattern — the paper's random offset T.
+    """
+    i = jnp.arange(n_pulses, dtype=jnp.float32)
+    if phase is not None:
+        i = jnp.mod(i + phase[..., None] * n_pulses, n_pulses)
+    m = jnp.asarray(n_ones, jnp.float32)[..., None]
+    return (jnp.floor((i + 1.0) * m / n_pulses) != jnp.floor(i * m / n_pulses)).astype(
+        jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_pulses", "fmt"))
+def deterministic_encode(x: jax.Array, n_pulses: int, fmt: Format = "unary") -> jax.Array:
+    """Deterministic variant of SC (§II-B, §III-B).
+
+    Format 1 ("unary"):  first R = round(Nx) slots are 1.
+    Format 2 ("spread"): R ones spread as evenly as possible (for the right
+    operand of a multiply).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    r = jnp.round(n_pulses * x)
+    if fmt == "unary":
+        i = jnp.arange(n_pulses, dtype=jnp.float32)
+        return (i < r[..., None]).astype(jnp.float32)
+    return spread_ones(r, n_pulses)
+
+
+# ---------------------------------------------------------------------------
+# §II-D dither computing
+# ---------------------------------------------------------------------------
+
+
+def _coprime_multiplier(n: int) -> int:
+    """Smallest multiplier ≥ ~0.618·n coprime to n (good spectral spread)."""
+    a = max(1, int(round(0.6180339887 * n))) | 1  # odd start
+    while _gcd(a, n) != 1:
+        a += 2
+    return a
+
+
+def _gcd(a: int, b: int) -> int:
+    while b:
+        a, b = b, a % b
+    return a
+
+
+def lcg_permutation(n_pulses: int, offset: int = 0) -> jax.Array:
+    """A fixed permutation σ of {0..N-1}: σ(i) = (a·i + offset) mod N, gcd(a,N)=1.
+
+    Used as the paper's σ; linear-congruential so both σ and σ⁻¹ are O(1)
+    integer math (the production kernels never materialise this array).
+    """
+    a = _coprime_multiplier(n_pulses)
+    i = jnp.arange(n_pulses, dtype=jnp.int32)
+    return (a * i + offset) % n_pulses
+
+
+@functools.partial(jax.jit, static_argnames=("n_pulses", "fmt"))
+def dither_encode(
+    key: jax.Array,
+    x: jax.Array,
+    n_pulses: int,
+    fmt: Format = "unary",
+    phase: jax.Array | None = None,
+) -> jax.Array:
+    """Dither-computing encoding (paper §II-D), vectorised.
+
+    For x ∈ [0, 1/2]:  n = ⌊Nx⌋, r = x − n/N, δ = Nr/(N−n):
+        P(X_{σ(i)}=1) = 1 for i ≤ n,   δ for i > n.
+    For x ∈ (1/2, 1]:  n = ⌈Nx⌉, r = n/N − x, δ = rN/n:
+        P(X_{σ(i)}=1) = 1−δ for i ≤ n, 0 for i > n.
+
+    Both branches are unbiased with Var(X_s) ≤ 2/N².
+
+    ``fmt='unary'`` uses the identity permutation (Format 1, left operand);
+    ``fmt='spread'`` spreads the deterministic slots evenly (Format 2, right
+    operand of a multiply, §III-C) with optional random phase T.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    N = n_pulses
+
+    lo = x <= 0.5
+    # -- low branch ---------------------------------------------------------
+    n_lo = jnp.floor(N * x)
+    r_lo = x - n_lo / N
+    delta_lo = jnp.where(N - n_lo > 0, N * r_lo / jnp.maximum(N - n_lo, 1), 0.0)
+    # -- high branch --------------------------------------------------------
+    n_hi = jnp.ceil(N * x)
+    r_hi = n_hi / N - x
+    delta_hi = jnp.where(n_hi > 0, r_hi * N / jnp.maximum(n_hi, 1), 0.0)
+
+    n = jnp.where(lo, n_lo, n_hi)[..., None]
+    # P(pulse at deterministic-slot positions), P(pulse at residual positions)
+    p_head = jnp.where(lo, 1.0, 1.0 - delta_hi)[..., None]
+    p_tail = jnp.where(lo, delta_lo, 0.0)[..., None]
+
+    # Slot occupancy: position j is a "head" slot iff σ⁻¹(j) < n.  With the
+    # spread format we place head slots evenly (Bresenham) instead.
+    j = jnp.arange(N, dtype=jnp.float32)
+    if fmt == "unary":
+        is_head = j < n
+    else:
+        if phase is None:
+            phase = jnp.zeros(x.shape, jnp.float32)
+        is_head = spread_ones(jnp.squeeze(n, -1), N, phase=phase) > 0.5
+
+    p = jnp.where(is_head, p_head, p_tail)
+    u = jax.random.uniform(key, x.shape + (N,))
+    return (u < p).astype(jnp.float32)

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the compute hot-spots (quantise, fused matmul).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+ref.py (pure-jnp oracle, bit-exact).
+"""

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Bit-exact references: the kernels and these oracles share the same integer
+hash / permutation / dither-bit math (repro.core.rounding), so tests assert
+exact equality of integer codes and tight allclose on float outputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rounding
+
+__all__ = [
+    "quantize_codes_ref",
+    "dither_round_ref",
+    "stochastic_round_ref",
+    "dither_matmul_ref",
+]
+
+
+def _flat_index(shape) -> jax.Array:
+    n_rows, n_cols = shape
+    r = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    return r * jnp.uint32(n_cols) + c
+
+
+def quantize_codes_ref(
+    x: jax.Array,
+    *,
+    scale: float,
+    zero: float,
+    bits: int,
+    scheme: str,
+    counter: int,
+    seed: int,
+    n_pulses: int,
+) -> jax.Array:
+    """Quantise a 2-D tensor to k-bit integer codes with the given rounding.
+
+    codes = clip(round_scheme((x - zero) * scale), 0, 2^bits - 1), where the
+    element index used by the hash PRNG is the *global* flattened (row-major)
+    index — the same value the tiled kernel reconstructs from its grid
+    coordinates.
+    """
+    assert x.ndim == 2
+    levels = (1 << bits) - 1
+    scaled = (x.astype(jnp.float32) - zero) * scale
+    idx = _flat_index(x.shape)
+    if scheme == "deterministic":
+        codes = rounding.deterministic_round(scaled)
+    elif scheme == "stochastic":
+        u = rounding.hash_uniform(seed, idx, counter)
+        fl = jnp.floor(scaled)
+        codes = fl + (u < scaled - fl).astype(jnp.float32)
+    elif scheme == "dither":
+        fl = jnp.floor(scaled)
+        slot = rounding.lcg_slot(counter, idx, n_pulses, seed=seed)
+        u = rounding.hash_uniform(seed ^ 0xD1CE, idx, counter)
+        codes = fl + rounding.dither_bit(scaled - fl, slot, u, n_pulses)
+    else:
+        raise ValueError(scheme)
+    return jnp.clip(codes, 0.0, float(levels)).astype(jnp.int32)
+
+
+def dither_round_ref(x, *, scale, zero, bits, counter, seed, n_pulses):
+    return quantize_codes_ref(
+        x, scale=scale, zero=zero, bits=bits, scheme="dither",
+        counter=counter, seed=seed, n_pulses=n_pulses,
+    )
+
+
+def stochastic_round_ref(x, *, scale, zero, bits, counter, seed):
+    return quantize_codes_ref(
+        x, scale=scale, zero=zero, bits=bits, scheme="stochastic",
+        counter=counter, seed=seed, n_pulses=2,
+    )
+
+
+def dither_matmul_ref(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bits: int,
+    scheme: str = "dither",
+    a_range=(0.0, 1.0),
+    b_range=(0.0, 1.0),
+    counter: int = 0,
+    seed: int = 0,
+) -> jax.Array:
+    """Oracle for the fused quantise+matmul kernel (the §VIII 'separate' variant).
+
+    Both operands are quantised once (A with seed, B with seed+1; dither
+    N_pulses: N_A = b.shape[1], N_B = a.shape[0] per §VII), multiplied on the
+    integer grid, and affinely mapped back to the real domain.
+    """
+    (p, q), (q2, r) = a.shape, b.shape
+    assert q == q2
+    levels = float((1 << bits) - 1)
+    sa = levels / (a_range[1] - a_range[0])
+    sb = levels / (b_range[1] - b_range[0])
+    ca = quantize_codes_ref(
+        a, scale=sa, zero=a_range[0], bits=bits, scheme=scheme,
+        counter=counter, seed=seed, n_pulses=max(r, 2),
+    ).astype(jnp.float32)
+    cb = quantize_codes_ref(
+        b, scale=sb, zero=b_range[0], bits=bits, scheme=scheme,
+        counter=counter, seed=seed + 1, n_pulses=max(p, 2),
+    ).astype(jnp.float32)
+    cc = ca @ cb
+    out = cc / (sa * sb)
+    if a_range[0] != 0.0 or b_range[0] != 0.0:
+        out = (
+            out
+            + a_range[0] * cb.sum(axis=0)[None, :] / sb
+            + b_range[0] * ca.sum(axis=1)[:, None] / sa
+            + q * a_range[0] * b_range[0]
+        )
+    return out

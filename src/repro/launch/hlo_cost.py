@@ -1,0 +1,269 @@
+"""Loop-aware cost extraction from post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+scan-over-layers while body with R iterations is counted at 1/R of its true
+cost.  This module rebuilds totals from the HLO text:
+
+  * per-computation symbol tables (instruction name → shape) because
+    post-optimization HLO omits operand shapes at call sites,
+  * a call-graph walk assigning execution multipliers: ENTRY ×1, while
+    bodies ×loop_factor (caller-supplied trip count), fusions/reducers
+    inherit the caller's multiplier,
+  * FLOPs from ``dot(`` ops: 2 × result_elems × contraction_size,
+  * HBM traffic from "stream" ops only (dot / fusion boundaries /
+    dynamic slices / gathers / collectives / custom-calls) — elementwise
+    chains fuse on TPU; CPU copies/transposes are layout artifacts and are
+    excluded.  dynamic-update-slice aliases its big operand (in-place cache
+    write) and is charged only for the updated slice.
+
+Validated against cost_analysis() on unrolled (scan-free) graphs in
+tests/test_hlo_cost.py.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+__all__ = ["hlo_cost", "parse_computations"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9a-z]*)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_DEF_RE = re.compile(r"^\s*%?([\w.\-]+)\s*=\s*")
+_OPNAME_RE = re.compile(r"=\s*(?:\([^)]*\)|[a-z]+[0-9a-z]*\[[\d,]*\](?:\{[\d,]*\})?)\s*"
+                        r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_REF_LOOP_RE = re.compile(r"(?:body|condition)=%?([\w.\-]+)")
+_REF_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_REF_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_STREAM_OPNAMES = {
+    "dot", "fusion", "custom-call", "dynamic-update-slice", "dynamic-slice",
+    "gather", "scatter", "all-reduce", "all-gather", "reduce-scatter",
+    "all-to-all", "collective-permute", "convolution",
+    "all-reduce-start", "all-gather-start", "collective-permute-start",
+}
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_shape(text: str) -> Tuple[str, List[int], int]:
+    """First dtype[dims] in text → (dtype, dims list, bytes); ('', [], 0) if none."""
+    for m in _SHAPE_RE.finditer(text):
+        if m.group(1) in _DTYPE_BYTES:
+            dims = [int(d) for d in m.group(2).split(",") if d]
+            n = 1
+            for d in dims:
+                n *= d
+            return m.group(1), dims, n * _DTYPE_BYTES[m.group(1)]
+    return "", [], 0
+
+
+def _all_shapes_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        if m.group(1) in _DTYPE_BYTES:
+            total += _elems(m.group(2)) * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def parse_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur: List[str] | None = None
+    for line in hlo.splitlines():
+        m = _HEADER_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            name = m.group(2)
+            cur = comps.setdefault(name, [])
+            if m.group(1):
+                entry = name
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                cur.append(line)
+    comps["__entry__"] = [entry or ""]
+    return comps
+
+
+def _symtab(lines: List[str]) -> Dict[str, Tuple[str, List[int], int]]:
+    """instruction name → (dtype, dims, bytes) of its result (first shape)."""
+    tab = {}
+    for line in lines:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        rhs = line.split("=", 1)[1]
+        tab[dm.group(1)] = _first_shape(rhs)
+    return tab
+
+
+def _operands(line: str, opname: str) -> List[str]:
+    i = line.find(opname + "(")
+    if i < 0:
+        return []
+    seg = line[i + len(opname) + 1:]
+    depth = 1
+    out = []
+    buf = []
+    for ch in seg:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    return [m.group(1) for m in _OPERAND_RE.finditer("".join(buf))]
+
+
+def _dot_flops(line: str, tab) -> float:
+    res_dtype, res_dims, _ = _first_shape(line.split("=", 1)[1])
+    res_elems = 1
+    for d in res_dims:
+        res_elems *= d
+    ops = _operands(line, "dot")
+    cm = _CONTRACT_RE.search(line)
+    contract = 1
+    if ops and cm:
+        lhs = tab.get(ops[0], ("", [], 0))[1]
+        for ci in (int(c) for c in cm.group(1).split(",") if c):
+            if ci < len(lhs):
+                contract *= lhs[ci]
+    return 2.0 * res_elems * contract
+
+
+def _op_traffic(line: str, opname: str, tab) -> float:
+    """HBM bytes for one stream op: result + operands (symbol-table lookup)."""
+    _, _, res_bytes = _first_shape(line.split("=", 1)[1])
+    # tuple results: sum all shapes in the result segment
+    rhs = line.split("=", 1)[1]
+    head = rhs[: rhs.find(opname + "(")] if opname + "(" in rhs else rhs
+    res_bytes = _all_shapes_bytes(head)
+    names = _operands(line, opname)
+    op_bytes = [tab.get(n, ("", [], 0))[2] for n in names]
+    if opname == "dynamic-update-slice":
+        # in-place: charge the update slice (operand 1), not the buffer
+        return float(sum(op_bytes[1:]))
+    if opname in ("dynamic-slice", "gather"):
+        return 2.0 * res_bytes
+    return float(res_bytes + sum(op_bytes))
+
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def hlo_cost(hlo: str, loop_factor=1.0) -> Dict[str, float]:
+    """Loop-weighted totals.  ``loop_factor`` is either a scalar (every while
+    level multiplies by it) or a list of per-nesting-depth trip counts, e.g.
+    [microbatches, layer_repeats, ssd_chunks] — while bodies at depth i
+    multiply by factors[min(i, len-1)]; deeper-than-listed levels reuse the
+    last entry.
+
+    Also aggregates collective wire bytes per op kind, halving f32
+    collectives that are provably promoted bf16 (CPU float-normalisation
+    artifact; a TPU compile keeps them bf16 — see dryrun.collective_bytes).
+    """
+    factors = list(loop_factor) if isinstance(loop_factor, (list, tuple)) \
+        else [float(loop_factor)]
+    comps = parse_computations(hlo)
+    entry = comps.pop("__entry__")[0]
+    out = {"dot_flops": 0.0, "hbm_bytes": 0.0, "stream_bytes": 0.0}
+    if not entry:
+        out["collectives"] = {}
+        return out
+
+    mult: Dict[str, float] = {entry: 1.0}
+    depth: Dict[str, int] = {entry: 0}
+    fusion_internal: set = set()
+    work = [entry]
+    seen = {entry}
+    while work:
+        name = work.pop()
+        f = mult.get(name, 1.0)
+        d = depth.get(name, 0)
+        for line in comps.get(name, ()):
+            for ref in _REF_LOOP_RE.findall(line):
+                step = factors[min(d, len(factors) - 1)]
+                if f * step > mult.get(ref, 0.0):
+                    mult[ref] = f * step
+                    depth[ref] = d + 1
+                if ref not in seen:
+                    seen.add(ref)
+                    work.append(ref)
+            for ref in _REF_CALL_RE.findall(line):
+                if f > mult.get(ref, 0.0):
+                    mult[ref] = f
+                    depth[ref] = d
+                if "fusion(" in line:
+                    fusion_internal.add(ref)
+                if ref not in seen:
+                    seen.add(ref)
+                    work.append(ref)
+            bm = _REF_BRANCH_RE.search(line)
+            if bm:
+                for ref in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                    if f > mult.get(ref, 0.0):
+                        mult[ref] = f
+                        depth[ref] = d
+                    if ref not in seen:
+                        seen.add(ref)
+                        work.append(ref)
+
+    coll: Dict[str, float] = {}
+    for name, lines in comps.items():
+        f = mult.get(name, 0.0)
+        if f <= 0.0:
+            continue
+        tab = _symtab(lines)
+        inside_fusion = name in fusion_internal
+        for line in lines:
+            om = _OPNAME_RE.search(line)
+            if not om:
+                continue
+            opname = om.group(1)
+            if opname == "dot":
+                out["dot_flops"] += f * _dot_flops(line, tab)
+            if inside_fusion:
+                continue
+            if opname in ("parameter", "constant", "get-tuple-element",
+                          "tuple", "bitcast", "after-all", "opt-barrier"):
+                continue
+            traffic = _op_traffic(line, opname, tab)
+            out["hbm_bytes"] += f * traffic
+            if opname in _STREAM_OPNAMES:
+                out["stream_bytes"] += f * traffic
+            base = opname.split("-start")[0]
+            if base in _COLLECTIVES and not opname.endswith("-done"):
+                # result bytes only, from the def segment left of the op call
+                head = line.split("=", 1)[1]
+                head = head[: head.find(opname + "(")]
+                b = _all_shapes_bytes(head)
+                if "f32" in head and ("promoted" in line or "convert" in line):
+                    b *= 0.5  # promoted bf16 → TPU moves bf16
+                coll[base] = coll.get(base, 0.0) + f * b
+    out["collectives"] = coll
+    out["wire_bytes"] = (
+        2.0 * coll.get("all-reduce", 0.0)
+        + coll.get("all-gather", 0.0)
+        + coll.get("reduce-scatter", 0.0)
+        + coll.get("all-to-all", 0.0)
+        + coll.get("collective-permute", 0.0)
+    )
+    return out

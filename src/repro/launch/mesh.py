@@ -1,0 +1,26 @@
+"""Production meshes.  Functions, not module constants — importing this file
+never touches jax device state (the dry-run sets device-count env first)."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Target topology: one v5e pod = (data=16, model=16) = 256 chips;
+    multi-pod adds a leading 'pod' DP axis (2 × 256 = 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh():
+    """Whatever this host has (CPU container: 1 device) as (data, model)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))

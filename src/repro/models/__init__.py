@@ -1,0 +1,1 @@
+"""Architecture zoo: dense / MoE / SSM / hybrid / VLM / enc-dec backbones."""

@@ -1,0 +1,143 @@
+"""RecurrentGemma-style RG-LRU recurrent block (arXiv:2402.19427).
+
+Block = two branches: (linear → causal conv → RG-LRU) ⊙ (linear → GeLU),
+then an output projection.  Gates are block-diagonal over heads (the paper's
+structure); the linear recurrence h_t = a_t ⊙ h_{t-1} + √(1−a_t²)·(i_t ⊙ x_t)
+runs as a log-depth ``associative_scan`` for train/prefill and an O(1) state
+update for decode — sub-quadratic, so the hybrid arch serves ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.numerics.policy import QuantPolicy, dense
+
+Params = Dict[str, Any]
+
+__all__ = ["init_rglru", "rglru_block", "rglru_decode_step", "init_rglru_state"]
+
+_C = 8.0  # the RG-LRU temperature constant
+
+
+def _init(key, shape, scale=None, dtype=jnp.bfloat16):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[-2])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _n_blocks(cfg: ModelConfig) -> int:
+    return max(1, cfg.n_heads)
+
+
+def init_rglru(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    lru = d  # lru_width = d_model (RG-9B)
+    nb = _n_blocks(cfg)
+    bd = lru // nb
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "in_x": _init(k1, (d, lru)),
+        "in_gate": _init(k2, (d, lru)),
+        "conv_w": _init(k3, (cfg.rglru_conv_width, lru), scale=0.5),
+        "gate_a": _init(k4, (nb, bd, bd)),       # recurrence gate (block-diag)
+        "gate_x": _init(k5, (nb, bd, bd)),       # input gate (block-diag)
+        "lam": jnp.linspace(0.9, 0.999, lru).astype(jnp.float32),  # Λ init
+        "out": _init(k6, (lru, d)),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    lru = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, lru), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, lru), jnp.bfloat16),
+    }
+
+
+def _gates(params, xb, nb, bd):
+    """Block-diagonal sigmoid gates.  xb: (..., lru) → r, i: (..., lru)."""
+    lead = xb.shape[:-1]
+    xg = xb.reshape(*lead, nb, bd).astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...nb,nbc->...nc", xg, params["gate_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("...nb,nbc->...nc", xg, params["gate_x"].astype(jnp.float32)))
+    return r.reshape(*lead, nb * bd), i.reshape(*lead, nb * bd)
+
+
+def _conv(seq, w, carry=None):
+    wlen = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((seq.shape[0], wlen - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = carry.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    return sum(full[:, i : i + seq.shape[1], :] * w[i][None, None, :] for i in range(wlen))
+
+
+def rglru_block(
+    params: Params,
+    cfg: ModelConfig,
+    u: jax.Array,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+) -> jax.Array:
+    """Full-sequence RG-LRU block.  u: (B, L, d) → (B, L, d)."""
+    nb = _n_blocks(cfg)
+    lru = cfg.d_model
+    bd = lru // nb
+    x = dense(u, params["in_x"], policy, counter, seed=31)
+    gate = dense(u, params["in_gate"], policy, counter, seed=32)
+    x = _conv(x, params["conv_w"])
+
+    r, i = _gates(params, x, nb, bd)
+    log_a0 = jnp.log(jax.nn.sigmoid(params["lam"]))  # per-channel base decay (<0)
+    log_a = _C * r * log_a0[None, None, :]           # (B,L,lru), ≤ 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (
+        i * x.astype(jnp.float32)
+    )
+
+    # linear recurrence via associative scan over L: h_t = a_t h_{t-1} + b_t
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(u.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(u.dtype)
+    return dense(y, params["out"], policy, counter, seed=33)
+
+
+def rglru_decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    u: jax.Array,
+    state: Params,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+):
+    """Single-token decode.  u: (B, 1, d) → (B, 1, d), new state."""
+    nb = _n_blocks(cfg)
+    lru = cfg.d_model
+    bd = lru // nb
+    x = dense(u, params["in_x"], policy, counter, seed=31)
+    gate = dense(u, params["in_gate"], policy, counter, seed=32)
+    conv_out = _conv(x, params["conv_w"], carry=state["conv"])
+    new_conv = jnp.concatenate([state["conv"], x.astype(state["conv"].dtype)], axis=1)[:, 1:]
+    xc = conv_out[:, 0]
+
+    r, i = _gates(params, xc, nb, bd)
+    log_a0 = jnp.log(jax.nn.sigmoid(params["lam"]))
+    log_a = _C * r * log_a0[None, :]
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (
+        i * xc.astype(jnp.float32)
+    )
+    h = state["h"] * a + b
+    y = h[:, None, :].astype(u.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(u.dtype)
+    out = dense(y, params["out"], policy, counter, seed=33)
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,280 @@
+"""Model layers shared by the architecture zoo (pure functional JAX).
+
+Params are plain nested dicts of jnp arrays; every matmul routes through
+``repro.numerics.policy.dense`` so the paper's dither-rounding numerics can
+be switched on for any architecture.  Sharding is applied by the caller via
+in_shardings / with_sharding_constraint (dist/sharding.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import ctx
+from repro.models.config import ModelConfig
+from repro.numerics.policy import QuantPolicy, dense
+
+Params = Dict[str, Any]
+
+__all__ = [
+    "rms_norm", "layer_norm", "rope", "init_attention", "attention",
+    "init_mlp", "mlp", "init_embedding", "make_causal_mask",
+]
+
+
+def _init(key, shape, scale=None, dtype=jnp.bfloat16):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms & rotary
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary position embedding.  x: (B, S, H, hd), positions: (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA / MQA / MHA, causal / bidirectional / sliding-window / cross)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.hd()
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    p = {
+        "wq": _init(kq, (d, cfg.n_heads * hd)),
+        "wk": _init(kk, (d, cfg.n_kv_heads * hd)),
+        "wv": _init(kv, (d, cfg.n_kv_heads * hd)),
+        "wo": _init(ko, (cfg.n_heads * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.bfloat16)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.bfloat16)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.bfloat16)
+    return p
+
+
+def make_causal_mask(s_q: int, s_k: int, window: int = 0, offset: int = 0) -> jax.Array:
+    """(s_q, s_k) bool mask.  offset = absolute position of query row 0."""
+    q_pos = jnp.arange(s_q)[:, None] + offset
+    k_pos = jnp.arange(s_k)[None, :]
+    m = k_pos <= q_pos
+    if window:
+        m = m & (k_pos > q_pos - window)
+    return m
+
+
+def attention(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    mask: Optional[jax.Array] = None,
+    causal: bool = True,
+    window: int = 0,
+    cache: Optional[Params] = None,
+    kv_src: Optional[jax.Array] = None,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+    use_rope: bool = True,
+):
+    """Multi-head attention with GQA and an optional decode KV cache.
+
+    cache: {"k": (B, S_max, Hkv, hd), "v": ..., "pos": ()} — decode appends
+    at index ``pos`` and attends over the full cache (masked).
+    Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    hd, nh, nkv = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    src = kv_src if kv_src is not None else x
+
+    # Sequence-parallel attention (Megatron-SP): when the head count doesn't
+    # divide the TP axis, head-sharding is impossible without mid-head
+    # splits (reshape all-gathers).  Instead the sequence dim shards over
+    # 'model' — QKV/O weights are replicated (dist/sharding.py rule), every
+    # token is computed on exactly one device, and only the (small, GQA) K/V
+    # tensors all-gather for the score einsum.
+    seq_par = s > 1 and ctx.seq_shard_attention(nh) and s % max(ctx.tp_size(), 1) == 0
+    if seq_par:
+        x = ctx.constrain(x, ctx.dp_axes(), "model", None)
+        if kv_src is None:
+            src = x
+
+    q = dense(x, params["wq"], policy, counter, seed=1)
+    k = dense(src, params["wk"], policy, counter, seed=2)
+    v = dense(src, params["wv"], policy, counter, seed=3)
+    if cfg.qkv_bias and "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, src.shape[1], nkv, hd)
+    v = v.reshape(b, src.shape[1], nkv, hd)
+
+    if use_rope and kv_src is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + s}
+        k, v = ck, cv
+        s_k = k.shape[1]
+        k_pos = jnp.arange(s_k)
+        q_pos = pos + jnp.arange(s)
+        m = k_pos[None, :] <= q_pos[:, None]
+        if window:
+            m = m & (k_pos[None, :] > q_pos[:, None] - window)
+        mask = m
+    elif mask is None and causal:
+        # defer (or skip) materialising the (s, s) mask when the chunked
+        # prefill path below will build per-chunk masks instead
+        _chunk = 4096
+        _use_chunked = (kv_src is None and not (s > 1 and ctx.seq_shard_attention(nh)
+                        and s % max(ctx.tp_size(), 1) == 0)
+                        and s > _chunk and s % _chunk == 0)
+        if not _use_chunked:
+            mask = make_causal_mask(s, src.shape[1], window=window)
+
+    group = nh // nkv
+    tp = ctx.tp_size()
+    # Flash-style chunked prefill: at 32k context the (b, h, s, s) score
+    # tensor alone exceeds HBM (granite-3-8b: 38 GB/device).  Scanning query
+    # chunks keeps the working set at (b, h, C, s) — the TPU-native analogue
+    # of flash attention's tiling (a Pallas flash kernel would fuse further;
+    # the scan gives the same asymptotic memory).  §Perf it.9.
+    chunk = 4096
+    if (cache is None and kv_src is None and not seq_par and causal
+            and mask is None and s > chunk and s % chunk == 0):
+        # (mask is None here exactly when the deferred-mask branch above
+        # decided chunking applies)
+        if group > 1 and tp > 1 and nh % tp == 0:
+            k = jnp.repeat(k, group, axis=2)
+            v = jnp.repeat(v, group, axis=2)
+            kk, vv, heads = k, v, nh
+            grouped = False
+        else:
+            kk, vv, heads = k, v, nkv
+            grouped = True
+        nc = s // chunk
+        qs = jnp.swapaxes(q.reshape(b, nc, chunk, nh, hd), 0, 1)
+        offsets = jnp.arange(nc) * chunk
+
+        def body(_, xs):
+            qc, off = xs
+            q_pos = off + jnp.arange(chunk)
+            k_pos = jnp.arange(s)
+            m = k_pos[None, :] <= q_pos[:, None]
+            if window:
+                m = m & (k_pos[None, :] > q_pos[:, None] - window)
+            if grouped:
+                qg = qc.reshape(b, chunk, nkv, group, hd)
+                lg = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kk).astype(jnp.float32)
+                lg = lg / math.sqrt(hd)
+                lg = jnp.where(m[None, None, None, :, :], lg, -1e30)
+                pr = jax.nn.softmax(lg, axis=-1).astype(x.dtype)
+                oc = jnp.einsum("bhgqk,bkhd->bqhgd", pr, vv)
+            else:
+                lg = jnp.einsum("bqhd,bkhd->bhqk", qc, kk).astype(jnp.float32)
+                lg = lg / math.sqrt(hd)
+                lg = jnp.where(m[None, None, :, :], lg, -1e30)
+                pr = jax.nn.softmax(lg, axis=-1).astype(x.dtype)
+                oc = jnp.einsum("bhqk,bkhd->bqhd", pr, vv)
+            return None, oc.reshape(b, chunk, nh * hd)
+
+        _, outs = jax.lax.scan(body, None, (qs, offsets))
+        out = jnp.swapaxes(outs, 0, 1).reshape(b, s, nh * hd)
+        out = dense(out, params["wo"], policy, counter, seed=4)
+        return out, new_cache
+
+    if not seq_par and group > 1 and tp > 1 and nh % tp == 0:
+        # Head-parallel TP: the score einsum must expose a single head dim
+        # divisible by the model axis.  The 5-D grouped layout (nkv, g) has
+        # two small dims GSPMD cannot shard 16-way → per-layer reshuffles
+        # (EXPERIMENTS.md §Perf it.6: +11 GB/layer of all-gathers on
+        # granite-3-8b).  Repeat the (small, replicated) KV heads instead —
+        # group× HBM reads of KV are ~1% of the collective bytes saved.
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / math.sqrt(hd)
+        if mask is not None:
+            logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, nh * hd)
+    else:
+        # grouped einsum (reads KV once) — sequence-parallel or single-device
+        qg = q.reshape(b, s, nkv, group, hd)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) / math.sqrt(hd)
+        if mask is not None:
+            logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v).reshape(b, s, nh * hd)
+    out = dense(out, params["wo"], policy, counter, seed=4)
+    if seq_par:  # hand tokens back to the TP regions replicated over 'model'
+        out = ctx.constrain(out, ctx.dp_axes(), None, None)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str = "swiglu") -> Params:
+    kg, ku, kd = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "wg": _init(kg, (d_model, d_ff)),
+            "wu": _init(ku, (d_model, d_ff)),
+            "wd": _init(kd, (d_ff, d_model)),
+        }
+    return {"wu": _init(ku, (d_model, d_ff)), "wd": _init(kd, (d_ff, d_model)),
+            "bu": jnp.zeros((d_ff,), jnp.bfloat16), "bd": jnp.zeros((d_model,), jnp.bfloat16)}
+
+
+def mlp(params: Params, x: jax.Array, act: str = "swiglu",
+        policy: Optional[QuantPolicy] = None, counter=0) -> jax.Array:
+    if act == "swiglu":
+        g = dense(x, params["wg"], policy, counter, seed=5)
+        u = dense(x, params["wu"], policy, counter, seed=6)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return dense(h, params["wd"], policy, counter, seed=7)
+    h = dense(x, params["wu"], policy, counter, seed=5) + params["bu"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return dense(h, params["wd"], policy, counter, seed=7) + params["bd"]
+
+
+def init_embedding(key, vocab: int, d_model: int) -> jax.Array:
+    return _init(key, (vocab, d_model), scale=0.02)

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts FFN (granite-3-moe, qwen2-moe) with expert parallelism.
+
+Dispatch is scatter-based (sort-free grouped matmul): top-k routing → per-
+expert capacity slots computed with a cumulative-count trick → scatter-add
+into an (E, C, d) buffer → batched expert matmuls (shardable on the expert
+axis = EP on the 'model' mesh axis) → gather-combine.  No (T, E, C) one-hot
+einsum (that dispatch costs more FLOPs than the experts themselves at scale)
+and no data-dependent shapes (capacity C is static; overflow tokens drop,
+standard Switch-style).
+
+qwen2-moe additionally has shared experts (always-on SwiGLU of width
+``shared_d_ff``) added to the routed output.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import ctx
+from repro.models.config import ModelConfig
+from repro.numerics.policy import QuantPolicy, fake_quant
+
+Params = Dict[str, Any]
+
+__all__ = ["init_moe", "moe_ffn", "moe_capacity"]
+
+
+def _init(key, shape, scale=None, dtype=jnp.bfloat16):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[-2])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    cap = int(
+        math.ceil(n_tokens * cfg.n_experts_active * cfg.capacity_factor / cfg.n_experts)
+    )
+    return max(cap, 1)
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(kr, (d, e), scale=0.02, dtype=jnp.float32),
+        "wg": _init(kg, (e, d, f)),
+        "wu": _init(ku, (e, d, f)),
+        "wd": _init(kd, (e, f, d)),
+    }
+    if cfg.shared_d_ff:
+        k1, k2, k3 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "wg": _init(k1, (d, cfg.shared_d_ff)),
+            "wu": _init(k2, (d, cfg.shared_d_ff)),
+            "wd": _init(k3, (cfg.shared_d_ff, d)),
+        }
+    return p
+
+
+def moe_ffn(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+) -> jax.Array:
+    """x: (B, S, d) → (B, S, d).  Static capacity, drop on overflow.
+
+    Data-parallel-local dispatch (EXPERIMENTS.md §Perf it.4): capacity is
+    allocated PER data shard and the scatter/gather run as a vmap over the
+    shard axis, so GSPMD keeps dispatch local to each DP rank instead of
+    all-reducing a global (e·cap, d) buffer every layer (the baseline's 299 s
+    collective term on qwen2-moe).  Cross-device traffic is then only the
+    expert einsums' TP/EP collectives — the intrinsic MoE cost.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.n_experts_active
+    dp = ctx.dp_shards()
+    if t % dp:
+        dp = 1
+    tl = t // dp                        # tokens per data shard
+    cap = moe_capacity(tl, cfg)
+    xf = x.reshape(t, d)
+
+    # --- routing (always fp32: small and accuracy-critical; DESIGN.md §5) ---
+    logits = jnp.matmul(xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)              # (t, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # --- per-shard capacity ranks -------------------------------------------
+    expert = idx.reshape(dp, tl * k)
+    oh = jax.nn.one_hot(expert, e, dtype=jnp.int32)              # (dp, tl·k, e)
+    ranks = jnp.cumsum(oh, axis=1) - 1
+    pos = jnp.sum(ranks * oh, axis=-1)                           # (dp, tl·k)
+    valid = pos < cap
+    pos = jnp.where(valid, pos, 0)
+
+    # --- dispatch: batched scatter, one (e, cap, d) buffer per shard --------
+    token_ids = jnp.repeat(jnp.arange(tl), k)
+    xs = xf.reshape(dp, tl, d)
+    upd = jnp.take(xs, token_ids, axis=1) * valid[..., None].astype(x.dtype)
+    upd = ctx.constrain(upd, ctx.dp_axes(), None, None)
+
+    def scatter_one(ei, pi, up):
+        return jnp.zeros((e, cap, d), x.dtype).at[ei, pi].add(up, mode="drop")
+
+    buf = jax.vmap(scatter_one)(expert, pos, upd)                # (dp, e, cap, d)
+    buf = ctx.constrain(buf, ctx.dp_axes(), None, None, None)
+
+    # --- expert SwiGLU, true EP: pad experts to the TP axis so the expert
+    # dim shards on 'model' even when tp ∤ e (qwen2-moe: 60 → 64, 6% padded
+    # compute).  Slicing the DP-replicated buffer onto expert shards is
+    # free; all three expert einsums then run fully local per EP rank and
+    # only the combine gather crosses the axis (EXPERIMENTS.md §Perf it.5).
+    tp = ctx.tp_size()
+    e_pad = ((e + tp - 1) // tp) * tp if tp > 1 else e
+
+    def pad_e(w):
+        if e_pad == e:
+            return w
+        w = jnp.pad(w, ((0, e_pad - e),) + ((0, 0),) * (w.ndim - 1))
+        return ctx.constrain(w, "model", None, None)
+
+    wg = pad_e(fake_quant(params["wg"], policy, counter, seed=11))
+    wu = pad_e(fake_quant(params["wu"], policy, counter, seed=12))
+    wd = pad_e(fake_quant(params["wd"], policy, counter, seed=13))
+    if e_pad != e:
+        pad_buf = jnp.zeros((dp, e_pad - e, cap, d), x.dtype)
+        buf = jnp.concatenate([buf, pad_buf], axis=1)
+    buf = ctx.constrain(buf, ctx.dp_axes(), "model", None, None)
+    bufq = fake_quant(buf, policy, counter, seed=14)
+    g = jnp.einsum("secd,edf->secf", bufq, wg)
+    u = jnp.einsum("secd,edf->secf", bufq, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    hq = fake_quant(h, policy, counter, seed=15)
+    y = jnp.einsum("secf,efd->secd", hq, wd)                 # (dp, e_pad, cap, d)
+    y = y[:, :e] if e_pad != e else y
+
+    # --- combine: batched gather back to tokens -----------------------------
+    def gather_one(ys, ei, pi):
+        return ys[ei, pi]
+
+    y_assign = jax.vmap(gather_one)(y, expert, pos)              # (dp, tl·k, d)
+    w_assign = (gate.reshape(dp, tl * k) * valid)[..., None].astype(x.dtype)
+    out = jnp.sum((y_assign * w_assign).reshape(t, k, d), axis=1)
+
+    if "shared" in params:
+        from repro.models.layers import mlp  # late import (cycle)
+        out = out + mlp(params["shared"], xf, "swiglu", policy, counter)
+    return out.reshape(b, s, d)

@@ -1,0 +1,86 @@
+"""Uniform model API over all architecture families.
+
+``init_model / apply_model / make_cache / apply_decode`` hide the
+decoder-only vs encoder-decoder split so the trainer, server, dry-run and
+tests treat every assigned arch identically.  Batches are dicts:
+
+  tokens  (B, S) int32            — always present
+  embeds  (B, F, d_model) bf16    — vlm patch embeddings (stub frontend)
+  frames  (B, T_enc, d_model) bf16 — audio frame embeddings (stub frontend)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.numerics.policy import QuantPolicy
+
+Params = Dict[str, Any]
+
+__all__ = ["init_model", "apply_model", "make_cache", "apply_decode", "batch_spec"]
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    if cfg.is_encdec:
+        return encdec.init_encdec(key, cfg)
+    return transformer.init_params(key, cfg)
+
+
+def apply_model(
+    params: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    *,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+    remat: bool = True,
+) -> jax.Array:
+    """Full-sequence logits for training / prefill."""
+    if cfg.is_encdec:
+        return encdec.forward_encdec(
+            params, cfg, batch["tokens"], batch["frames"],
+            policy=policy, counter=counter, remat=remat,
+        )
+    return transformer.forward(
+        params, cfg, batch["tokens"], embeds=batch.get("embeds"),
+        policy=policy, counter=counter, remat=remat,
+    )
+
+
+def make_cache(params: Params, cfg: ModelConfig, batch_size: int, max_len: int,
+               frames: Optional[jax.Array] = None, *, policy=None,
+               kv_quant: bool = False) -> Params:
+    if cfg.is_encdec:
+        assert frames is not None
+        return encdec.init_encdec_cache(params, cfg, frames, batch_size, max_len,
+                                        policy=policy)
+    return transformer.init_cache(cfg, batch_size, max_len, kv_quant=kv_quant)
+
+
+def apply_decode(params: Params, cfg: ModelConfig, token: jax.Array, cache: Params,
+                 *, policy=None, counter=0):
+    if cfg.is_encdec:
+        return encdec.decode_step_encdec(params, cfg, token, cache,
+                                         policy=policy, counter=counter)
+    return transformer.decode_step(params, cfg, token, cache,
+                                   policy=policy, counter=counter)
+
+
+def batch_spec(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for a training batch (launch/dryrun)."""
+    spec = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.frontend == "vit_stub":
+        spec["embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec:
+        spec["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_enc_tokens, cfg.d_model), jnp.bfloat16)
+    return spec

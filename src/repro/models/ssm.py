@@ -1,0 +1,208 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060) block in JAX.
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q; within
+a chunk the output is a masked quadratic form (MXU-friendly), across chunks a
+small recurrent state (H, hd, N) is propagated with per-chunk decay — a
+lax.scan over nc chunks, so prefill is O(L·Q) not O(L²), and single-token
+decode is a pure state update (O(1) per token) — this is what makes the
+``long_500k`` shape runnable (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.numerics.policy import QuantPolicy, dense
+
+Params = Dict[str, Any]
+
+__all__ = ["init_ssm", "ssm_block", "ssm_decode_step", "init_ssm_state"]
+
+
+def _init(key, shape, scale=None, dtype=jnp.bfloat16):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in, nh, hd, n = _dims(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # fused input projection → [x, z, B, C, dt]
+    proj_out = 2 * d_in + 2 * n + nh
+    return {
+        "in_proj": _init(k1, (d, proj_out)),
+        "conv_w": _init(k2, (cfg.ssm_conv_width, d_in + 2 * n), scale=0.5),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), jnp.bfloat16),
+        "out_proj": _init(k4, (d_in, d)),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in, nh, hd, n = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nh, hd, n), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_in + 2 * n), jnp.bfloat16),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, nh, hd, n = _dims(cfg)
+    xz, rest = proj[..., : 2 * d_in], proj[..., 2 * d_in :]
+    x, z = xz[..., :d_in], xz[..., d_in:]
+    bmat, cmat, dt = rest[..., :n], rest[..., n : 2 * n], rest[..., 2 * n :]
+    return x, z, bmat, cmat, dt
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, carry: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  seq: (B, L, C), w: (W, C)."""
+    wlen = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((seq.shape[0], wlen - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = carry.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(
+        full[:, i : i + seq.shape[1], :] * w[i][None, None, :] for i in range(wlen)
+    )
+    new_carry = full[:, -(wlen - 1) :, :] if wlen > 1 else None
+    return jax.nn.silu(out.astype(jnp.float32)).astype(seq.dtype), new_carry
+
+
+def ssm_block(
+    params: Params,
+    cfg: ModelConfig,
+    u: jax.Array,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+) -> jax.Array:
+    """Full-sequence SSD (training / prefill).  u: (B, L, d_model)."""
+    b, l, _ = u.shape
+    d_in, nh, hd, n = _dims(cfg)
+    q = min(cfg.ssm_chunk, l)
+    # pad L to a multiple of the chunk
+    pad = (-l) % q
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    lp = u.shape[1]
+    nc = lp // q
+
+    proj = dense(u, params["in_proj"], policy, counter, seed=21)
+    x, z, bmat, cmat, dt = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)
+    xbc, _ = _causal_conv(xbc, params["conv_w"])
+    x, bmat, cmat = xbc[..., :d_in], xbc[..., d_in : d_in + n], xbc[..., d_in + n :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])      # (B,L,H)
+    a = -jnp.exp(params["a_log"])                                          # (H,)
+    da = dt * a                                                            # (B,L,H) ≤ 0
+
+    xh = x.reshape(b, lp, nh, hd)
+    # chunk
+    xc = xh.reshape(b, nc, q, nh, hd)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+    dac = da.reshape(b, nc, q, nh)
+    dtc = dt.reshape(b, nc, q, nh)
+
+    # intra-chunk cumulative decay
+    seg = jnp.cumsum(dac, axis=2)                                          # (B,nc,q,H)
+    # L matrix: exp(seg_i - seg_j) masked to i ≥ j.  Valid entries have
+    # diff ≤ 0 (seg is non-increasing); clamp BEFORE exp so masked +diff
+    # entries never produce inf (0·inf → NaN in the backward pass).
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]                   # (B,nc,q,q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    lmat = jnp.where(mask, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+
+    # diagonal (intra-chunk) term: Y_d = (L ∘ (C Bᵀ)) · (dt x)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc.astype(jnp.float32), bc.astype(jnp.float32))
+    att = cb[..., None] * lmat                                             # (B,nc,q,q,H)
+    dtx = dtc[..., None] * xc.astype(jnp.float32)                          # (B,nc,q,H,hd)
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", att, dtx)
+
+    # chunk summary states: S_c = Σ_k exp(seg_last - seg_k) B_k (dt x)_k
+    decay_tail = jnp.exp(seg[:, :, -1:, :] - seg)                          # (B,nc,q,H)
+    s_chunk = jnp.einsum("bckn,bckh,bckhp->bchpn", bc.astype(jnp.float32),
+                         decay_tail, dtx)
+
+    # inter-chunk recurrence: H_{c} = exp(seg_last_c) H_{c-1} + S_c
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                                # (B,nc,H)
+
+    def scan_fn(h, inp):
+        s_c, dec = inp
+        h_new = h * dec[:, :, None, None] + s_c
+        return h_new, h
+
+    h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                                    # (B,nc,H,hd,N)
+
+    # off-diagonal term: contribution of previous-chunk state
+    decay_in = jnp.exp(seg)                                                # (B,nc,q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc.astype(jnp.float32),
+                       decay_in, h_prev)
+
+    y = (y_diag + y_off).reshape(b, lp, nh, hd)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, lp, d_in).astype(u.dtype)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(u.dtype) * params["norm"]
+    out = dense(y, params["out_proj"], policy, counter, seed=22)
+    return out[:, :l]
+
+
+def ssm_decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    u: jax.Array,
+    state: Params,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+):
+    """Single-token decode.  u: (B, 1, d_model) → (B, 1, d_model), new state."""
+    b = u.shape[0]
+    d_in, nh, hd, n = _dims(cfg)
+    proj = dense(u, params["in_proj"], policy, counter, seed=21)
+    x, z, bmat, cmat, dt = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)                        # (B,1,·)
+    xbc_out, _ = _causal_conv(xbc, params["conv_w"], carry=state["conv"])
+    new_conv = jnp.concatenate([state["conv"], xbc.astype(state["conv"].dtype)], axis=1)[:, 1:]
+    x, bmat, cmat = (xbc_out[..., :d_in], xbc_out[..., d_in : d_in + n],
+                     xbc_out[..., d_in + n :])
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    dec = jnp.exp(dt * a)                                                   # (B,H)
+    xh = x[:, 0].reshape(b, nh, hd).astype(jnp.float32)
+    dtx = dt[:, :, None] * xh                                               # (B,H,hd)
+    h = state["h"] * dec[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhpn", bmat[:, 0].astype(jnp.float32), dtx
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, cmat[:, 0].astype(jnp.float32))
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(u.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(u.dtype) * params["norm"]
+    out = dense(y, params["out_proj"], policy, counter, seed=22)
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,391 @@
+"""Decoder-only model assembly for every assigned architecture family.
+
+Layers are *stacked per pattern position and scanned* (MaxText-style
+scan-over-layers): for a block pattern of period P and R repeats, parameters
+live as P pytrees whose leaves carry a leading (R, ...) axis, and the forward
+pass is one ``lax.scan`` over R — this keeps HLO size and compile time
+independent of depth (essential for the 512-device dry-run) and gives
+per-repeat remat for free.  ``n_layers % P`` remainder layers are unrolled.
+
+Decode uses a unified ring-buffer KV cache: capacity C = window (local
+attention) or max_len (full attention), with an absolute-position array
+``k_pos`` driving the mask — one code path for full, sliding-window, SSM and
+RG-LRU layers (the latter two carry O(1) recurrent states instead).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import hybrid, layers, moe, ssm
+from repro.models.config import ModelConfig
+from repro.numerics.policy import QuantPolicy, dense
+
+Params = Dict[str, Any]
+
+__all__ = [
+    "init_params", "forward", "decode_step", "init_cache", "prefill",
+]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _period(cfg: ModelConfig) -> int:
+    return len(cfg.block_pattern) if cfg.block_pattern else 1
+
+
+def _init_block(key, cfg: ModelConfig, kind: str) -> Params:
+    d = cfg.d_model
+    keys = jax.random.split(key, 4)
+    p: Params = {"ln1": jnp.ones((d,), jnp.bfloat16)}
+    if kind == "attn":
+        p["attn"] = layers.init_attention(keys[0], cfg)
+    elif kind == "rglru":
+        p["rec"] = hybrid.init_rglru(keys[0], cfg)
+    elif kind == "ssm":
+        p["ssm"] = ssm.init_ssm(keys[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind != "ssm":  # mamba2 blocks are norm→SSD only
+        p["ln2"] = jnp.ones((d,), jnp.bfloat16)
+        if cfg.n_experts:
+            p["moe"] = moe.init_moe(keys[1], cfg)
+        else:
+            p["mlp"] = layers.init_mlp(keys[1], d, cfg.d_ff, cfg.mlp_act)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    p_ = _period(cfg)
+    rep, rem = divmod(cfg.n_layers, p_)
+    k_embed, k_head, k_blocks, k_rem = jax.random.split(key, 4)
+
+    blocks = []
+    if rep:
+        for pos in range(p_):
+            kind = cfg.layer_kind(pos)
+            inits = [
+                _init_block(jax.random.fold_in(k_blocks, pos * 1000 + r), cfg, kind)
+                for r in range(rep)
+            ]
+            blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *inits))
+    remainder = [
+        _init_block(jax.random.fold_in(k_rem, i), cfg, cfg.layer_kind(rep * p_ + i))
+        for i in range(rem)
+    ]
+
+    vp = cfg.vocab_padded()
+    params: Params = {
+        "embed": layers.init_embedding(k_embed, vp, cfg.d_model),
+        "blocks": blocks,
+        "remainder": remainder,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.bfloat16),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers._init(k_head, (cfg.d_model, vp), scale=0.02)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+
+def _cache_entry(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                 kv_quant: bool = False):
+    if kind == "attn":
+        cap = min(cfg.window, max_len) if cfg.window else max_len
+        if kv_quant:
+            # Dither-quantised int8 cache (§Perf it.10 — the paper's
+            # unbiased rounding applied to KV compression): codes + one
+            # per-position, per-head scale; written with counter = pos, so
+            # re-decodes of the same slot over time average out (§VII).
+            return {
+                "k": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.hd()), jnp.int8),
+                "v": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.hd()), jnp.int8),
+                "k_scale": jnp.zeros((batch, cap, cfg.n_kv_heads), jnp.float32),
+                "v_scale": jnp.zeros((batch, cap, cfg.n_kv_heads), jnp.float32),
+                "k_pos": jnp.full((cap,), -1, jnp.int32),
+            }
+        return {
+            "k": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.hd()), jnp.bfloat16),
+            "v": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.hd()), jnp.bfloat16),
+            "k_pos": jnp.full((cap,), -1, jnp.int32),
+        }
+    if kind == "rglru":
+        return hybrid.init_rglru_state(cfg, batch)
+    if kind == "ssm":
+        return ssm.init_ssm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_quant: bool = False) -> Params:
+    p_ = _period(cfg)
+    rep, rem = divmod(cfg.n_layers, p_)
+    stacked = []
+    if rep:
+        for pos in range(p_):
+            kind = cfg.layer_kind(pos)
+            one = _cache_entry(cfg, kind, batch, max_len, kv_quant)
+            stacked.append(
+                jax.tree.map(lambda x: jnp.broadcast_to(x, (rep,) + x.shape), one)
+            )
+    remainder = [
+        _cache_entry(cfg, cfg.layer_kind(rep * p_ + i), batch, max_len, kv_quant)
+        for i in range(rem)
+    ]
+    return {"pos": jnp.zeros((), jnp.int32), "layers": stacked, "remainder": remainder}
+
+
+# ---------------------------------------------------------------------------
+# decode attention over the ring cache
+# ---------------------------------------------------------------------------
+
+
+def _attention_decode(params, cfg: ModelConfig, x, cache, pos, policy, counter):
+    """One-token attention against the ring cache.  x: (B, 1, d)."""
+    b = x.shape[0]
+    hd, nh, nkv = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    cap = cache["k"].shape[1]
+
+    q = dense(x, params["wq"], policy, counter, seed=1).reshape(b, 1, nh, hd)
+    k = dense(x, params["wk"], policy, counter, seed=2).reshape(b, 1, nkv, hd)
+    v = dense(x, params["wv"], policy, counter, seed=3).reshape(b, 1, nkv, hd)
+    if cfg.qkv_bias and "bq" in params:
+        q = q + params["bq"].reshape(1, 1, nh, hd)
+        k = k + params["bk"].reshape(1, 1, nkv, hd)
+        v = v + params["bv"].reshape(1, 1, nkv, hd)
+    posv = jnp.full((b, 1), pos)
+    q = layers.rope(q, posv, cfg.rope_theta)
+    k = layers.rope(k, posv, cfg.rope_theta)
+
+    slot = jnp.mod(pos, cap)
+    quantized = cache["k"].dtype == jnp.int8
+    if quantized:
+        # dither-round the new K/V token into int8 codes (counter = pos)
+        from repro.core import rounding as _rnd
+
+        def q8(t, seed):
+            scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) + 1e-6
+            scaled = t.astype(jnp.float32) / scale[..., None] * 127.0 + 128.0
+            idx = jnp.arange(t.size, dtype=jnp.uint32).reshape(t.shape)
+            slot_d = _rnd.lcg_slot(pos, idx, 16, seed=seed)
+            u = _rnd.hash_uniform(seed ^ 0xD1CE, idx, pos)
+            codes = jnp.floor(scaled) + _rnd.dither_bit(
+                scaled - jnp.floor(scaled), slot_d, u, 16)
+            return (jnp.clip(codes, 0.0, 255.0) - 128.0).astype(jnp.int8), scale
+
+        kq, ks = q8(k, 101)
+        vq, vs = q8(v, 102)
+        ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        kss = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
+        vss = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+        k_pos = jax.lax.dynamic_update_slice(
+            cache["k_pos"], pos[None].astype(jnp.int32), (slot,))
+        new_cache = {"k": ck, "v": cv, "k_scale": kss, "v_scale": vss,
+                     "k_pos": k_pos}
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        k_pos = jax.lax.dynamic_update_slice(cache["k_pos"], pos[None].astype(jnp.int32), (slot,))
+        new_cache = {"k": ck, "v": cv, "k_pos": k_pos}
+
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if cfg.window:
+        valid = valid & (k_pos > pos - cfg.window)
+
+    # grouped GQA decode: read the cache once, no repeated-KV materialisation
+    group = nh // nkv
+    qg = q.reshape(b, 1, nkv, group, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                        ck.astype(x.dtype)).astype(jnp.float32) / math.sqrt(hd)
+    if quantized:
+        # fold per-position/per-head key scales in after the int8 dot
+        logits = logits * (new_cache["k_scale"] / 127.0).transpose(0, 2, 1)[:, :, None, None, :]
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    if quantized:
+        # per-position value scales attach to the probabilities
+        pv = probs * (new_cache["v_scale"] / 127.0).transpose(0, 2, 1)[:, :, None, None, :].astype(probs.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", pv, cv.astype(x.dtype)).reshape(b, 1, nh * hd)
+    else:
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cv).reshape(b, 1, nh * hd)
+    return dense(out, params["wo"], policy, counter, seed=4), new_cache
+
+
+# ---------------------------------------------------------------------------
+# block application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(
+    bp: Params,
+    cfg: ModelConfig,
+    kind: str,
+    x: jax.Array,
+    positions,
+    *,
+    policy,
+    counter,
+    cache_entry=None,
+    pos=None,
+    window_override=None,
+):
+    h = layers.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    new_cache = cache_entry
+    if kind == "attn":
+        window = cfg.window if window_override is None else window_override
+        if cache_entry is not None:
+            out, new_cache = _attention_decode(bp["attn"], cfg, h, cache_entry, pos, policy, counter)
+        else:
+            out, _ = layers.attention(
+                bp["attn"], cfg, h, positions, causal=True, window=window,
+                policy=policy, counter=counter,
+            )
+    elif kind == "rglru":
+        if cache_entry is not None:
+            out, new_cache = hybrid.rglru_decode_step(bp["rec"], cfg, h, cache_entry, policy, counter)
+        else:
+            out = hybrid.rglru_block(bp["rec"], cfg, h, policy, counter)
+    elif kind == "ssm":
+        if cache_entry is not None:
+            out, new_cache = ssm.ssm_decode_step(bp["ssm"], cfg, h, cache_entry, policy, counter)
+        else:
+            out = ssm.ssm_block(bp["ssm"], cfg, h, policy, counter)
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    if "mlp" in bp or "moe" in bp:
+        h2 = layers.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if "moe" in bp:
+            x = x + moe.moe_ffn(bp["moe"], cfg, h2, policy, counter)
+        else:
+            x = x + layers.mlp(bp["mlp"], h2, cfg.mlp_act, policy, counter)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill) and decode
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg, tokens, embeds):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if embeds is not None:  # multimodal stub frontend: prepend patch/frame embeds
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    embeds: Optional[jax.Array] = None,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+    remat: bool = True,
+) -> jax.Array:
+    """Full-sequence forward → logits (B, S_total, vocab)."""
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    p_ = _period(cfg)
+
+    def body(carry, xs):
+        h = carry
+        for pos_i in range(p_):
+            kind = cfg.layer_kind(pos_i)
+            h, _ = _apply_block(
+                xs[pos_i], cfg, kind, h, positions, policy=policy, counter=counter,
+            )
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    if params["blocks"]:
+        x, _ = jax.lax.scan(body_fn, x, tuple(params["blocks"]))
+    rep = cfg.n_layers // p_
+    for i, bp in enumerate(params["remainder"]):
+        kind = cfg.layer_kind(rep * p_ + i)
+        x, _ = _apply_block(bp, cfg, kind, x, positions, policy=policy, counter=counter)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return dense(x, head, policy, counter, seed=9).astype(jnp.float32)
+
+
+def prefill(params, cfg, tokens, *, embeds=None, policy=None, counter=0):
+    """Prefill forward (no cache materialisation — dry-run measures compute).
+
+    Production serving would also emit the cache; for the benchmark shapes
+    prefill cost is the forward pass itself.
+    """
+    return forward(params, cfg, tokens, embeds=embeds, policy=policy,
+                   counter=counter, remat=False)
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,   # (B,) int32 — the most recent token
+    cache: Params,
+    *,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+):
+    """One decode step: (B,) token + cache → (B, vocab) logits, new cache."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos)
+    p_ = _period(cfg)
+
+    def body(carry, xs):
+        h = carry
+        bp, ce = xs
+        new_entries = []
+        for pos_i in range(p_):
+            kind = cfg.layer_kind(pos_i)
+            h, ne = _apply_block(
+                bp[pos_i], cfg, kind, h, positions, policy=policy,
+                counter=counter, cache_entry=ce[pos_i], pos=pos,
+            )
+            new_entries.append(ne)
+        return h, tuple(new_entries)
+
+    if params["blocks"]:
+        x, new_layer_caches = jax.lax.scan(
+            body, x, (tuple(params["blocks"]), tuple(cache["layers"]))
+        )
+    else:
+        new_layer_caches = ()
+    rep = cfg.n_layers // p_
+    new_rem = []
+    for i, bp in enumerate(params["remainder"]):
+        kind = cfg.layer_kind(rep * p_ + i)
+        x, ne = _apply_block(
+            bp, cfg, kind, x, positions, policy=policy, counter=counter,
+            cache_entry=cache["remainder"][i], pos=pos,
+        )
+        new_rem.append(ne)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = dense(x, head, policy, counter, seed=9)[:, 0].astype(jnp.float32)
+    logits = logits[:, : cfg.vocab_size]  # drop vocab padding for sampling
+    new_cache = {
+        "pos": pos + 1,
+        "layers": list(new_layer_caches),
+        "remainder": new_rem,
+    }
+    return logits, new_cache

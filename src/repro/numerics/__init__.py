@@ -1,0 +1,3 @@
+"""Numerics policies: dither/stochastic/deterministic rounding for matmuls."""
+from repro.numerics.policy import QuantPolicy, dense, fake_quant, qmatmul
+__all__ = ["QuantPolicy", "dense", "fake_quant", "qmatmul"]

@@ -1,0 +1,138 @@
+"""Quantisation policy: dither rounding as a first-class numerics feature.
+
+``QuantPolicy`` decides how every dense matmul in the model zoo executes:
+
+* ``scheme='none'``      — plain bf16/f32 matmul (the dry-run / roofline path).
+* ``scheme='dither'``    — §VIII 'separate' variant: activations and weights
+  are dither-rounded onto a k-bit grid (dynamic absmax range), multiplied,
+  and dequantised.  Weights use the paper's Format-2 role (per-step counter,
+  "precoded"); activations the Format-1 role (per-call counter) — §VI.
+* ``scheme='stochastic'|'deterministic'`` — baselines for comparison.
+
+Gradients flow with a straight-through estimator (custom_vjp): backward uses
+the full-precision operands, which is the standard QAT treatment and keeps
+the forward-rounding unbiasedness argument (§VII / [9]) intact.
+
+The counter i_s is a *traced* int32 scalar threaded from the train step, so
+advancing it never retraces. Counter-advancement is "rounding in time": the
+same weight re-rounded across steps walks the dither pulse sequence, giving
+the O(1/N) time-averaged SEM of §VII instead of stochastic rounding's
+Ω(1/√N).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import rounding
+
+__all__ = ["QuantPolicy", "qmatmul", "dense", "fake_quant"]
+
+
+@dataclass(frozen=True)
+class QuantPolicy:
+    scheme: str = "none"          # none | dither | stochastic | deterministic
+    bits: int = 8
+    n_pulses: int = 16            # dither pulse count N
+    seed: int = 0
+    backend: str = "jnp"          # jnp | pallas (pallas: fused kernel, tests/bench)
+    quantize_weights: bool = True
+    quantize_acts: bool = True
+
+    @property
+    def enabled(self) -> bool:
+        return self.scheme != "none"
+
+    def with_seed(self, seed: int) -> "QuantPolicy":
+        return replace(self, seed=seed)
+
+
+def _absmax_scale(x: jax.Array, bits: int) -> jax.Array:
+    """Symmetric dynamic range: scale mapping [-absmax, absmax] → [0, 2^k−1]."""
+    half = (1 << bits) - 1
+    absmax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6)
+    return (half / 2.0) / absmax, absmax
+
+
+def _fake_quant(x: jax.Array, policy: QuantPolicy, counter, seed: int) -> jax.Array:
+    """Round x onto the symmetric k-bit grid with the policy's scheme."""
+    scale, _ = _absmax_scale(x, policy.bits)
+    half_levels = float((1 << policy.bits) - 1) / 2.0
+    scaled = x.astype(jnp.float32) * scale + half_levels  # → [0, 2^k−1]
+    if policy.scheme == "deterministic":
+        codes = rounding.deterministic_round(scaled)
+    elif policy.scheme == "stochastic":
+        idx = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)
+        u = rounding.hash_uniform(seed, idx, counter)
+        fl = jnp.floor(scaled)
+        codes = fl + (u < scaled - fl).astype(jnp.float32)
+    elif policy.scheme == "dither":
+        idx = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)
+        slot = rounding.lcg_slot(counter, idx, policy.n_pulses, seed=seed)
+        u = rounding.hash_uniform(rounding._u32(seed) ^ np.uint32(0xD1CE), idx, counter)
+        fl = jnp.floor(scaled)
+        codes = fl + rounding.dither_bit(scaled - fl, slot, u, policy.n_pulses)
+    else:
+        raise ValueError(policy.scheme)
+    codes = jnp.clip(codes, 0.0, 2.0 * half_levels)
+    return ((codes - half_levels) / scale).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def qmatmul(x, w, policy: QuantPolicy, seed: int, counter=jnp.float32(0)):
+    """Quantised x @ w with straight-through gradients.
+
+    ``counter`` is a float32 scalar (exact for i_s < 2²⁴) so it has a
+    well-defined (zero) cotangent under custom_vjp.
+    """
+    xq = _fake_quant(x, policy, counter, seed) if policy.quantize_acts else x
+    wq = _fake_quant(w, policy, counter, seed + 1) if policy.quantize_weights else w
+    return jnp.matmul(xq, wq)
+
+
+def _qmatmul_fwd(x, w, policy, seed, counter):
+    return qmatmul(x, w, policy, seed, counter), (x, w, counter)
+
+
+def _qmatmul_bwd(policy, seed, res, g):
+    x, w, counter = res
+    # STE: full-precision backward (unbiased forward rounding already removed
+    # the systematic error the paper worries about; see [9]/§VII).
+    gx = jnp.matmul(g, w.T)
+    gw = jnp.matmul(x.reshape(-1, x.shape[-1]).T, g.reshape(-1, g.shape[-1]))
+    return gx, gw.astype(w.dtype), jnp.zeros_like(counter)
+
+
+qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+def fake_quant(x: jax.Array, policy: QuantPolicy | None, counter=0, seed: int = 0) -> jax.Array:
+    """Public round-to-grid helper (stop-grad STE) for non-matmul call sites
+    (stacked expert einsums, gradient compression)."""
+    if policy is None or not policy.enabled:
+        return x
+    counter = jnp.asarray(counter, jnp.float32)
+    xq = _fake_quant(x, policy, counter, policy.seed + seed)
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def dense(x: jax.Array, w: jax.Array, policy: QuantPolicy | None = None,
+          counter=0, seed: int = 0) -> jax.Array:
+    """The single matmul entry point used by every model layer.
+
+    x: (..., d_in), w: (d_in, d_out).  policy None / 'none' → plain matmul
+    (this is the path the dry-run rooflines); otherwise the §VIII 'separate'
+    quantised path with dither/stochastic/deterministic rounding.
+    """
+    if policy is None or not policy.enabled:
+        return jnp.matmul(x, w)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    counter = jnp.asarray(counter, jnp.float32)
+    out = qmatmul(x2, w, policy, policy.seed + seed, counter)
+    return out.reshape(*lead, w.shape[-1])

@@ -1,0 +1,77 @@
+"""AdamW optimizer as pure pytree transforms (no external deps).
+
+Moments are stored in f32 regardless of param dtype (mixed-precision master
+statistics); the optimizer state shards exactly like the parameters (the
+launcher reuses param PartitionSpecs), i.e. a ZeRO-free fully-sharded-on-TP /
+replicated-on-DP layout that matches the dry-run mesh.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "init_opt_state", "apply_updates"]
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def lr_at(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+
+def init_opt_state(params: Any) -> Any:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def apply_updates(opt: AdamW, params: Any, grads: Any, state: Any):
+    """One AdamW step → (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, opt.grad_clip / (gnorm + 1e-9)) if opt.grad_clip else 1.0
+
+    b1, b2 = opt.b1, opt.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = opt.lr_at(step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1.0 - b1) * g
+        v_new = b2 * v + (1.0 - b2) * g * g
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + opt.eps)
+        if opt.weight_decay and p.ndim >= 2:  # decay matrices only
+            delta = delta + opt.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,37 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "wsd_schedule", "linear_warmup"]
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    return peak * jnp.minimum(1.0, step.astype(jnp.float32) / max(warmup, 1))
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return peak * jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(peak: float, warmup: int, stable: int, decay: int, floor: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup → constant plateau → exp-ish decay.
+
+    MiniCPM's schedule; the decay phase uses the paper's exponential form
+    f(s) = floor^(s/decay)."""
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        in_decay = s > (warmup + stable)
+        d = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = jnp.power(jnp.float32(floor), d)
+        val = jnp.where(s < warmup, warm, jnp.where(in_decay, dec, 1.0))
+        return peak * val
+    return lr

@@ -1,0 +1,112 @@
+"""Serving: prefill + batched decode engine.
+
+``make_serve_fns`` builds the two pjit-able entry points the dry-run lowers
+(``prefill_step`` and ``decode_step``); ``Engine`` is the host-side loop used
+by the examples — continuous batching over a request queue with a shared
+ring-buffer KV cache (slots freed on EOS / max-len).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.numerics.policy import QuantPolicy
+
+__all__ = ["make_serve_fns", "Engine"]
+
+
+def make_serve_fns(cfg: ModelConfig, policy: Optional[QuantPolicy] = None):
+    def prefill_step(params, batch):
+        return registry.apply_model(params, cfg, batch, policy=policy, remat=False)
+
+    def decode_step(params, token, cache):
+        return registry.apply_decode(params, cfg, token, cache, policy=policy)
+
+    return prefill_step, decode_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Minimal continuous-batching decode engine (example/serving driver).
+
+    Fixed decode batch B; requests are admitted into free slots, prompts are
+    prefilled token-by-token into the slot's cache region (CPU-scale demo —
+    a production deployment would use the prefill_step path), then decoded
+    greedily until EOS/max_new.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, batch: int, max_len: int,
+                 policy: Optional[QuantPolicy] = None, frames=None,
+                 kv_quant: bool = False):
+        self.params, self.cfg, self.batch, self.max_len = params, cfg, batch, max_len
+        self.policy = policy
+        self.cache = registry.make_cache(params, cfg, batch, max_len, frames=frames,
+                                         policy=policy, kv_quant=kv_quant)
+        self._decode = jax.jit(
+            lambda p, t, c: registry.apply_decode(p, cfg, t, c, policy=policy)
+        )
+        self.slots: List[Optional[Request]] = [None] * batch
+        self.queue: List[Request] = []
+        self.token = jnp.zeros((batch,), jnp.int32)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+
+    def step(self):
+        """One engine tick: admit, decode one token for every active slot."""
+        self._admit()
+        feed = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                feed.append(0)
+            elif req.prompt:
+                feed.append(req.prompt.pop(0))       # prefill phase (teacher-forced)
+            elif req.out:
+                feed.append(req.out[-1])
+            else:
+                feed.append(1)                        # BOS
+        token = jnp.asarray(feed, jnp.int32)
+        logits, self.cache = self._decode(self.params, token, self.cache)
+        nxt = jnp.argmax(logits, axis=-1)
+        for i, req in enumerate(self.slots):
+            if req is None or req.prompt:
+                continue
+            req.out.append(int(nxt[i]))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.slots[i] = None
+        return [r for r in [s for s in self.slots] if r is not None]
+
+    def run(self, ticks: int):
+        done: List[Request] = []
+        seen = set()
+        all_reqs = list(self.queue)
+        for _ in range(ticks):
+            self.step()
+            for r in all_reqs:
+                if r.done and r.rid not in seen:
+                    seen.add(r.rid)
+                    done.append(r)
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return done

@@ -1,0 +1,107 @@
+"""Training step: loss, grads, optimizer, numerics policy, microbatching.
+
+``make_train_step`` builds the pjit-able function the launcher (and the
+dry-run) lowers:  state = {params, opt, counter} → state', metrics.  The
+dither counter i_s advances once per step — "rounding in time" (§VII).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.numerics.policy import QuantPolicy
+from repro.optim import adamw, grad_compress
+
+__all__ = ["init_train_state", "make_train_step", "loss_fn"]
+
+
+def loss_fn(params, cfg: ModelConfig, batch, policy, counter, remat=True):
+    """Next-token cross entropy over the token region (frontend tokens
+    skipped).  Logits stay vocab-padded (and vocab-SHARDED on TP meshes —
+    §Perf it.8): the pad columns are masked to -∞, the softmax reductions
+    over the sharded vocab axis are tiny (B,S) collectives, and the label
+    gather never materialises a replicated (B,S,V) tensor."""
+    logits = registry.apply_model(params, cfg, batch, policy=policy,
+                                  counter=counter, remat=remat)
+    tokens = batch["tokens"]
+    n_front = logits.shape[1] - tokens.shape[1]
+    logits = logits[:, n_front:, :]
+    vp = logits.shape[-1]
+    if vp != cfg.vocab_size:  # mask vocab padding out of the softmax
+        pad_mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, 1:, None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def init_train_state(key, cfg: ModelConfig) -> Dict[str, Any]:
+    params = registry.init_model(key, cfg)
+    return {
+        "params": params,
+        "opt": adamw.init_opt_state(params),
+        "counter": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt: adamw.AdamW,
+    policy: Optional[QuantPolicy] = None,
+    grad_policy: Optional[QuantPolicy] = None,
+    microbatch: int = 0,
+    remat: bool = True,
+):
+    """Build train_step(state, batch) → (state, metrics).
+
+    ``microbatch`` > 0 splits the batch into that many sequential chunks with
+    gradient accumulation via lax.scan — compute/DP-reduce overlap at scale
+    and a memory knob (DESIGN.md §4).
+    """
+
+    def grads_of(params, batch, counter):
+        return jax.value_and_grad(loss_fn)(params, cfg, batch, policy, counter, remat)
+
+    def step(state, batch):
+        params, counter = state["params"], state["counter"]
+        if microbatch and microbatch > 1:
+            def split(x):
+                # batch-major reshape + swap: the DP sharding stays on the
+                # batch dim (reshaping (mb, b/mb) directly would land the
+                # sharded axis on the SCAN dim → every device recomputes the
+                # full µbatch; EXPERIMENTS.md §Perf it.7).
+                b = x.shape[0]
+                return x.reshape(b // microbatch, microbatch,
+                                 *x.shape[1:]).swapaxes(0, 1)
+            mbatches = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                loss_a, g_a = carry
+                loss, g = grads_of(params, mb, counter)
+                return (loss_a + loss, jax.tree.map(jnp.add, g_a, g)), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0), zero_g), mbatches)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = grads_of(params, batch, counter)
+
+        if grad_policy is not None and grad_policy.enabled:
+            grads = grad_compress.compress_grads(grads, grad_policy, counter)
+
+        new_params, new_opt, om = adamw.apply_updates(opt, params, grads, state["opt"])
+        metrics = {"loss": loss, **om}
+        return (
+            {"params": new_params, "opt": new_opt, "counter": counter + 1},
+            metrics,
+        )
+
+    return step

@@ -1,0 +1,73 @@
+"""Checkpointer: roundtrip, atomicity, async, retention, elastic restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (8, 16)),
+        "nest": {"b": jnp.arange(10, dtype=jnp.int32),
+                 "c": jnp.float32(3.5)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(5, t)
+    out = ck.restore(5, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save_async(1, _tree(1))
+    ck.save_async(2, _tree(2))
+    ck.wait()
+    assert ck.latest_step() == 2
+    step, out = ck.restore_latest(_tree())
+    assert step == 2
+
+
+def test_retention_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in range(5):
+        ck.save(s, _tree(s))
+    assert ck.all_steps() == [3, 4]
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """tmp dirs are never listed as valid steps."""
+    ck = Checkpointer(str(tmp_path))
+    os.makedirs(tmp_path / "step_00000009.tmp.123.456")
+    assert ck.all_steps() == []
+    ck.save(1, _tree())
+    assert ck.all_steps() == [1]
+
+
+def test_elastic_restore_dtype_and_placement(tmp_path):
+    """Restore casts to the reference dtype and accepts shardings=None
+    (mesh-shape-agnostic numpy storage → any future mesh)."""
+    ck = Checkpointer(str(tmp_path))
+    t = {"w": jnp.ones((4, 4), jnp.float32)}
+    ck.save(1, t)
+    like = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    out = ck.restore(1, like)
+    assert out["w"].dtype == jnp.bfloat16
+    assert float(out["w"].sum()) == 16.0
+
+
+def test_mismatched_structure_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    with pytest.raises(AssertionError):
+        ck.restore(1, {"only": jnp.zeros(3)})

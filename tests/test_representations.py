@@ -1,0 +1,74 @@
+"""Property tests for the §II pulse representations (the paper's core claims)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import representations as rep, theory
+
+UNIT = st.floats(0.0, 1.0, allow_nan=False, allow_infinity=False, width=32)
+
+
+@given(x=UNIT, n=st.sampled_from([4, 16, 64, 257]))
+def test_dither_encode_unbiased_and_low_var(x, n):
+    """§II-D: E[X_s] = x exactly; Var(X_s) ≤ 2/N²."""
+    xs = jnp.full((256,), x, jnp.float32)
+    pulses = rep.dither_encode(jax.random.PRNGKey(0), xs, n)
+    est = rep.decode(pulses)
+    mean = float(jnp.mean(est))
+    var = float(jnp.var(est))
+    # SEM of the mean over 256 draws with var ≤ 2/N²
+    tol = 6.0 * np.sqrt(2.0 / n**2 / 256) + 1e-6
+    assert abs(mean - x) < tol, (mean, x, tol)
+    assert var <= 2.0 / n**2 + 1e-6
+
+
+@given(x=UNIT, n=st.sampled_from([4, 16, 64]))
+def test_deterministic_encode_bias_bound(x, n):
+    """§II-B: |X_s − x| ≤ 1/(2N), zero variance."""
+    est = float(rep.decode(rep.deterministic_encode(jnp.float32(x), n)))
+    assert abs(est - x) <= 0.5 / n + 1e-6
+
+
+@given(x=UNIT, n=st.sampled_from([8, 32]))
+def test_stochastic_encode_unbiased(x, n):
+    xs = jnp.full((512,), x, jnp.float32)
+    est = rep.decode(rep.stochastic_encode(jax.random.PRNGKey(1), xs, n))
+    sem = np.sqrt(x * (1 - x) / n / 512) + 1e-6
+    assert abs(float(jnp.mean(est)) - x) < 6 * sem + 1e-3
+
+
+@given(n=st.sampled_from([8, 16, 64]))
+def test_pulse_counts_exact_for_grid_values(n):
+    """x = m/N with m ≤ N/2 → exactly m deterministic 1-pulses, rest δ=0."""
+    m = n // 4
+    x = jnp.float32(m / n)
+    pulses = rep.dither_encode(jax.random.PRNGKey(2), x[None], n)
+    assert int(pulses.sum()) == m
+
+
+def test_emse_orders_match_theory():
+    """Sample EMSE within 2× of the closed forms (paper Figs 1–2)."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.uniform(key, (2000,))
+    n = 64
+    # stochastic
+    est = rep.decode(rep.stochastic_encode(key, x, n))
+    L = float(jnp.mean((est - x) ** 2))
+    assert 0.5 < L / theory.emse_repr_stochastic(n) < 2.0
+    # deterministic
+    est = rep.decode(rep.deterministic_encode(x, n))
+    L = float(jnp.mean((est - x) ** 2))
+    assert 0.5 < L / theory.emse_repr_deterministic(n) < 2.0
+    # dither: below the bound, above the global lower bound
+    est = rep.decode(rep.dither_encode(key, x, n))
+    L = float(jnp.mean((est - x) ** 2))
+    assert theory.emse_lower_bound(n) * 0.5 < L <= theory.emse_repr_dither_bound(n)
+
+
+def test_spread_ones_places_exact_count():
+    for m in [0, 1, 5, 16]:
+        bits = rep.spread_ones(jnp.float32(m)[None], 16)
+        assert int(bits.sum()) == m

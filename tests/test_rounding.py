@@ -1,0 +1,69 @@
+"""Property tests for §II-C / §VII rounding schemes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import rounding
+
+FLOATS = st.floats(-100.0, 100.0, allow_nan=False, allow_infinity=False, width=32)
+
+
+@given(x=FLOATS, n=st.sampled_from([4, 16, 64]))
+def test_dither_round_output_on_grid(x, n):
+    """d(α, i) ∈ {⌊α⌋, ⌊α⌋+1} always."""
+    out = rounding.dither_round(jnp.float32(x)[None], 3, 7, n)
+    fl = np.floor(np.float32(x))
+    assert float(out[0]) in (fl, fl + 1.0)
+
+
+@given(x=st.floats(0.0, 10.0, allow_nan=False, width=32))
+def test_dither_round_unbiased_over_period(x):
+    """Averaging over a full pulse period + seeds recovers α with O(1/N) error."""
+    n = 16
+    xs = jnp.full((64,), x, jnp.float32)
+    outs = jnp.stack([rounding.dither_round(xs, c, 11, n) for c in range(4 * n)])
+    err = abs(float(outs.mean()) - float(np.float32(x)))
+    assert err < 0.08, err
+
+
+def test_dither_vs_stochastic_time_averaged_mse():
+    """§VII: dither rounding in time converges faster than stochastic."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (2000,)) * 8.0
+    n = 16
+    d = jnp.stack([rounding.dither_round(x, c, 5, n) for c in range(64)]).mean(0)
+    s = jnp.stack([rounding.stochastic_round(x, 5, c) for c in range(64)]).mean(0)
+    mse_d = float(jnp.mean((d - x) ** 2))
+    mse_s = float(jnp.mean((s - x) ** 2))
+    assert mse_d < mse_s / 2.0, (mse_d, mse_s)
+
+
+@given(seed=st.integers(0, 2**31 - 1), counter=st.integers(0, 10000))
+def test_hash_uniform_range_and_determinism(seed, counter):
+    idx = jnp.arange(128, dtype=jnp.uint32)
+    u1 = rounding.hash_uniform(seed, idx, counter)
+    u2 = rounding.hash_uniform(seed, idx, counter)
+    assert jnp.all(u1 == u2)
+    assert float(u1.min()) >= 0.0 and float(u1.max()) < 1.0
+
+
+@given(n=st.sampled_from([3, 8, 16, 60, 257]))
+def test_lcg_slot_is_permutation(n):
+    """Over one period the slot sequence visits every slot exactly once."""
+    slots = np.asarray(
+        rounding.lcg_slot(jnp.arange(n, dtype=jnp.uint32), 42, n, seed=9))
+    assert sorted(slots.tolist()) == list(range(n))
+
+
+def test_deterministic_round_half_up():
+    assert float(rounding.deterministic_round(jnp.float32(0.5))) == 1.0
+    assert float(rounding.deterministic_round(jnp.float32(-0.5))) == 0.0
+    assert float(rounding.deterministic_round(jnp.float32(2.49))) == 2.0
+
+
+def test_stochastic_round_mean():
+    x = jnp.full((4000,), 1.25, jnp.float32)
+    out = rounding.stochastic_round(x, 3, 0)
+    assert abs(float(out.mean()) - 1.25) < 0.03

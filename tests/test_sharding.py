@@ -1,0 +1,71 @@
+"""Sharding rules: every generated spec must evenly divide its dim on the
+production mesh, for every assigned architecture (param + cache trees)."""
+
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist import sharding as shd
+from repro.models import registry
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axis_size(mesh, entry):
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.axis_sizes))[a]
+    return n
+
+
+def _check(tree_shapes, specs, mesh):
+    flat_s, _ = jax.tree_util.tree_flatten(tree_shapes)
+    flat_p = jax.tree_util.tree_flatten(specs, is_leaf=lambda x: isinstance(x, P))[0]
+    assert len(flat_s) == len(flat_p)
+    for leaf, spec in zip(flat_s, flat_p):
+        assert len(spec) <= leaf.ndim, (leaf.shape, spec)
+        for i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            size = _axis_size(mesh, entry)
+            assert leaf.shape[i] % size == 0, (leaf.shape, spec, i)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [MESH, MESH_MP], ids=["single", "multi"])
+def test_param_specs_divide(arch, mesh):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: registry.init_model(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = shd.param_specs(shapes, cfg, mesh)
+    _check(shapes, specs, mesh)
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "recurrentgemma_9b",
+                                  "mamba2_370m", "whisper_small"])
+def test_cache_specs_divide(arch):
+    cfg = get_config(arch)
+    params = jax.eval_shape(lambda k: registry.init_model(k, cfg),
+                            jax.random.PRNGKey(0))
+    frames = (jax.ShapeDtypeStruct((128, cfg.n_enc_tokens, cfg.d_model),
+                                   "bfloat16") if cfg.is_encdec else None)
+    cache = jax.eval_shape(
+        lambda p, f: registry.make_cache(p, cfg, 128, 32768, frames=f),
+        params, frames)
+    specs = shd.cache_specs(cache, cfg, MESH)
+    _check(cache, specs, MESH)
+
+
+def test_attention_sharding_respects_head_counts():
+    """wq shards only when n_heads % tp == 0; wk/wv only when kv does."""
+    cfg = get_config("granite_3_8b")  # 32 q heads (÷16 ✓), 8 kv heads (✗)
+    shapes = jax.eval_shape(lambda k: registry.init_model(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = shd.param_specs(shapes, cfg, MESH)
+    blk = specs["blocks"][0]["attn"]
+    assert blk["wq"] == P(None, None, "model")
+    assert blk["wk"] == P(None, None, None)   # 8 kv heads can't split 16 ways
+    assert blk["wo"] == P(None, "model", None)
