@@ -1,38 +1,211 @@
-"""Pallas kernel benchmark: block-shape sweep for the fused dither matmul
-(interpret mode on CPU — relative numbers guide BlockSpec choices; absolute
-TPU perf comes from the §Roofline dry-run terms)."""
+"""Pallas kernel benchmark: backend × block-shape sweep with a JSON artifact.
+
+Sweeps the fused dither-matmul and elementwise quantise kernels over the
+dispatcher backends (pallas-interpret / xla-ref on CPU; pallas-tpu on TPU)
+and a tile-size grid from the autotuner's candidate model, checking every
+timed configuration against the kernels/ref.py oracle.  Numbers on CPU are
+relative (interpret mode trades speed for bit-exactness with the TPU path);
+they guide BlockSpec choices and catch regressions — absolute TPU perf comes
+from the §Roofline dry-run terms.
+
+Standalone CLI (emits the perf artifact future PRs diff against):
+
+  PYTHONPATH=src python benchmarks/kernel_bench.py --backend all \
+      [--full] [--autotune] [--out benchmarks/artifacts/kernel_bench.json]
+
+The artifact schema is documented in benchmarks/README.md.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
+
+if __package__ is None or __package__ == "":  # `python benchmarks/kernel_bench.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_root, os.path.join(_root, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import timer
-from repro.kernels import ops as kops, ref
+from repro.kernels import autotune, dispatch, ref
+
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "artifacts", "kernel_bench.json")
+
+ARTIFACT_VERSION = 1
 
 
-def run(full: bool = False):
-    t = timer()
+def _cpu_backends():
+    if jax.default_backend() == "tpu":
+        return ["pallas-tpu", "xla-ref"]
+    return ["pallas-interpret", "xla-ref"]
+
+
+def _time_call(fn, repeats: int = 3) -> float:
+    """Best-of-N wall time in µs (first call compiles, outside the timing)."""
+    fn().block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _matmul_blocks(m: int, k: int, n: int, full: bool):
+    cands = autotune.matmul_candidates(m, k, n)
+    return cands if full else cands[:3]
+
+
+def _quantize_blocks(m: int, n: int, full: bool):
+    cands = autotune.quantize_candidates(m, n)
+    return cands if full else cands[:2]
+
+
+def sweep(full: bool = False, backends=None, do_autotune: bool = False):
+    """Sweep; returns (rows, artifact).  rows = (name, us, derived) for the
+    benchmarks/run.py CSV harness."""
+    backends = backends or _cpu_backends()
     m = k = n = 256 if full else 128
     a = jax.random.uniform(jax.random.PRNGKey(0), (m, k))
     b = jax.random.uniform(jax.random.PRNGKey(1), (k, n))
-    rows = []
     ref_out = ref.dither_matmul_ref(a, b, bits=8, scheme="dither")
-    for blk in [(64, 64, 64), (128, 128, 128), (128, 128, 64)]:
-        t0 = time.time()
-        out = kops.dither_matmul(a, b, bits=8, scheme="dither", block=blk)
-        out.block_until_ready()
-        dt = (time.time() - t0) * 1e6
-        err = float(jnp.max(jnp.abs(out - ref_out)))
-        rows.append((f"kernel_dither_matmul_blk{blk}", dt, f"max_err={err:.1e}"))
-    # elementwise quantize kernel
-    x = jax.random.uniform(jax.random.PRNGKey(2), (512, 512), minval=-1, maxval=1)
-    for blk in [(128, 128), (256, 256)]:
-        t0 = time.time()
-        codes = kops.quantize_2d(x, bits=8, lo=-1, hi=1, scheme="dither", block=blk)
-        codes.block_until_ready()
-        dt = (time.time() - t0) * 1e6
-        rows.append((f"kernel_quantize_blk{blk}", dt, f"mean_code={float(codes.mean()):.1f}"))
+
+    rows, results = [], []
+    for backend in backends:
+        blocks = ([None] if backend == "xla-ref"
+                  else [None] + _matmul_blocks(m, k, n, full))
+        for blk in blocks:
+            out = dispatch.matmul(a, b, bits=8, scheme="dither", block=blk,
+                                  backend=backend)
+            err = float(jnp.max(jnp.abs(out - ref_out)))
+            us = _time_call(lambda: dispatch.matmul(
+                a, b, bits=8, scheme="dither", block=blk, backend=backend))
+            label = "auto" if blk is None else "x".join(map(str, blk))
+            rows.append((f"kernel_matmul[{backend}|blk={label}]", us,
+                         f"max_err={err:.1e}"))
+            results.append({
+                "kernel": "dither_matmul", "backend": backend,
+                "shape": [m, k, n], "bits": 8, "scheme": "dither",
+                "block": list(blk) if blk else None, "us": us,
+                "max_abs_err_vs_ref": err,
+            })
+
+    qm, qn = (512, 512) if full else (256, 256)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (qm, qn), minval=-1, maxval=1)
+    ref_codes = ref.quantize_codes_ref(x, scale=255 / 2, zero=-1, bits=8,
+                                       scheme="dither", counter=0, seed=0,
+                                       n_pulses=16)
+    for backend in backends:
+        blocks = ([None] if backend == "xla-ref"
+                  else [None] + _quantize_blocks(qm, qn, full))
+        for blk in blocks:
+            codes = dispatch.quantize(x, bits=8, lo=-1, hi=1, scheme="dither",
+                                      block=blk, backend=backend)
+            exact = bool(jnp.array_equal(codes, ref_codes))
+            us = _time_call(lambda: dispatch.quantize(
+                x, bits=8, lo=-1, hi=1, scheme="dither", block=blk,
+                backend=backend))
+            label = "auto" if blk is None else "x".join(map(str, blk))
+            rows.append((f"kernel_quantize[{backend}|blk={label}]", us,
+                         f"codes_exact={exact}"))
+            results.append({
+                "kernel": "quantize", "backend": backend, "shape": [qm, qn],
+                "bits": 8, "scheme": "dither",
+                "block": list(blk) if blk else None, "us": us,
+                "codes_exact_vs_ref": exact,
+            })
+
+    winners = {}
+    if do_autotune:
+        for backend in backends:
+            if backend == "xla-ref":
+                continue  # no tiling concept
+            winner, _sweep = autotune.autotune_matmul(
+                m, k, n, bits=8, scheme="dither", backend=backend,
+                repeats=1,
+                run=lambda blk: dispatch.matmul(
+                    a, b, bits=8, scheme="dither", block=tuple(blk),
+                    backend=backend),
+                candidates=_matmul_blocks(m, k, n, full))
+            key = autotune.cache_key("matmul", (m, k, n), "float32", 8,
+                                     "dither", backend)
+            winners[key] = list(winner)
+            rows.append((f"kernel_autotune_matmul[{backend}]", 0.0,
+                         f"winner={'x'.join(map(str, winner))}"))
+            q_winner, _qsweep = autotune.autotune_quantize(
+                qm, qn, bits=8, scheme="dither", backend=backend,
+                repeats=1,
+                run=lambda blk: dispatch.quantize(
+                    x, bits=8, lo=-1, hi=1, scheme="dither",
+                    block=tuple(blk), backend=backend),
+                candidates=_quantize_blocks(qm, qn, full))
+            q_key = autotune.cache_key("quantize", (qm, qn), "float32", 8,
+                                       "dither", backend)
+            winners[q_key] = list(q_winner)
+            rows.append((f"kernel_autotune_quantize[{backend}]", 0.0,
+                         f"winner={'x'.join(map(str, q_winner))}"))
+
+    artifact = {
+        "version": ARTIFACT_VERSION,
+        "generated_by": "benchmarks/kernel_bench.py",
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "unix_time": time.time(),
+        "results": results,
+        "autotune_winners": winners,
+    }
+    return rows, artifact
+
+
+def run(full: bool = False):
+    """benchmarks/run.py harness entry point: rows only (harness prints CSV)."""
+    rows, _ = sweep(full=full)
     return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="default",
+                    help="'all', 'default' (platform pick + reference), or a "
+                         "comma list of dispatcher backend names")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale shapes and the full tile grid")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the measured block sweep and cache winners")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="JSON artifact path ('' to skip writing)")
+    args = ap.parse_args(argv)
+
+    if args.backend == "all":
+        backends = list(dispatch.available_backends())
+        if jax.default_backend() != "tpu":
+            backends.remove("pallas-tpu")  # uncompilable off-TPU
+    elif args.backend == "default":
+        backends = _cpu_backends()
+    else:
+        backends = [dispatch.resolve_backend(b).name
+                    for b in args.backend.split(",")]
+
+    rows, artifact = sweep(full=args.full, backends=backends,
+                           do_autotune=args.autotune)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"wrote {args.out} ({len(artifact['results'])} results)",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

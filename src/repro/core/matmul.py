@@ -12,7 +12,10 @@ Three placements of the rounding operation for C = A·B, A: p×q, B: q×r:
   (pq(r+1) roundings, Figs. 11–12: "the input is only quantised once").
 * ``separate``     — both matrices rounded once, then a plain matmul
   ((p+r)q roundings, Figs. 13–14).  This is the variant that scales to deep
-  learning and is what the LM framework / Pallas kernel use.
+  learning; it routes through the kernel dispatcher (kernels/dispatch.py), so
+  the same call lowers to the fused Pallas kernel on TPU, Pallas interpret
+  mode under CI, or the pure-XLA reference — selected by platform detection,
+  ``backend=``, or $REPRO_KERNEL_BACKEND (DESIGN.md §3).
 
 All math is done on the k-bit integer grid (codes in {0..2^k−1} after affine
 rescale of [lo,hi]) and mapped back, mirroring the paper's "k-bit fixed point
@@ -30,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import rounding
 from repro.core.quantizers import QuantSpec, dequantize, quantize
+from repro.kernels import dispatch
 
 Variant = Literal["per_partial", "round_a_once", "separate"]
 Scheme = Literal["deterministic", "stochastic", "dither"]
@@ -45,25 +49,29 @@ def _codes_expanded(
     counter_on: str,  # 'new_last' (A: counter = output col) | 'new_first' (B: counter = output row)
     n_pulses: int,
     seed: int,
+    counter0=0,
 ) -> jax.Array:
     """Round every *use* of x: expand with a new counter axis of given length.
 
     Returns codes with shape x.shape + (L,) for 'new_last' or (L,) + x.shape
     for 'new_first', where use index along the new axis is the dither/hash
-    counter.  Deterministic rounding collapses to a broadcast (no use-dep).
+    counter, phase-shifted by the global step counter ``counter0`` ("rounding
+    in time" across calls).  Deterministic rounding collapses to a broadcast
+    (no use-dep).
     """
     scaled = (jnp.asarray(x, jnp.float32) - spec.lo) * spec.scale
     fl = jnp.floor(scaled)
     f = scaled - fl
     L = counter_axis_len
+    uses = jnp.arange(L, dtype=jnp.uint32) + rounding._u32(counter0)
 
     if counter_on == "new_last":
         fl_e, f_e = fl[..., None], f[..., None]
-        counter = jnp.arange(L, dtype=jnp.uint32)  # broadcasts against trailing axis
+        counter = uses  # broadcasts against trailing axis
         idx = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)[..., None]
     else:
         fl_e, f_e = fl[None, ...], f[None, ...]
-        counter = jnp.arange(L, dtype=jnp.uint32).reshape((L,) + (1,) * x.ndim)
+        counter = uses.reshape((L,) + (1,) * x.ndim)
         idx = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)[None, ...]
 
     if scheme == "deterministic":
@@ -85,9 +93,6 @@ def _codes_expanded(
     return jnp.clip(codes, 0, spec.levels)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("bits", "scheme", "variant", "lo", "hi")
-)
 def quantized_matmul(
     a: jax.Array,
     b: jax.Array,
@@ -98,33 +103,69 @@ def quantized_matmul(
     seed: int = 0,
     lo: float = 0.0,
     hi: float = 1.0,
+    counter=0,
+    fmt: str = "spread",
+    backend: str | None = None,
 ) -> jax.Array:
     """Compute A·B through a k-bit fixed-point multiplier (paper §VII–§VIII).
 
     Returns Ĉ in the real domain (rescaled back from the code grid).
     Entries of A and B are assumed in [lo, hi].
+
+    The production ``separate`` variant executes on the kernel dispatcher
+    backend selected by ``backend`` / $REPRO_KERNEL_BACKEND / platform
+    detection; the research variants (``per_partial``, ``round_a_once``) are
+    pure-XLA only.  The backend is resolved *outside* the jit cache so an
+    environment override always takes effect.
     """
+    if variant == "separate":
+        # Dispatch directly: the backends jit themselves (nesting a second
+        # jit here would only force a static seed and per-seed recompiles).
+        return dispatch.matmul(
+            a, b, bits=bits, scheme=scheme,
+            counter=jnp.asarray(counter, jnp.int32), seed=seed,
+            a_range=(lo, hi), b_range=(lo, hi), fmt=fmt, backend=backend)
+    return _quantized_matmul_jit(
+        a, b, jnp.asarray(counter, jnp.int32), jnp.asarray(seed, jnp.int32),
+        bits=bits, scheme=scheme, variant=variant, lo=lo, hi=hi)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "scheme", "variant", "lo", "hi"),
+)
+def _quantized_matmul_jit(
+    a: jax.Array,
+    b: jax.Array,
+    counter: jax.Array,
+    seed: jax.Array,
+    *,
+    bits: int,
+    scheme: Scheme,
+    variant: Variant,
+    lo: float,
+    hi: float,
+) -> jax.Array:
+    """The research variants (per_partial / round_a_once); seed and the
+    global counter i_s are traced, so sweeping either never retraces."""
     p, q = a.shape
     q2, r = b.shape
     assert q == q2, (a.shape, b.shape)
     spec = QuantSpec(bits, lo, hi)
 
-    if variant == "separate":
-        ca = quantize(a, spec, scheme, counter=0, seed=seed, n_pulses=max(r, 2),
-                      out_dtype=jnp.float32)
-        cb = quantize(b, spec, scheme, counter=0, seed=seed + 1, n_pulses=max(p, 2),
-                      out_dtype=jnp.float32)
-        cc = ca @ cb
-    elif variant == "round_a_once":
-        ca = quantize(a, spec, scheme, counter=0, seed=seed, n_pulses=max(r, 2),
-                      out_dtype=jnp.float32)
+    if variant == "round_a_once":
+        ca = quantize(a, spec, scheme, counter=counter, seed=seed,
+                      n_pulses=max(r, 2), out_dtype=jnp.float32)
         # B_jk rounded per partial product: counter = output row i, N_B = p.
-        cb = _codes_expanded(b, spec, scheme, p, "new_first", max(p, 2), seed + 1)
+        cb = _codes_expanded(b, spec, scheme, p, "new_first", max(p, 2),
+                             seed + 1, counter0=counter)
         cc = jnp.einsum("ij,ijk->ik", ca, cb)
     elif variant == "per_partial":
         # A_ij rounded per use: counter = output column k, N_A = r.
-        ca = _codes_expanded(a, spec, scheme, r, "new_last", max(r, 2), seed)
-        cb = _codes_expanded(b, spec, scheme, p, "new_first", max(p, 2), seed + 1)
+        ca = _codes_expanded(a, spec, scheme, r, "new_last", max(r, 2), seed,
+                             counter0=counter)
+        cb = _codes_expanded(b, spec, scheme, p, "new_first", max(p, 2),
+                             seed + 1, counter0=counter)
         cc = jnp.einsum("ijk,ijk->ik", ca, cb)
     else:
         raise ValueError(f"unknown variant {variant!r}")
@@ -133,10 +174,7 @@ def quantized_matmul(
     # x ≈ lo + code/s  ⇒  C[i,k] = cc/s² + (lo/s)·(Σ_j ca + Σ_j cb) + q·lo².
     c = cc / (spec.scale * spec.scale)
     if lo != 0.0:
-        if variant == "separate":
-            sum_a = ca.sum(axis=1)[:, None]  # (p,1): Σ_j ca[i,j]
-            sum_b = cb.sum(axis=0)[None, :]  # (1,r): Σ_j cb[j,k]
-        elif variant == "round_a_once":
+        if variant == "round_a_once":
             sum_a = ca.sum(axis=1)[:, None]  # (p,1)
             sum_b = cb.sum(axis=1)           # (p,r): Σ_j cb[i,j,k]
         else:  # per_partial

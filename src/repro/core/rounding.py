@@ -28,6 +28,7 @@ __all__ = [
     "dither_bit",
     "hash_uniform",
     "lcg_slot",
+    "slot_index",
     "DitherState",
 ]
 
@@ -99,6 +100,26 @@ def lcg_slot(counter, idx, n_pulses: int, seed: int = 0) -> jax.Array:
     phase = _mix(idx ^ _u32(seed) ^ _GOLDEN)
     q = (counter + phase) % n
     return (np.uint32(a) * q + (phase >> 8)) % n
+
+
+def slot_index(counter, idx, n_pulses: int, seed: int = 0, fmt: str = "spread") -> jax.Array:
+    """σ(i_s mod N) for either paper pulse format (§II-B / §VI roles).
+
+    ``fmt='spread'`` (Format 2, the default): the LCG permutation σ of
+    ``lcg_slot`` — successive counters jump through the pulse sequence.
+    ``fmt='unary'`` (Format 1): identity σ with a per-element phase —
+    successive counters walk the slots in order.  Both visit every slot
+    exactly once per N counters, so the O(1/N) time-averaged SEM of §VII
+    holds for either; the choice matters when two dithered operands meet
+    (left operand Format 1, right operand Format 2 decorrelates products).
+    """
+    if fmt == "spread":
+        return lcg_slot(counter, idx, n_pulses, seed=seed)
+    if fmt == "unary":
+        counter, idx = _u32(counter), _u32(idx)
+        phase = _mix(idx ^ _u32(seed) ^ _GOLDEN)
+        return (counter + phase) % np.uint32(n_pulses)
+    raise ValueError(f"unknown pulse format {fmt!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,9 @@
+"""Distributed-execution layer: mesh context, sharding rules, fault tolerance.
+
+* ``ctx``             — ambient mesh context; ``constrain`` applies sharding
+  constraints inside a ``mesh_context`` and is a no-op outside it, so model
+  code is mesh-agnostic (CPU tests and TPU production share one code path).
+* ``sharding``        — PartitionSpec rules for param / cache / batch trees
+  (megatron-style TP + DP, guarded by divisibility so any mesh is legal).
+* ``fault_tolerance`` — failure injection, straggler watchdog, restart loop.
+"""

@@ -1,0 +1,125 @@
+"""Ambient mesh context for mesh-agnostic model code.
+
+Layers call ``ctx.constrain(x, ...)`` unconditionally; the call resolves to a
+``with_sharding_constraint`` only when a mesh has been installed with
+``mesh_context`` (launch/train, launch/serve, dry-run), and to identity
+otherwise — so the same model code runs on a single CPU device and on a
+(16, 16) v5e pod without branches at the call sites.
+
+Every constraint entry is validated against the live mesh: axes the mesh
+does not have, and dims the axis size does not divide, degrade to ``None``
+(replicated) instead of erroring.  That is what makes reduced CPU configs
+and ragged head counts safe on any topology.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "mesh_context", "current_mesh", "axis_size", "tp_size", "dp_axes",
+    "dp_shards", "seq_shard_attention", "constrain",
+]
+
+_MESH_STACK: list = []
+
+# DP axes in outer-to-inner order; "model" is the TP axis (launch/mesh.py).
+_DP_AXIS_NAMES = ("pod", "data")
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    """Install ``mesh`` as the ambient mesh for ``constrain`` / size queries."""
+    _MESH_STACK.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def current_mesh():
+    return _MESH_STACK[-1] if _MESH_STACK else None
+
+
+def _mesh_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, getattr(mesh, "axis_sizes", None)
+                    or tuple(mesh.shape[a] for a in mesh.axis_names)))
+
+
+def axis_size(name: str) -> int:
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    return int(_mesh_sizes(mesh).get(name, 1))
+
+
+def tp_size() -> int:
+    """Tensor-parallel width (the 'model' mesh axis; 1 outside a mesh)."""
+    return axis_size("model")
+
+
+def dp_axes():
+    """The data-parallel spec entry: ('pod', 'data') on multi-pod meshes,
+    plain 'data' otherwise.  Usable directly as one PartitionSpec entry."""
+    mesh = current_mesh()
+    if mesh is None:
+        return "data"
+    present = tuple(a for a in _DP_AXIS_NAMES if a in _mesh_sizes(mesh))
+    if not present:
+        return "data"
+    return present if len(present) > 1 else present[0]
+
+
+def dp_shards() -> int:
+    """Total number of data-parallel shards under the current mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    sizes = _mesh_sizes(mesh)
+    return int(math.prod(sizes.get(a, 1) for a in _DP_AXIS_NAMES))
+
+
+def seq_shard_attention(n_heads: int) -> bool:
+    """Sequence-parallel attention: used when TP is on but the (GQA) head
+    count cannot split across the 'model' axis — tokens shard instead and
+    QKV/O weights stay replicated (dist/sharding.py emits the matching
+    replicated specs)."""
+    tp = tp_size()
+    return tp > 1 and n_heads % tp != 0
+
+
+def _validated_entry(entry, dim: int, sizes: dict):
+    """Keep a spec entry only if all its axes exist and their product divides
+    the dim; otherwise replicate that dim."""
+    if entry is None:
+        return None
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    if any(a not in sizes for a in axes):
+        return None
+    size = math.prod(int(sizes[a]) for a in axes)
+    if size <= 1 or dim % size != 0:
+        return None
+    return entry
+
+
+def constrain(x: jax.Array, *entries) -> jax.Array:
+    """``with_sharding_constraint(x, P(*entries))`` under the ambient mesh;
+    identity when no mesh is installed (or the mesh is a single device).
+
+    One entry per dim of ``x``; each entry is an axis name, a tuple of axis
+    names, or None.  Invalid entries (absent axis / non-dividing size)
+    degrade to None per dim rather than erroring.
+    """
+    mesh = current_mesh()
+    if mesh is None or mesh.size <= 1:
+        return x
+    sizes = _mesh_sizes(mesh)
+    spec = tuple(
+        _validated_entry(e, d, sizes) for e, d in zip(entries, x.shape)
+    )
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,80 @@
+"""Fault tolerance for long training runs: failure injection (tests/chaos),
+a straggler watchdog, and the restart-from-checkpoint driver loop.
+
+The training loop (launch/train.py) calls ``injector.maybe_fail(step, phase)``
+at its failure points; ``run_with_restarts`` re-enters the loop after a crash
+and the loop resumes from the latest checkpoint — the recovery contract
+tests/test_fault_tolerance.py pins down.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Set, Tuple
+
+__all__ = [
+    "InjectedFailure", "FailureInjector", "StragglerWatchdog",
+    "run_with_restarts",
+]
+
+
+class InjectedFailure(RuntimeError):
+    """A deliberately injected crash (never raised in production runs)."""
+
+
+class FailureInjector:
+    """Crashes the run at configured (step, phase) points, once per point.
+
+    ``crash_at`` maps step → phase name ('before_save' / 'after_save').
+    ``fired`` records points that already crashed so a resumed run sails
+    past them — the restart-converges contract.
+    """
+
+    def __init__(self, crash_at: Optional[Dict[int, str]] = None):
+        self.crash_at: Dict[int, str] = dict(crash_at or {})
+        self.fired: Set[Tuple[int, str]] = set()
+
+    def maybe_fail(self, step: int, phase: str) -> None:
+        if self.crash_at.get(step) == phase and (step, phase) not in self.fired:
+            self.fired.add((step, phase))
+            raise InjectedFailure(f"injected failure at step {step} ({phase})")
+
+
+class StragglerWatchdog:
+    """Flags steps whose wall time exceeds ``threshold`` × the running mean.
+
+    Flagged steps are excluded from the baseline so one straggler does not
+    mask the next.  The first ``warmup`` observations only build the baseline.
+    """
+
+    def __init__(self, threshold: float = 3.0, warmup: int = 3):
+        self.threshold = float(threshold)
+        self.warmup = int(warmup)
+        self._times: list = []
+        self.flagged: Set[int] = set()
+
+    def observe(self, step: int, seconds: float) -> bool:
+        baseline_ready = len(self._times) >= self.warmup
+        if baseline_ready:
+            mean = sum(self._times) / len(self._times)
+            if seconds > self.threshold * mean:
+                self.flagged.add(step)
+                return True
+        self._times.append(seconds)
+        return False
+
+
+def run_with_restarts(loop: Callable[[int], object], max_restarts: int = 3):
+    """Run ``loop(restart_idx)`` to completion, restarting after crashes.
+
+    Returns the loop's result.  After ``max_restarts`` failed restarts the
+    last exception is chained into a RuntimeError (unrecoverable job).
+    """
+    last_exc: Optional[BaseException] = None
+    for restart_idx in range(max_restarts + 1):
+        try:
+            return loop(restart_idx)
+        except Exception as exc:  # noqa: BLE001 — any crash triggers a restart
+            last_exc = exc
+    raise RuntimeError(
+        f"job failed after {max_restarts} restarts"
+    ) from last_exc

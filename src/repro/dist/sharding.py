@@ -1,0 +1,168 @@
+"""PartitionSpec rules for param / cache / batch pytrees.
+
+Megatron-style layout on a ('data', 'model') mesh (optionally with a leading
+'pod' DP axis):
+
+* attention — QKV column-parallel, O row-parallel, keyed on *head counts*:
+  ``wq``/``wo`` shard only when ``n_heads % tp == 0`` and ``wk``/``wv`` only
+  when ``n_kv_heads % tp == 0`` (GQA head counts often don't divide the TP
+  axis; the attention layer then falls back to sequence parallelism —
+  ``ctx.seq_shard_attention``).
+* MLP / MoE experts — up/gate column-parallel (last dim), down row-parallel
+  (second-to-last dim).
+* embeddings — vocab-parallel (the vocab dim is padded to the TP axis by
+  ``ModelConfig.vocab_padded``).
+* everything else (norms, biases on d_model, routers, SSM scan params) —
+  replicated: small, or accuracy-critical (DESIGN.md §5).
+
+Every emitted entry is divisibility-guarded against the concrete mesh, so
+any (arch × mesh) combination yields a legal spec tree: a dim that does not
+divide simply stays replicated.  Specs are emitted at the leaf's full rank
+(explicit ``None`` per dim) and mirror the param tree structurally.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_specs", "cache_specs", "batch_specs", "data_axes"]
+
+_DP_AXIS_NAMES = ("pod", "data")
+
+# leaf-name → (which dim shards on 'model' counted from the END, head-count
+# attribute guarding it or None for plain dim divisibility)
+_LAST, _SECOND_LAST = 1, 2
+_TP_RULES = {
+    # attention projections (head-count guarded)
+    "wq": (_LAST, "n_heads"),
+    "bq": (_LAST, "n_heads"),
+    "wk": (_LAST, "n_kv_heads"),
+    "wv": (_LAST, "n_kv_heads"),
+    "bk": (_LAST, "n_kv_heads"),
+    "bv": (_LAST, "n_kv_heads"),
+    "wo": (_SECOND_LAST, "n_heads"),
+    # MLP / MoE expert FFNs: column-parallel up/gate, row-parallel down
+    "wg": (_LAST, None),
+    "wu": (_LAST, None),
+    "bu": (_LAST, None),
+    "wd": (_SECOND_LAST, None),
+    # SSM fused input projection is column-parallel; output row-parallel
+    "in_proj": (_LAST, None),
+    "out_proj": (_SECOND_LAST, None),
+    # vocab-parallel embedding / head: embed is (vocab, d), head is (d, vocab)
+    "embed": (_SECOND_LAST, None),
+    "lm_head": (_LAST, None),
+}
+
+
+def _mesh_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, getattr(mesh, "axis_sizes", None)
+                    or tuple(mesh.shape[a] for a in mesh.axis_names)))
+
+
+def data_axes(mesh):
+    """The DP spec entry for this mesh: ('pod', 'data'), 'data', or None."""
+    present = tuple(a for a in _DP_AXIS_NAMES if a in _mesh_sizes(mesh))
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def _validated(spec: P, shape, mesh) -> P:
+    """Clamp a spec to a concrete leaf shape on a concrete mesh: entries past
+    the rank are dropped; absent axes and non-dividing sizes become None."""
+    sizes = _mesh_sizes(mesh)
+    out = []
+    for i, entry in enumerate(tuple(spec)[: len(shape)]):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        if any(a not in sizes for a in axes):
+            out.append(None)
+            continue
+        size = math.prod(int(sizes[a]) for a in axes)
+        out.append(entry if size > 1 and shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def _leaf_name(path) -> str:
+    for key in reversed(path):
+        if isinstance(key, jax.tree_util.DictKey):
+            return str(key.key)
+    return ""
+
+
+def _replicated(ndim: int) -> P:
+    return P(*((None,) * ndim))
+
+
+def param_specs(params: Any, cfg, mesh) -> Any:
+    """Spec tree mirroring ``params`` (leaves may be arrays or ShapeDtypeStructs)."""
+    tp = int(_mesh_sizes(mesh).get("model", 1))
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        name = _leaf_name(path)
+        if name in _TP_RULES:
+            from_end, head_attr = _TP_RULES[name]
+            if from_end <= len(shape):
+                dim = len(shape) - from_end
+                guard = (getattr(cfg, head_attr) if head_attr else shape[dim])
+                if tp > 1 and guard % tp == 0 and shape[dim] % tp == 0:
+                    spec = [None] * len(shape)
+                    spec[dim] = "model"
+                    return P(*spec)
+            return _replicated(len(shape))
+        return _replicated(len(shape))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def cache_specs(cache: Any, cfg, mesh) -> Any:
+    """Spec tree for decode caches: batch dim → DP axes, KV/SSM head dim →
+    'model' (both divisibility-guarded)."""
+    sizes = _mesh_sizes(mesh)
+    dp = data_axes(mesh)
+    dp_axes_tuple = dp if isinstance(dp, tuple) else ((dp,) if dp else ())
+    dp_size = math.prod(int(sizes[a]) for a in dp_axes_tuple) if dp_axes_tuple else 1
+    tp = int(sizes.get("model", 1))
+
+    # cache leaves whose dim 2 is a (KV or state) head dim: (B, S, H, hd) KV,
+    # quantised KV scales, and cross-attention caches; SSM state "h" carries
+    # heads at dim 1: (B, nh, hd, n).
+    heads_at_2 = {"k", "v", "k_scale", "v_scale", "cross_k", "cross_v"}
+    heads_at_1 = {"h"}
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        name = _leaf_name(path)
+        spec = [None] * len(shape)
+        if dp and dp_size > 1 and shape[0] % dp_size == 0:
+            spec[0] = dp
+        head_dim = (2 if name in heads_at_2 else 1 if name in heads_at_1 else None)
+        if (head_dim is not None and head_dim < len(shape) and tp > 1
+                and shape[head_dim] % tp == 0):
+            spec[head_dim] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def batch_specs(cfg, mesh) -> dict:
+    """Specs for training/prefill batches: batch dim on the DP axes."""
+    dp = data_axes(mesh)
+    return {
+        "tokens": P(dp, None),
+        "labels": P(dp, None),
+        "embeds": P(dp, None, None),
+        "frames": P(dp, None, None),
+    }

@@ -2,4 +2,10 @@
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
 ref.py (pure-jnp oracle, bit-exact).
+
+``dispatch.py`` is the public entry layer: a backend registry (pallas-tpu /
+pallas-interpret / xla-ref) with platform detection and explicit override,
+fed tile shapes by the ``autotune.py`` block-size autotuner (DESIGN.md §3).
+Callers — core/matmul, numerics/policy, train, serve — go through dispatch
+rather than importing kernels directly.
 """

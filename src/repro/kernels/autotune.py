@@ -1,0 +1,235 @@
+"""Block-size autotuner for the Pallas kernels (DESIGN.md §3).
+
+Two modes, both keyed by ``(kind, M, K, N, dtype, bits, scheme, backend)``:
+
+* **model-driven pick** (``best_block``) — no execution: enumerate (bm, bn,
+  bk) candidates aligned to the TPU f32 tile (8, 128) and the 128×128 MXU,
+  reject those whose working set exceeds the VMEM budget (double-buffered
+  operand tiles + f32 accumulator + cross-term sums), and pick the largest
+  surviving tile (fewest grid steps → best MXU occupancy).  This is what the
+  dispatcher uses when no measurement is cached, so the hot path never pays
+  a tuning cost it didn't ask for.
+* **measured sweep** (``autotune_matmul`` / ``autotune_quantize``) — time
+  each candidate via a caller-supplied runner and cache the winner, in
+  memory and (when ``REPRO_AUTOTUNE_CACHE`` names a JSON file) on disk, so
+  one tuning run amortises across processes.  ``benchmarks/kernel_bench.py``
+  is the normal driver and emits the sweep as a JSON perf artifact.
+
+The runner indirection keeps this module free of a dispatch import (dispatch
+imports us for ``best_block``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "VMEM_BUDGET_BYTES",
+    "matmul_vmem_bytes", "quantize_vmem_bytes",
+    "matmul_candidates", "quantize_candidates",
+    "best_block", "autotune_matmul", "autotune_quantize",
+    "cache_key", "load_cache", "save_cache", "clear_cache",
+]
+
+# v5e VMEM is ~16 MiB/core; leave headroom for the compiler's own buffers.
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+_VMEM_USABLE_FRACTION = 0.75
+
+# TPU f32 native tile and MXU edge (pallas_guide: sublane×lane = 8×128).
+_SUBLANE, _LANE = 8, 128
+
+_F32 = 4
+
+
+def matmul_vmem_bytes(block: Tuple[int, int, int]) -> int:
+    """Working-set model for the fused matmul kernel at one grid step:
+    double-buffered A (bm, bk) and B (bk, bn) input tiles, the f32
+    accumulator + output tile (bm, bn), and the affine-zero cross-term rows
+    and columns.  Quantised codes are produced in registers (f32-valued),
+    modelled as one extra copy of each operand tile."""
+    bm, bn, bk = block
+    a_tile = bm * bk * _F32
+    b_tile = bk * bn * _F32
+    acc = bm * bn * _F32
+    out = bm * bn * _F32
+    sums = (bm + bn) * _F32
+    codes = a_tile + b_tile
+    return 2 * (a_tile + b_tile) + acc + out + sums + codes
+
+
+def quantize_vmem_bytes(block: Tuple[int, int]) -> int:
+    """Elementwise kernel: double-buffered f32 input and int32 output tiles."""
+    bm, bn = block
+    return 2 * (bm * bn * _F32) * 2
+
+
+def _tile_sizes(dim: int, quantum: int, ceiling: int) -> List[int]:
+    """Power-of-two multiples of ``quantum`` up to min(dim, ceiling), falling
+    back to the (smaller) dim itself so CPU-scale shapes stay tunable."""
+    sizes = []
+    t = quantum
+    while t <= min(dim, ceiling):
+        sizes.append(t)
+        t *= 2
+    if not sizes:
+        sizes.append(dim)
+    return sizes
+
+
+def matmul_candidates(m: int, k: int, n: int) -> List[Tuple[int, int, int]]:
+    """(bm, bn, bk) candidates under the VMEM budget, MXU/f32-tile aligned
+    when the shape allows it."""
+    budget = VMEM_BUDGET_BYTES * _VMEM_USABLE_FRACTION
+    cands = []
+    for bm in _tile_sizes(m, _SUBLANE * 4, 512):
+        for bn in _tile_sizes(n, _LANE, 512):
+            for bk in _tile_sizes(k, _LANE, 1024):
+                if matmul_vmem_bytes((bm, bn, bk)) <= budget:
+                    cands.append((bm, bn, bk))
+    return cands
+
+
+def quantize_candidates(m: int, n: int) -> List[Tuple[int, int]]:
+    budget = VMEM_BUDGET_BYTES * _VMEM_USABLE_FRACTION
+    return [
+        (bm, bn)
+        for bm in _tile_sizes(m, _SUBLANE * 4, 1024)
+        for bn in _tile_sizes(n, _LANE, 1024)
+        if quantize_vmem_bytes((bm, bn)) <= budget
+    ]
+
+
+# ---------------------------------------------------------------------------
+# winner cache: in-memory dict, optionally persisted to a JSON file
+# ---------------------------------------------------------------------------
+
+_CACHE: Dict[str, tuple] = {}
+_CACHE_LOADED_FROM: Optional[str] = None
+
+
+def cache_key(kind: str, shape: tuple, dtype, bits: int, scheme: str,
+              backend: str) -> str:
+    return "|".join([kind, "x".join(map(str, shape)), str(dtype), str(bits),
+                     scheme, backend])
+
+
+def _cache_path() -> Optional[str]:
+    return os.environ.get("REPRO_AUTOTUNE_CACHE") or None
+
+
+def load_cache(path: Optional[str] = None) -> Dict[str, tuple]:
+    """Merge the JSON winner cache at ``path`` (or $REPRO_AUTOTUNE_CACHE)
+    into the in-memory cache.  Missing/corrupt files are treated as empty."""
+    global _CACHE_LOADED_FROM
+    path = path or _cache_path()
+    if path and os.path.exists(path):
+        try:
+            with open(path) as f:
+                _CACHE.update({k: tuple(v) for k, v in json.load(f).items()})
+            _CACHE_LOADED_FROM = path
+        except (OSError, ValueError):
+            pass
+    return _CACHE
+
+
+def save_cache(path: Optional[str] = None) -> Optional[str]:
+    path = path or _cache_path()
+    if not path:
+        return None
+    # merge-write: winners persisted by other processes survive, this
+    # process's entries win on key conflicts
+    merged: Dict[str, list] = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged.update(json.load(f))
+        except (OSError, ValueError):
+            pass
+    merged.update({k: list(v) for k, v in _CACHE.items()})
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(dict(sorted(merged.items())), f, indent=1)
+    return path
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def best_block(kind: str, shape: tuple, dtype, bits: int, scheme: str,
+               backend: str):
+    """Cached winner if a sweep ran for this key; otherwise the model-driven
+    pick: the largest candidate under the VMEM budget (ties → larger bk for
+    matmul, i.e. fewest sequential grid steps per output tile)."""
+    if _cache_path() and _CACHE_LOADED_FROM != _cache_path():
+        load_cache()
+    hit = _CACHE.get(cache_key(kind, shape, dtype, bits, scheme, backend))
+    if hit is not None:
+        return tuple(hit)
+    if kind == "matmul":
+        m, k, n = shape
+        cands = matmul_candidates(m, k, n)
+        return max(cands, key=lambda b: (b[0] * b[1] * b[2], b[2]))
+    if kind == "quantize":
+        m, n = shape
+        return max(quantize_candidates(m, n), key=lambda b: b[0] * b[1])
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# measured sweeps
+# ---------------------------------------------------------------------------
+
+
+def _time_block(run: Callable[[tuple], object], block: tuple,
+                repeats: int) -> float:
+    run(block)  # compile / warm up outside the timed region
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = run(block)
+        getattr(out, "block_until_ready", lambda: None)()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _sweep(kind: str, shape: tuple, dtype, bits: int, scheme: str,
+           backend: str, candidates: List[tuple],
+           run: Callable[[tuple], object], repeats: int):
+    results = []
+    for block in candidates:
+        try:
+            dt = _time_block(run, block, repeats)
+        except Exception:  # noqa: BLE001 — an illegal tiling just loses the sweep
+            continue
+        results.append({"block": list(block), "seconds": dt})
+    if not results:
+        raise RuntimeError(f"no runnable {kind} block candidate for {shape}")
+    results.sort(key=lambda r: r["seconds"])
+    winner = tuple(results[0]["block"])
+    _CACHE[cache_key(kind, shape, dtype, bits, scheme, backend)] = winner
+    save_cache()
+    return winner, results
+
+
+def autotune_matmul(m: int, k: int, n: int, *, bits: int, scheme: str,
+                    backend: str, run: Callable[[tuple], object],
+                    dtype="float32", repeats: int = 2,
+                    candidates: Optional[List[tuple]] = None):
+    """Measure ``run(block)`` over the candidate set, cache and return the
+    winner.  Returns (winner_block, per-candidate results sorted by time)."""
+    cands = candidates or matmul_candidates(m, k, n)
+    return _sweep("matmul", (m, k, n), dtype, bits, scheme, backend, cands,
+                  run, repeats)
+
+
+def autotune_quantize(m: int, n: int, *, bits: int, scheme: str, backend: str,
+                      run: Callable[[tuple], object], dtype="float32",
+                      repeats: int = 2,
+                      candidates: Optional[List[tuple]] = None):
+    cands = candidates or quantize_candidates(m, n)
+    return _sweep("quantize", (m, n), dtype, bits, scheme, backend, cands,
+                  run, repeats)

@@ -1,0 +1,240 @@
+"""Kernel backend registry + dispatch (DESIGN.md §3).
+
+One entry point per hot-path kernel — ``matmul`` (the fused §VIII 'separate'
+quantise+multiply) and ``quantize`` (elementwise codes) — routed to one of
+three interchangeable backends:
+
+* ``pallas-tpu``       — the compiled Pallas kernels (real TPU).
+* ``pallas-interpret`` — the *same* kernel bodies evaluated in Pallas
+  interpret mode; slow, but bit-exact with pallas-tpu, so CPU CI exercises
+  the production code path (the parity tests in tests/test_dispatch.py).
+* ``xla-ref``          — the pure-jnp oracles from kernels/ref.py lowered by
+  XLA; the fast CPU path and the correctness anchor all backends must match.
+
+Selection: an explicit ``backend=`` argument wins, then the
+``REPRO_KERNEL_BACKEND`` environment variable, then platform detection
+(TPU → pallas-tpu, anything else → xla-ref).  The aliases ``auto`` and
+``pallas`` resolve the same way (``pallas`` insists on a Pallas backend:
+interpret mode off-TPU).  All schemes share one PRNG contract — codes are a
+stateless hash of (seed, element index, counter) — so switching backends
+never changes results, only speed.
+
+When no ``block`` is given, Pallas backends ask the autotuner: a cached
+measured winner if one exists for (shape, dtype, bits, scheme, backend),
+else the VMEM-budget model pick (kernels/autotune.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune, ref
+from repro.kernels import ops as kops
+
+__all__ = [
+    "KernelBackend", "register_backend", "available_backends",
+    "resolve_backend", "resolve_policy_backend", "matmul", "quantize",
+    "DEFAULT_CPU_BACKEND",
+]
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+DEFAULT_CPU_BACKEND = "xla-ref"
+
+
+@dataclass(frozen=True)
+class KernelBackend:
+    """A named implementation of the two hot-path kernels.
+
+    ``matmul(a, b, *, bits, scheme, counter, seed, a_range, b_range, fmt,
+    block)`` → (M, N) f32;  ``quantize(x, *, bits, lo, hi, scheme, counter,
+    seed, n_pulses, fmt, block)`` → (M, N) int32 codes.  ``block`` may be
+    ignored by backends without a tiling concept (xla-ref).
+    """
+
+    name: str
+    matmul: Callable
+    quantize: Callable
+
+
+_REGISTRY: dict = {}
+
+
+def register_backend(backend: KernelBackend) -> KernelBackend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+
+def _make_pallas(name: str, interpret: bool) -> KernelBackend:
+    def _matmul(a, b, *, bits, scheme, counter, seed, a_range, b_range, fmt,
+                block):
+        return kops.dither_matmul(
+            a, b, bits=bits, scheme=scheme, counter=counter, seed=seed,
+            a_range=a_range, b_range=b_range, fmt=fmt, block=block,
+            interpret=interpret)
+
+    def _quantize(x, *, bits, lo, hi, scheme, counter, seed, n_pulses, fmt,
+                  block):
+        return kops.quantize_2d(
+            x, bits=bits, lo=lo, hi=hi, scheme=scheme, counter=counter,
+            seed=seed, n_pulses=n_pulses, fmt=fmt, block=block,
+            interpret=interpret)
+
+    return register_backend(KernelBackend(name, _matmul, _quantize))
+
+
+def _make_xla_ref() -> KernelBackend:
+    # jit the oracle so xla-ref is the *fast* CPU path, not an eager one;
+    # counter AND seed stay traced (the hash PRNG takes them as data), so
+    # seed sweeps never recompile
+    @functools.partial(jax.jit, static_argnames=(
+        "bits", "scheme", "a_range", "b_range", "fmt"))
+    def _matmul_jit(a, b, counter, seed, *, bits, scheme, a_range, b_range,
+                    fmt):
+        return ref.dither_matmul_ref(
+            a.astype(jnp.float32), b.astype(jnp.float32), bits=bits,
+            scheme=scheme, a_range=a_range, b_range=b_range,
+            counter=counter, seed=seed, fmt=fmt)
+
+    def _matmul(a, b, *, bits, scheme, counter, seed, a_range, b_range, fmt,
+                block):
+        del block  # XLA fuses; no explicit tiling
+        return _matmul_jit(a, b, jnp.asarray(counter, jnp.int32),
+                           jnp.asarray(seed, jnp.int32), bits=bits,
+                           scheme=scheme, a_range=a_range, b_range=b_range,
+                           fmt=fmt)
+
+    @functools.partial(jax.jit, static_argnames=(
+        "bits", "lo", "hi", "scheme", "n_pulses", "fmt"))
+    def _quantize_jit(x, counter, seed, *, bits, lo, hi, scheme, n_pulses,
+                      fmt):
+        scale = ((1 << bits) - 1) / (hi - lo)
+        return ref.quantize_codes_ref(
+            x.astype(jnp.float32), scale=scale, zero=lo, bits=bits,
+            scheme=scheme, counter=counter, seed=seed, n_pulses=n_pulses,
+            fmt=fmt)
+
+    def _quantize(x, *, bits, lo, hi, scheme, counter, seed, n_pulses, fmt,
+                  block):
+        del block
+        return _quantize_jit(x, jnp.asarray(counter, jnp.int32),
+                             jnp.asarray(seed, jnp.int32), bits=bits,
+                             lo=lo, hi=hi, scheme=scheme, n_pulses=n_pulses,
+                             fmt=fmt)
+
+    return register_backend(KernelBackend("xla-ref", _matmul, _quantize))
+
+
+_make_pallas("pallas-tpu", interpret=False)
+_make_pallas("pallas-interpret", interpret=True)
+_make_xla_ref()
+
+
+# ---------------------------------------------------------------------------
+# selection
+# ---------------------------------------------------------------------------
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(name: Optional[str] = None) -> KernelBackend:
+    """Explicit name > $REPRO_KERNEL_BACKEND > platform detection.
+
+    Aliases: ``auto`` → pallas-tpu on TPU else the fast CPU reference;
+    ``pallas`` → pallas-tpu on TPU else pallas-interpret; ``ref`` → xla-ref.
+    """
+    if name is None or name == "auto":
+        # 'auto' (and unset) defer to the environment before the platform
+        # pick, so $REPRO_KERNEL_BACKEND redirects policy-driven call sites
+        # (QuantPolicy.resolved passes 'auto' explicitly).
+        name = os.environ.get(ENV_VAR) or "auto"
+    if name == "auto":
+        name = "pallas-tpu" if _on_tpu() else DEFAULT_CPU_BACKEND
+    elif name == "pallas":
+        name = "pallas-tpu" if _on_tpu() else "pallas-interpret"
+    elif name == "ref":
+        name = "xla-ref"
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def resolve_policy_backend(name: str) -> str:
+    """QuantPolicy.backend resolution: 'jnp' (the unfused fake-quant path)
+    passes through; everything else resolves to a concrete backend name."""
+    if name == "jnp":
+        return name
+    return resolve_backend(name).name
+
+
+# ---------------------------------------------------------------------------
+# dispatch entry points
+# ---------------------------------------------------------------------------
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bits: int,
+    scheme: str = "dither",
+    counter=0,
+    seed: int = 0,
+    a_range: tuple = (0.0, 1.0),
+    b_range: tuple = (0.0, 1.0),
+    fmt: str = "spread",
+    block: Optional[tuple] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Quantised A @ B through the selected backend (§VIII 'separate')."""
+    be = resolve_backend(backend)
+    if block is None and be.name.startswith("pallas"):
+        (m, k), (_, n) = a.shape, b.shape
+        block = autotune.best_block("matmul", (m, k, n), str(a.dtype), bits,
+                                    scheme, be.name)
+    return be.matmul(a, b, bits=bits, scheme=scheme, counter=counter,
+                     seed=seed, a_range=a_range, b_range=b_range, fmt=fmt,
+                     block=block)
+
+
+def quantize(
+    x: jax.Array,
+    *,
+    bits: int,
+    lo: float = 0.0,
+    hi: float = 1.0,
+    scheme: str = "dither",
+    counter=0,
+    seed: int = 0,
+    n_pulses: int = 16,
+    fmt: str = "spread",
+    block: Optional[tuple] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """k-bit integer codes of ``x`` through the selected backend."""
+    be = resolve_backend(backend)
+    if block is None and be.name.startswith("pallas"):
+        block = autotune.best_block("quantize", x.shape, str(x.dtype), bits,
+                                    scheme, be.name)
+    return be.quantize(x, bits=bits, lo=lo, hi=hi, scheme=scheme,
+                       counter=counter, seed=seed, n_pulses=n_pulses, fmt=fmt,
+                       block=block)

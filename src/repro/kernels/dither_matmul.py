@@ -29,8 +29,11 @@ from repro.core import rounding
 
 __all__ = ["dither_matmul_kernel_call"]
 
+# renamed TPUCompilerParams -> CompilerParams across jax versions
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-def _quantize_tile(x, row0, col0, n_cols, *, scale, zero, bits, scheme, seed, n_pulses, counter):
+
+def _quantize_tile(x, row0, col0, n_cols, *, scale, zero, bits, scheme, seed, n_pulses, fmt, counter):
     """Quantise one VMEM tile to codes (f32-valued integers, clipped)."""
     bm, bn = x.shape
     scaled = (x - zero) * scale
@@ -45,7 +48,7 @@ def _quantize_tile(x, row0, col0, n_cols, *, scale, zero, bits, scheme, seed, n_
         u = rounding.hash_uniform(seed, idx, counter)
         codes = fl + (u < f).astype(jnp.float32)
     elif scheme == "dither":
-        slot = rounding.lcg_slot(counter, idx, n_pulses, seed=seed)
+        slot = rounding.slot_index(counter, idx, n_pulses, seed=seed, fmt=fmt)
         u = rounding.hash_uniform(seed ^ 0xD1CE, idx, counter)
         codes = fl + rounding.dither_bit(f, slot, u, n_pulses)
     else:
@@ -74,6 +77,7 @@ def _matmul_body(
     b_cols: int,
     n_pulses_a: int,
     n_pulses_b: int,
+    fmt: str,
     block: tuple,
 ):
     bm, bn, bk = block
@@ -90,12 +94,12 @@ def _matmul_body(
     ca = _quantize_tile(
         a_ref[...], i * bm, k * bk, a_cols,
         scale=sa, zero=a_zero, bits=bits, scheme=scheme, seed=seed,
-        n_pulses=n_pulses_a, counter=counter,
+        n_pulses=n_pulses_a, fmt=fmt, counter=counter,
     )
     cb = _quantize_tile(
         b_ref[...], k * bk, j * bn, b_cols,
         scale=sb, zero=b_zero, bits=bits, scheme=scheme, seed=seed + 1,
-        n_pulses=n_pulses_b, counter=counter,
+        n_pulses=n_pulses_b, fmt=fmt, counter=counter,
     )
     acc_ref[...] += jax.lax.dot(
         ca, cb, precision=jax.lax.Precision.HIGHEST,
@@ -117,8 +121,8 @@ def _matmul_body(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "bits", "scheme", "seed", "a_range", "b_range", "block", "interpret",
-        "true_shape",
+        "bits", "scheme", "seed", "a_range", "b_range", "fmt", "block",
+        "interpret", "true_shape",
     ),
 )
 def dither_matmul_kernel_call(
@@ -131,6 +135,7 @@ def dither_matmul_kernel_call(
     seed: int = 0,
     a_range: tuple = (0.0, 1.0),
     b_range: tuple = (0.0, 1.0),
+    fmt: str = "spread",
     block: tuple = (256, 256, 512),
     interpret: bool = True,
     true_shape: tuple | None = None,
@@ -158,7 +163,7 @@ def dither_matmul_kernel_call(
         a_zero=a_range[0], b_zero=b_range[0], k_total=tk,
         a_cols=tk, b_cols=tn,
         n_pulses_a=max(tn, 2), n_pulses_b=max(tm, 2),
-        block=(bm, bn, bk),
+        fmt=fmt, block=(bm, bn, bk),
     )
     return pl.pallas_call(
         body,
@@ -175,7 +180,7 @@ def dither_matmul_kernel_call(
             pltpu.VMEM((bm, 1), jnp.float32),
             pltpu.VMEM((1, bn), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -40,6 +40,7 @@ def quantize_2d(
     counter=0,
     seed: int = 0,
     n_pulses: int = 16,
+    fmt: str = "spread",
     block: tuple = (256, 256),
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -56,7 +57,7 @@ def quantize_2d(
     # tests; statistically the index is just a PRNG stream id.
     codes = quantize_kernel_call(
         xp, counter, scale=scale, zero=lo, bits=bits, scheme=scheme,
-        seed=seed, n_pulses=n_pulses, block=block, interpret=interpret,
+        seed=seed, n_pulses=n_pulses, fmt=fmt, block=block, interpret=interpret,
     )
     return codes[:m, :n]
 
@@ -71,6 +72,7 @@ def dither_matmul(
     seed: int = 0,
     a_range: tuple = (0.0, 1.0),
     b_range: tuple = (0.0, 1.0),
+    fmt: str = "spread",
     block: tuple = (256, 256, 512),
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -97,7 +99,7 @@ def dither_matmul(
     counter = jnp.asarray(counter, jnp.int32).reshape(1, 1)
     out = dither_matmul_kernel_call(
         ap, bp, counter, bits=bits, scheme=scheme, seed=seed,
-        a_range=a_range, b_range=b_range, block=(bm, bn, bk),
+        a_range=a_range, b_range=b_range, fmt=fmt, block=(bm, bn, bk),
         interpret=interpret, true_shape=(m, k, n),
     )
     return out[:m, :n]

@@ -38,6 +38,7 @@ def _quantize_body(
     scheme: str,
     seed: int,
     n_pulses: int,
+    fmt: str,
     n_cols: int,
     block: tuple,
 ):
@@ -63,7 +64,7 @@ def _quantize_body(
         u = rounding.hash_uniform(seed, idx, counter)
         codes = fl + (u < f).astype(jnp.float32)
     elif scheme == "dither":
-        slot = rounding.lcg_slot(counter, idx, n_pulses, seed=seed)
+        slot = rounding.slot_index(counter, idx, n_pulses, seed=seed, fmt=fmt)
         u = rounding.hash_uniform(seed ^ 0xD1CE, idx, counter)
         codes = fl + rounding.dither_bit(f, slot, u, n_pulses)
     else:
@@ -76,7 +77,8 @@ def _quantize_body(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "scale", "zero", "bits", "scheme", "seed", "n_pulses", "block", "interpret",
+        "scale", "zero", "bits", "scheme", "seed", "n_pulses", "fmt", "block",
+        "interpret",
     ),
 )
 def quantize_kernel_call(
@@ -89,6 +91,7 @@ def quantize_kernel_call(
     scheme: str = "dither",
     seed: int = 0,
     n_pulses: int = 16,
+    fmt: str = "spread",
     block: tuple = (256, 256),
     interpret: bool = True,
 ) -> jax.Array:
@@ -105,7 +108,7 @@ def quantize_kernel_call(
     body = functools.partial(
         _quantize_body,
         scale=scale, zero=zero, bits=bits, scheme=scheme, seed=seed,
-        n_pulses=n_pulses, n_cols=n, block=(bm, bn),
+        n_pulses=n_pulses, fmt=fmt, n_cols=n, block=(bm, bn),
     )
     return pl.pallas_call(
         body,

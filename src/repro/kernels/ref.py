@@ -37,6 +37,7 @@ def quantize_codes_ref(
     counter: int,
     seed: int,
     n_pulses: int,
+    fmt: str = "spread",
 ) -> jax.Array:
     """Quantise a 2-D tensor to k-bit integer codes with the given rounding.
 
@@ -57,7 +58,7 @@ def quantize_codes_ref(
         codes = fl + (u < scaled - fl).astype(jnp.float32)
     elif scheme == "dither":
         fl = jnp.floor(scaled)
-        slot = rounding.lcg_slot(counter, idx, n_pulses, seed=seed)
+        slot = rounding.slot_index(counter, idx, n_pulses, seed=seed, fmt=fmt)
         u = rounding.hash_uniform(seed ^ 0xD1CE, idx, counter)
         codes = fl + rounding.dither_bit(scaled - fl, slot, u, n_pulses)
     else:
@@ -89,6 +90,7 @@ def dither_matmul_ref(
     b_range=(0.0, 1.0),
     counter: int = 0,
     seed: int = 0,
+    fmt: str = "spread",
 ) -> jax.Array:
     """Oracle for the fused quantise+matmul kernel (the §VIII 'separate' variant).
 
@@ -103,11 +105,11 @@ def dither_matmul_ref(
     sb = levels / (b_range[1] - b_range[0])
     ca = quantize_codes_ref(
         a, scale=sa, zero=a_range[0], bits=bits, scheme=scheme,
-        counter=counter, seed=seed, n_pulses=max(r, 2),
+        counter=counter, seed=seed, n_pulses=max(r, 2), fmt=fmt,
     ).astype(jnp.float32)
     cb = quantize_codes_ref(
         b, scale=sb, zero=b_range[0], bits=bits, scheme=scheme,
-        counter=counter, seed=seed + 1, n_pulses=max(p, 2),
+        counter=counter, seed=seed + 1, n_pulses=max(p, 2), fmt=fmt,
     ).astype(jnp.float32)
     cc = ca @ cb
     out = cc / (sa * sb)

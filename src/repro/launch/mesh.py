@@ -8,8 +8,12 @@ import jax
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _auto_kw(n):
+    """axis_types kwarg on jax versions that have AxisType; {} otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,10 +21,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     multi-pod adds a leading 'pod' DP axis (2 × 256 = 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto_kw(len(axes)))
 
 
 def make_local_mesh():
     """Whatever this host has (CPU container: 1 device) as (data, model)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return jax.make_mesh((n, 1), ("data", "model"), **_auto_kw(2))

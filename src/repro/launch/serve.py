@@ -28,6 +28,10 @@ def serve_main(argv=None):
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--policy", default="none",
                     choices=["none", "dither", "stochastic", "deterministic"])
+    ap.add_argument("--kernel-backend", default="jnp",
+                    help="policy matmul backend: 'jnp' (unfused fake-quant) "
+                         "or a kernel-dispatcher backend/alias "
+                         "(auto, pallas, pallas-interpret, pallas-tpu, xla-ref)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="dither-quantised int8 KV cache (2× decode memory)")
     args = ap.parse_args(argv)
@@ -35,7 +39,8 @@ def serve_main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    policy = None if args.policy == "none" else QuantPolicy(scheme=args.policy)
+    policy = (None if args.policy == "none"
+              else QuantPolicy(scheme=args.policy, backend=args.kernel_backend))
 
     params = registry.init_model(jax.random.PRNGKey(0), cfg)
     frames = (jnp.zeros((args.batch, cfg.n_enc_tokens, cfg.d_model), jnp.bfloat16)

@@ -101,6 +101,10 @@ def train_main(argv=None):
     ap.add_argument("--policy", default="none",
                     choices=["none", "dither", "stochastic", "deterministic"])
     ap.add_argument("--policy-bits", type=int, default=8)
+    ap.add_argument("--kernel-backend", default="jnp",
+                    help="policy matmul backend: 'jnp' (unfused fake-quant) "
+                         "or a kernel-dispatcher backend/alias "
+                         "(auto, pallas, pallas-interpret, pallas-tpu, xla-ref)")
     ap.add_argument("--grad-compress", default="none",
                     choices=["none", "dither", "stochastic"])
     ap.add_argument("--ckpt-dir", default=None)
@@ -112,7 +116,8 @@ def train_main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     policy = (None if args.policy == "none"
-              else QuantPolicy(scheme=args.policy, bits=args.policy_bits))
+              else QuantPolicy(scheme=args.policy, bits=args.policy_bits,
+                               backend=args.kernel_backend))
     gpolicy = (None if args.grad_compress == "none"
                else QuantPolicy(scheme=args.grad_compress, bits=8))
     steps, losses = run_training(

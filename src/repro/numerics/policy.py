@@ -38,9 +38,13 @@ __all__ = ["QuantPolicy", "qmatmul", "dense", "fake_quant"]
 class QuantPolicy:
     scheme: str = "none"          # none | dither | stochastic | deterministic
     bits: int = 8
-    n_pulses: int = 16            # dither pulse count N
+    n_pulses: int = 16            # dither pulse count N (jnp backend)
     seed: int = 0
-    backend: str = "jnp"          # jnp | pallas (pallas: fused kernel, tests/bench)
+    # 'jnp' — unfused fake-quant matmul (XLA, default).  Anything else is a
+    # kernel-dispatcher backend ('auto', 'pallas', 'pallas-tpu',
+    # 'pallas-interpret', 'xla-ref'): the forward matmul runs the fused
+    # §VIII 'separate' kernel via kernels/dispatch.py (DESIGN.md §3).
+    backend: str = "jnp"
     quantize_weights: bool = True
     quantize_acts: bool = True
 
@@ -50,6 +54,17 @@ class QuantPolicy:
 
     def with_seed(self, seed: int) -> "QuantPolicy":
         return replace(self, seed=seed)
+
+    def resolved(self) -> "QuantPolicy":
+        """Pin aliases ('auto', 'pallas') to a concrete dispatcher backend.
+
+        The trainer and serve engine call this once at build time so the
+        traced step function embeds a stable backend choice (platform
+        detection / $REPRO_KERNEL_BACKEND are read here, not per call).
+        """
+        from repro.kernels import dispatch  # late: kernels import this module
+
+        return replace(self, backend=dispatch.resolve_policy_backend(self.backend))
 
 
 def _absmax_scale(x: jax.Array, bits: int) -> jax.Array:
@@ -83,13 +98,43 @@ def _fake_quant(x: jax.Array, policy: QuantPolicy, counter, seed: int) -> jax.Ar
     return ((codes - half_levels) / scale).astype(x.dtype)
 
 
+def _fused_matmul(x, w, policy: QuantPolicy, seed: int, counter) -> jax.Array:
+    """Forward via the fused kernel-dispatcher matmul (§VIII 'separate').
+
+    The dispatcher kernels take a *static* operand range, while the policy
+    uses dynamic absmax scaling — so both operands are normalised to
+    [-1, 1] first (the quantisation grid is identical to ``_fake_quant``'s:
+    scaled = (x/absmax + 1)·(2^k−1)/2 either way) and the product is scaled
+    back.  Dither pulse counts follow §VII (N_A = N, N_B = M) on this path
+    rather than ``policy.n_pulses``.
+    """
+    from repro.kernels import dispatch  # late: kernels import this module
+
+    ax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6)
+    aw = jnp.maximum(jnp.max(jnp.abs(w)), 1e-6)
+    out = dispatch.matmul(
+        (x / ax).astype(jnp.float32), (w / aw).astype(jnp.float32),
+        bits=policy.bits, scheme=policy.scheme,
+        counter=jnp.asarray(counter, jnp.int32), seed=seed,
+        a_range=(-1.0, 1.0), b_range=(-1.0, 1.0),
+        backend=policy.backend)
+    return (out * (ax * aw)).astype(x.dtype)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def qmatmul(x, w, policy: QuantPolicy, seed: int, counter=jnp.float32(0)):
     """Quantised x @ w with straight-through gradients.
 
     ``counter`` is a float32 scalar (exact for i_s < 2²⁴) so it has a
     well-defined (zero) cotangent under custom_vjp.
+
+    ``policy.backend == 'jnp'`` fake-quantises both operands and multiplies
+    in XLA; any other backend routes the forward product through the kernel
+    dispatcher's fused quantised matmul (same grid, same STE backward).
     """
+    if (policy.backend != "jnp" and x.ndim == 2
+            and policy.quantize_acts and policy.quantize_weights):
+        return _fused_matmul(x, w, policy, seed, counter)
     xq = _fake_quant(x, policy, counter, seed) if policy.quantize_acts else x
     wq = _fake_quant(w, policy, counter, seed + 1) if policy.quantize_weights else w
     return jnp.matmul(xq, wq)

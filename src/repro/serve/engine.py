@@ -23,6 +23,10 @@ __all__ = ["make_serve_fns", "Engine"]
 
 
 def make_serve_fns(cfg: ModelConfig, policy: Optional[QuantPolicy] = None):
+    # pin backend aliases to a concrete kernel-dispatcher backend at build
+    # time, so the lowered prefill/decode route through kernels/dispatch.py
+    policy = policy.resolved() if policy is not None else None
+
     def prefill_step(params, batch):
         return registry.apply_model(params, cfg, batch, policy=policy, remat=False)
 
@@ -54,6 +58,7 @@ class Engine:
                  policy: Optional[QuantPolicy] = None, frames=None,
                  kv_quant: bool = False):
         self.params, self.cfg, self.batch, self.max_len = params, cfg, batch, max_len
+        policy = policy.resolved() if policy is not None else None
         self.policy = policy
         self.cache = registry.make_cache(params, cfg, batch, max_len, frames=frames,
                                          policy=policy, kv_quant=kv_quant)

@@ -64,7 +64,14 @@ def make_train_step(
     ``microbatch`` > 0 splits the batch into that many sequential chunks with
     gradient accumulation via lax.scan — compute/DP-reduce overlap at scale
     and a memory knob (DESIGN.md §4).
+
+    Policies are resolved here (``QuantPolicy.resolved``) so backend aliases
+    ('auto', 'pallas') pin to a concrete kernel-dispatcher backend once, at
+    build time — every dense matmul in the traced step then routes through
+    kernels/dispatch.py (DESIGN.md §3).
     """
+    policy = policy.resolved() if policy is not None else None
+    grad_policy = grad_policy.resolved() if grad_policy is not None else None
 
     def grads_of(params, batch, counter):
         return jax.value_and_grad(loss_fn)(params, cfg, batch, policy, counter, remat)

@@ -1,0 +1,37 @@
+"""Optional-hypothesis shim.
+
+``requirements-dev.txt`` installs hypothesis, but the tier-1 suite must also
+collect (and run its non-property tests) in environments where it is absent.
+When hypothesis is missing, ``@given(...)``-decorated tests become skips and
+the ``st`` strategy namespace degrades to inert placeholders, so module-level
+strategy definitions still evaluate.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Any ``st.<name>(...)`` call returns an inert placeholder."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _StrategyStub()
+
+    def given(*_args, **_kwargs):
+        def decorate(_fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pass
+
+            skipped.__name__ = _fn.__name__
+            skipped.__doc__ = _fn.__doc__
+            return skipped
+
+        return decorate

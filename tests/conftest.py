@@ -5,7 +5,13 @@ import sys
 # real single CPU device; only launch/dryrun.py forces 512 host devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings
-
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    # Property-based tests skip themselves via tests/_hypothesis_compat.py;
+    # everything else must still collect and run (requirements-dev.txt
+    # installs hypothesis for the full suite).
+    pass
+else:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")

@@ -9,8 +9,15 @@ from repro.configs import ARCH_IDS, get_config
 from repro.dist import sharding as shd
 from repro.models import registry
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(shape, names):
+    try:
+        return AbstractMesh(shape, names)  # jax >= 0.5 signature
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, shape)))
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH_MP = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _axis_size(mesh, entry):
