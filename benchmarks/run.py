@@ -20,6 +20,7 @@ MODULES = [
     "mnist_variants",      # Figs 11-14
     "fashion_mlp",         # Figs 15-16
     "kernel_bench",        # Pallas kernels
+    "serve_bench",         # two-phase serving engine
 ]
 
 

@@ -1,0 +1,205 @@
+"""Serving benchmark: two-phase engine throughput / latency, JSON artifact.
+
+Drives the ``serve/`` engine (batched prefill → batched decode, DESIGN.md
+§6) over policy ∈ {none, dither, stochastic, deterministic} × kv_quant ∈
+{off, on} and records, per configuration: prefill vs decode tokens/s,
+time-to-first-token (TTFT) and inter-token latency (ITL) percentiles.  A
+warm-up wave runs first so jit compile time stays out of the measured
+rates.  The headline check is ``prefill_to_decode_ratio``: batched prefill
+pushes prompt tokens at a multiple of the decode rate because a prompt
+costs one forward pass instead of O(prompt_len) decode ticks.
+
+Standalone CLI (emits the perf artifact future PRs diff against, alongside
+``kernel_bench.json``):
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke     # CI: tiny
+      # config; quantised policies run the Pallas interpret backend
+  PYTHONPATH=src python benchmarks/serve_bench.py [--full] \
+      [--arch smollm_135m] [--out benchmarks/artifacts/serve_bench.json]
+
+The artifact schema is documented in benchmarks/README.md.  CPU numbers are
+relative; they track the serving path's perf trajectory across PRs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ is None or __package__ == "":  # `python benchmarks/serve_bench.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_root, os.path.join(_root, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.numerics.policy import QuantPolicy
+from repro.serve import Engine, Request, SamplingParams
+
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "artifacts", "serve_bench.json")
+
+ARTIFACT_VERSION = 1
+
+POLICIES = ("none", "dither", "stochastic", "deterministic")
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, float), q)) if xs else 0.0
+
+
+def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
+                 backend: str, batch: int, max_len: int, prompt_len: int,
+                 max_new: int, requests: int, temperature: float = 0.0):
+    """Measure one (policy × kv_quant) serving configuration.
+
+    Builds a fresh engine, runs one warm-up request through the same prompt
+    bucket (compiles prefill, decode and the sampler), resets the counters,
+    then serves ``requests`` requests and reads the stats back.
+    """
+    policy = (None if policy_name == "none"
+              else QuantPolicy(scheme=policy_name, backend=backend))
+    frames = (jnp.zeros((batch, cfg.n_enc_tokens, cfg.d_model), jnp.bfloat16)
+              if cfg.is_encdec else None)
+    kv_quant = kv_quant and not cfg.is_encdec   # enc-dec self-KV stays bf16
+    engine = Engine(params, cfg, batch, max_len, policy=policy, frames=frames,
+                    kv_quant=kv_quant)
+
+    engine.submit(Request(rid=-1, prompt=[1] * prompt_len, max_new=2))
+    engine.run(ticks=8)
+    engine.finished.clear()
+    engine.reset_stats()
+
+    for r in range(requests):
+        prompt = [(5 * r + i) % (cfg.vocab_size - 1) + 1
+                  for i in range(prompt_len)]
+        engine.submit(Request(
+            rid=r, prompt=prompt,
+            sampling=SamplingParams(temperature=temperature, seed=r,
+                                    max_new=max_new,
+                                    counter_offset=1000 * r)))
+    done = engine.run(ticks=requests * (max_new + 4) + 20)
+
+    st = engine.stats
+    pf = st["prefill_tokens"] / st["prefill_s"] if st["prefill_s"] else 0.0
+    dc = st["decode_tokens"] / st["decode_s"] if st["decode_s"] else 0.0
+    ttfts = [r.ttft for r in done if r.ttft is not None]
+    itls = [x for r in done for x in r.itl]
+    reasons = {}
+    for r in done:
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+    return {
+        "arch": cfg.name, "policy": policy_name,
+        "kernel_backend": backend if policy_name != "none" else None,
+        "kv_quant": bool(kv_quant), "batch": batch, "max_len": max_len,
+        "prompt_len": prompt_len, "max_new": max_new, "requests": requests,
+        "completed": len(done), "finish_reasons": reasons,
+        "prefill_tok_s": pf, "decode_tok_s": dc,
+        "prefill_to_decode_ratio": (pf / dc) if dc else 0.0,
+        "ttft_ms": {"mean": 1e3 * float(np.mean(ttfts)) if ttfts else 0.0,
+                    "p50": 1e3 * _pct(ttfts, 50), "p95": 1e3 * _pct(ttfts, 95)},
+        "itl_ms": {"p50": 1e3 * _pct(itls, 50), "p95": 1e3 * _pct(itls, 95),
+                   "max": 1e3 * max(itls) if itls else 0.0},
+    }
+
+
+def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
+          full: bool = False, backend: str = "jnp", policies=POLICIES,
+          reduced: bool = True):
+    """Run the policy × kv_quant grid; returns (rows, artifact)."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    params = registry.init_model(jax.random.PRNGKey(0), cfg)
+
+    if smoke:
+        shape = dict(batch=2, max_len=32, prompt_len=8, max_new=4, requests=3)
+    elif full:
+        shape = dict(batch=8, max_len=256, prompt_len=64, max_new=32,
+                     requests=16)
+    else:
+        shape = dict(batch=4, max_len=128, prompt_len=16, max_new=8,
+                     requests=6)
+
+    rows, results = [], []
+    for policy_name in policies:
+        for kv_quant in (False, True):
+            res = bench_config(cfg, params, policy_name, kv_quant,
+                               backend=backend, **shape)
+            results.append(res)
+            us_per_tok = (1e6 / res["decode_tok_s"]
+                          if res["decode_tok_s"] else 0.0)
+            rows.append((
+                f"serve[{policy_name}|kv_quant={int(kv_quant)}]", us_per_tok,
+                f"prefill/decode={res['prefill_to_decode_ratio']:.1f}x "
+                f"ttft_p50={res['ttft_ms']['p50']:.0f}ms"))
+
+    artifact = {
+        "version": ARTIFACT_VERSION,
+        "generated_by": "benchmarks/serve_bench.py",
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "unix_time": time.time(),
+        "smoke": smoke, "full": full, "arch": cfg.name, "shape": shape,
+        "results": results,
+    }
+    return rows, artifact
+
+
+def run(full: bool = False):
+    """benchmarks/run.py harness entry point: quick jnp-backend grid."""
+    rows, _ = sweep(smoke=not full, full=full)
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI shape: tiny reduced config; quantised policies "
+                         "run on the Pallas interpret backend")
+    ap.add_argument("--full", action="store_true",
+                    help="larger batch/prompt/max_new grid")
+    ap.add_argument("--no-reduced", action="store_true",
+                    help="use the full-size architecture config (slow off-TPU)")
+    ap.add_argument("--policies", default=",".join(POLICIES),
+                    help="comma list from {none,dither,stochastic,deterministic}")
+    ap.add_argument("--kernel-backend", default=None,
+                    help="policy matmul backend for quantised rows "
+                         "(default: pallas-interpret under --smoke, else jnp)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="JSON artifact path ('' to skip writing)")
+    args = ap.parse_args(argv)
+
+    backend = args.kernel_backend or ("pallas-interpret" if args.smoke
+                                      else "jnp")
+    rows, artifact = sweep(args.arch, smoke=args.smoke, full=args.full,
+                           backend=backend,
+                           policies=tuple(args.policies.split(",")),
+                           reduced=not args.no_reduced)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+    ratios = [r["prefill_to_decode_ratio"] for r in artifact["results"]]
+    print(f"prefill/decode tokens/s ratio: min={min(ratios):.1f}x "
+          f"max={max(ratios):.1f}x", file=sys.stderr)
+
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"wrote {args.out} ({len(artifact['results'])} results)",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,8 @@
-"""Serving demo: continuous batching over the ring-buffer KV cache engine.
+"""Serving demo: the two-phase engine end to end (DESIGN.md §6).
+
+Requests go through the scheduler into decode slots; prompts prefill in one
+batched forward (KV written per-slot); decode runs under per-request
+sampling with streaming callbacks.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,20 +14,39 @@ import jax
 from repro.configs import get_config
 from repro.models import registry
 from repro.numerics.policy import QuantPolicy
-from repro.serve.engine import Engine, Request
+from repro.serve import Engine, Request, SamplingParams
 
 cfg = get_config("smollm_135m").reduced()
 params = registry.init_model(jax.random.PRNGKey(0), cfg)
 
 engine = Engine(params, cfg, batch=4, max_len=128,
-                policy=QuantPolicy(scheme="dither", bits=8))
+                policy=QuantPolicy(scheme="dither", bits=8),
+                scheduler="priority")
+
+
+def on_token(req, tok):
+    if len(req.out) == 1:
+        print(f"  [stream] req {req.rid} first token: {tok}")
+
+
 for rid in range(8):
-    engine.submit(Request(rid=rid, prompt=[1 + rid, 2, 3], max_new=12))
+    engine.submit(Request(
+        rid=rid,
+        prompt=[1 + rid, 2, 3],
+        priority=1 if rid >= 6 else 0,        # late VIPs overtake the queue
+        stream=on_token if rid == 0 else None,
+        sampling=SamplingParams(
+            temperature=0.7 if rid % 2 else 0.0,   # mix greedy + sampled
+            top_k=16, seed=rid, max_new=12,
+            counter_offset=1000 * rid),            # independent dither walks
+    ))
 
 t0 = time.time()
 done = engine.run(ticks=400)
 dt = time.time() - t0
 for r in sorted(done, key=lambda r: r.rid):
-    print(f"request {r.rid}: {r.out}")
-print(f"{len(done)} requests, {sum(len(r.out) for r in done)} tokens "
-      f"in {dt:.1f}s")
+    print(f"request {r.rid} [{r.finish_reason}]: {r.out}")
+st = engine.stats
+print(f"{len(done)} requests, {sum(len(r.out) for r in done)} tokens in {dt:.1f}s "
+      f"(prefill {st['prefill_tokens']}tok/{st['prefill_s']:.2f}s, "
+      f"decode {st['decode_tokens']}tok/{st['decode_s']:.2f}s)")

@@ -1,7 +1,11 @@
-"""Serving launcher: batched request demo over the decode engine.
+"""Serving launcher: drive the two-phase engine over a synthetic request mix.
+
+Admits requests through the scheduler, prefills prompts with the batched
+``prefill_step`` and decodes under per-request sampling (DESIGN.md §6):
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm_135m --reduced \
-      --requests 6 --batch 4 --max-new 8
+      --requests 6 --batch 4 --max-new 8 --temperature 0.8 --top-k 40 \
+      --sched priority
 """
 
 from __future__ import annotations
@@ -16,6 +20,7 @@ from repro.configs import get_config
 from repro.models import registry
 from repro.numerics.policy import QuantPolicy
 from repro.serve.engine import Engine, Request
+from repro.serve.sampling import SamplingParams
 
 
 def serve_main(argv=None):
@@ -26,6 +31,7 @@ def serve_main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=5)
     ap.add_argument("--policy", default="none",
                     choices=["none", "dither", "stochastic", "deterministic"])
     ap.add_argument("--kernel-backend", default="jnp",
@@ -34,6 +40,14 @@ def serve_main(argv=None):
                          "(auto, pallas, pallas-interpret, pallas-tpu, xla-ref)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="dither-quantised int8 KV cache (2× decode memory)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 = softmax sampling")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed (request r uses seed + r)")
+    ap.add_argument("--sched", default="fcfs", choices=["fcfs", "priority"],
+                    help="admission policy ('priority' favours high "
+                         "Request.priority; the demo gives odd rids +1)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -46,16 +60,29 @@ def serve_main(argv=None):
     frames = (jnp.zeros((args.batch, cfg.n_enc_tokens, cfg.d_model), jnp.bfloat16)
               if cfg.is_encdec else None)
     engine = Engine(params, cfg, args.batch, args.max_len, policy=policy,
-                    frames=frames, kv_quant=args.kv_quant and not cfg.is_encdec)
+                    frames=frames, kv_quant=args.kv_quant and not cfg.is_encdec,
+                    scheduler=args.sched)
     for r in range(args.requests):
-        prompt = [(7 * r + i) % (cfg.vocab_size - 1) + 1 for i in range(5)]
-        engine.submit(Request(rid=r, prompt=prompt, max_new=args.max_new))
+        prompt = [(7 * r + i) % (cfg.vocab_size - 1) + 1
+                  for i in range(args.prompt_len)]
+        engine.submit(Request(
+            rid=r, prompt=prompt, priority=r % 2,
+            sampling=SamplingParams(temperature=args.temperature,
+                                    top_k=args.top_k, seed=args.seed + r,
+                                    max_new=args.max_new,
+                                    counter_offset=1000 * r)))
     t0 = time.time()
     done = engine.run(ticks=args.requests * (args.max_new + 6) + 20)
     dt = time.time() - t0
     for r in sorted(done, key=lambda x: x.rid):
-        print(f"req {r.rid}: {r.out}")
-    print(f"served {len(done)}/{args.requests} requests in {dt:.2f}s")
+        ttft = f"{1e3 * r.ttft:.0f}ms" if r.ttft is not None else "-"
+        print(f"req {r.rid} [{r.finish_reason}] ttft={ttft}: {r.out}")
+    st = engine.stats
+    pf = st["prefill_tokens"] / st["prefill_s"] if st["prefill_s"] else 0.0
+    dc = st["decode_tokens"] / st["decode_s"] if st["decode_s"] else 0.0
+    print(f"served {len(done)}/{args.requests} requests in {dt:.2f}s "
+          f"(prefill {pf:.0f} tok/s over {st['prefill_calls']} calls, "
+          f"decode {dc:.0f} tok/s over {st['decode_calls']} ticks)")
 
 
 if __name__ == "__main__":

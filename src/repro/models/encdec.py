@@ -22,7 +22,8 @@ from repro.numerics.policy import QuantPolicy, dense
 
 Params = Dict[str, Any]
 
-__all__ = ["init_encdec", "encode", "forward_encdec", "decode_step_encdec", "init_encdec_cache"]
+__all__ = ["init_encdec", "encode", "forward_encdec", "decode_step_encdec",
+           "init_encdec_cache", "merge_cache_encdec"]
 
 
 def _ln(d):
@@ -129,17 +130,38 @@ def forward_encdec(
 
 def init_encdec_cache(params, cfg: ModelConfig, frames, batch: int, max_len: int,
                       *, policy=None):
-    """Build the decode cache: ring self-KV per layer + precomputed cross-KV."""
+    """Build the decode cache: ring self-KV per layer + precomputed cross-KV.
+
+    ``pos`` / ``k_pos`` are per-slot, matching the decoder-only cache layout
+    (the serving engine admits requests into slots at different times).
+    """
     enc = encode(params, cfg, frames, policy=policy)
     hd, nkv = cfg.hd(), cfg.n_kv_heads
     xk, xv = _stacked_xkv(params, enc, cfg, batch)
     self_kv = {
         "k": jnp.zeros((cfg.n_layers, batch, max_len, nkv, hd), jnp.bfloat16),
         "v": jnp.zeros((cfg.n_layers, batch, max_len, nkv, hd), jnp.bfloat16),
-        "k_pos": jnp.broadcast_to(jnp.full((max_len,), -1, jnp.int32),
-                                  (cfg.n_layers, max_len)),
+        "k_pos": jnp.broadcast_to(jnp.full((batch, max_len), -1, jnp.int32),
+                                  (cfg.n_layers, batch, max_len)),
     }
-    return {"pos": jnp.zeros((), jnp.int32), "self": self_kv, "cross_k": xk, "cross_v": xv}
+    return {"pos": jnp.zeros((batch,), jnp.int32), "self": self_kv,
+            "cross_k": xk, "cross_v": xv}
+
+
+def merge_cache_encdec(old, new, active):
+    """Per-slot cache insertion (cf. transformer.merge_cache): rows of ``new``
+    where ``active`` (B,) replace rows of ``old``.  Self-KV leaves carry batch
+    at axis 1 (leading layer axis); the static cross-KV is kept from ``old``."""
+    def sel(o, n):
+        shp = [1] * n.ndim
+        shp[1] = active.shape[0]
+        return jnp.where(active.reshape(shp), n, o)
+
+    return {
+        "pos": jnp.where(active, new["pos"], old["pos"]),
+        "self": jax.tree.map(sel, old["self"], new["self"]),
+        "cross_k": old["cross_k"], "cross_v": old["cross_v"],
+    }
 
 
 def _stacked_xkv(params, enc, cfg, batch):
@@ -162,8 +184,12 @@ def decode_step_encdec(
     *,
     policy: Optional[QuantPolicy] = None,
     counter=0,
+    kv_offset=None,  # accepted for API parity; the encdec self-KV is bf16
 ):
-    """One decoder token with self-KV ring cache and static cross-KV."""
+    """One decoder token with self-KV ring cache and static cross-KV.
+
+    ``cache["pos"]`` is per-slot (B,), as in the decoder-only path.
+    """
     import math as _math
 
     pos = cache["pos"]

@@ -108,12 +108,17 @@ def attention(
     policy: Optional[QuantPolicy] = None,
     counter=0,
     use_rope: bool = True,
+    return_kv: bool = False,
 ):
     """Multi-head attention with GQA and an optional decode KV cache.
 
     cache: {"k": (B, S_max, Hkv, hd), "v": ..., "pos": ()} — decode appends
     at index ``pos`` and attends over the full cache (masked).
-    Returns (out, new_cache).
+    Returns (out, new_cache); with ``return_kv=True`` the second element is
+    instead the post-RoPE ``(k, v)`` of *this call's* tokens, each
+    (B, S, n_kv_heads, hd) — the batched-prefill path
+    (models/transformer.prefill_with_cache, DESIGN.md §6) scatters these
+    into the ring-buffer decode cache.
     """
     b, s, d = x.shape
     hd, nh, nkv = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
@@ -144,6 +149,7 @@ def attention(
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
 
+    kv_out = (k, v) if return_kv else None
     new_cache = None
     if cache is not None:
         pos = cache["pos"]
@@ -217,7 +223,7 @@ def attention(
         _, outs = jax.lax.scan(body, None, (qs, offsets))
         out = jnp.swapaxes(outs, 0, 1).reshape(b, s, nh * hd)
         out = dense(out, params["wo"], policy, counter, seed=4)
-        return out, new_cache
+        return out, (kv_out if return_kv else new_cache)
 
     if not seq_par and group > 1 and tp > 1 and nh % tp == 0:
         # Head-parallel TP: the score einsum must expose a single head dim
@@ -244,7 +250,7 @@ def attention(
     out = dense(out, params["wo"], policy, counter, seed=4)
     if seq_par:  # hand tokens back to the TP regions replicated over 'model'
         out = ctx.constrain(out, ctx.dp_axes(), None, None)
-    return out, new_cache
+    return out, (kv_out if return_kv else new_cache)
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,10 @@ from repro.numerics.policy import QuantPolicy
 
 Params = Dict[str, Any]
 
-__all__ = ["init_model", "apply_model", "make_cache", "apply_decode", "batch_spec"]
+__all__ = [
+    "init_model", "apply_model", "make_cache", "apply_decode", "batch_spec",
+    "apply_prefill", "merge_prefill", "supports_batched_prefill",
+]
 
 
 def init_model(key, cfg: ModelConfig) -> Params:
@@ -63,12 +66,91 @@ def make_cache(params: Params, cfg: ModelConfig, batch_size: int, max_len: int,
 
 
 def apply_decode(params: Params, cfg: ModelConfig, token: jax.Array, cache: Params,
-                 *, policy=None, counter=0):
+                 *, policy=None, counter=0, kv_offset=None):
     if cfg.is_encdec:
         return encdec.decode_step_encdec(params, cfg, token, cache,
-                                         policy=policy, counter=counter)
+                                         policy=policy, counter=counter,
+                                         kv_offset=kv_offset)
     return transformer.decode_step(params, cfg, token, cache,
-                                   policy=policy, counter=counter)
+                                   policy=policy, counter=counter,
+                                   kv_offset=kv_offset)
+
+
+def supports_batched_prefill(cfg: ModelConfig) -> bool:
+    """True when prompts can prefill in one batched forward that also emits
+    the decode cache: attention-only decoders.  SSM / RG-LRU layers carry
+    recurrent state whose value at each slot's prompt boundary is not
+    recoverable from the chunked full-sequence pass, and the encoder-decoder
+    shares that constraint through its fallback — both use the scanned
+    prefill inside ``apply_prefill`` instead (DESIGN.md §6)."""
+    return (not cfg.is_encdec
+            and all(cfg.layer_kind(i) == "attn" for i in range(cfg.n_layers)))
+
+
+def merge_prefill(cfg: ModelConfig, old: Params, new: Params,
+                  active: jax.Array) -> Params:
+    """Per-slot cache insertion: rows of ``new`` where ``active`` (B,) bool
+    replace rows of ``old`` — how a prefill result enters the engine cache."""
+    if cfg.is_encdec:
+        return encdec.merge_cache_encdec(old, new, active)
+    return transformer.merge_cache(old, new, active)
+
+
+def apply_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,    # (B, S) right-padded prompts
+    lengths: jax.Array,   # (B,) true lengths; 0 marks an inactive row
+    max_len: int,
+    *,
+    policy=None,
+    counter=0,
+    kv_quant: bool = False,
+    kv_offset=None,
+    cache0: Optional[Params] = None,
+    frames: Optional[jax.Array] = None,
+):
+    """Batched prefill → (last-token logits (B, vocab_size), decode cache).
+
+    Attention-only decoders run ``transformer.prefill_with_cache`` (one
+    batched forward, KV scattered into the ring cache).  Architectures with
+    recurrent state (SSM / RG-LRU) or an encoder fall back to a *scanned*
+    prefill: ``lax.scan`` of the decode step over the padded prompt inside
+    this one jitted call (active-masked so short prompts freeze early) —
+    still O(S) sequential steps, but batched on-device with no host
+    round-trips.  ``cache0`` seeds the fallback (required for enc-dec, whose
+    cross-KV comes from ``frames`` otherwise).
+    """
+    b, s = tokens.shape
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if supports_batched_prefill(cfg):
+        logits, cache = transformer.prefill_with_cache(
+            params, cfg, tokens, lengths, max_len, policy=policy,
+            counter=counter, kv_quant=kv_quant, kv_offset=kv_offset)
+        last = jnp.clip(lengths - 1, 0, s - 1)
+        last_logits = jnp.take_along_axis(
+            logits, last[:, None, None], axis=1)[:, 0]
+        return last_logits, cache
+
+    if cache0 is None:
+        cache0 = make_cache(params, cfg, b, max_len, frames=frames,
+                            policy=policy, kv_quant=kv_quant)
+
+    def step(carry, xs):
+        cache, last_logits = carry
+        tok, t = xs
+        logits, new_cache = apply_decode(params, cfg, tok, cache,
+                                         policy=policy, counter=counter,
+                                         kv_offset=kv_offset)
+        active = t < lengths
+        cache = merge_prefill(cfg, cache, new_cache, active)
+        last_logits = jnp.where(active[:, None], logits, last_logits)
+        return (cache, last_logits), None
+
+    init = (cache0, jnp.zeros((b, cfg.vocab_size), jnp.float32))
+    (cache, last_logits), _ = jax.lax.scan(
+        step, init, (tokens.T, jnp.arange(s, dtype=jnp.int32)))
+    return last_logits, cache
 
 
 def batch_spec(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:

@@ -8,13 +8,18 @@ independent of depth (essential for the 512-device dry-run) and gives
 per-repeat remat for free.  ``n_layers % P`` remainder layers are unrolled.
 
 Decode uses a unified ring-buffer KV cache: capacity C = window (local
-attention) or max_len (full attention), with an absolute-position array
-``k_pos`` driving the mask — one code path for full, sliding-window, SSM and
-RG-LRU layers (the latter two carry O(1) recurrent states instead).
+attention) or max_len (full attention), with *per-slot* absolute positions
+(``cache["pos"]`` (B,), ``k_pos`` (B, C)) driving the mask — slots admitted
+at different times decode independently, which is what the serving engine's
+continuous batching needs (DESIGN.md §6).  One code path covers full,
+sliding-window, SSM and RG-LRU layers (the latter two carry O(1) recurrent
+states instead).  ``prefill_with_cache`` materialises the same cache from a
+single batched forward.
 """
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any, Dict, Optional
 
@@ -29,6 +34,7 @@ Params = Dict[str, Any]
 
 __all__ = [
     "init_params", "forward", "decode_step", "init_cache", "prefill",
+    "prefill_with_cache", "merge_cache",
 ]
 
 
@@ -105,19 +111,20 @@ def _cache_entry(cfg: ModelConfig, kind: str, batch: int, max_len: int,
         if kv_quant:
             # Dither-quantised int8 cache (§Perf it.10 — the paper's
             # unbiased rounding applied to KV compression): codes + one
-            # per-position, per-head scale; written with counter = pos, so
-            # re-decodes of the same slot over time average out (§VII).
+            # per-position, per-head scale; written with counter = pos (plus
+            # an optional per-request offset, DESIGN.md §6), so re-decodes
+            # of the same slot over time average out (§VII).
             return {
                 "k": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.hd()), jnp.int8),
                 "v": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.hd()), jnp.int8),
                 "k_scale": jnp.zeros((batch, cap, cfg.n_kv_heads), jnp.float32),
                 "v_scale": jnp.zeros((batch, cap, cfg.n_kv_heads), jnp.float32),
-                "k_pos": jnp.full((cap,), -1, jnp.int32),
+                "k_pos": jnp.full((batch, cap), -1, jnp.int32),
             }
         return {
             "k": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.hd()), jnp.bfloat16),
             "v": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.hd()), jnp.bfloat16),
-            "k_pos": jnp.full((cap,), -1, jnp.int32),
+            "k_pos": jnp.full((batch, cap), -1, jnp.int32),
         }
     if kind == "rglru":
         return hybrid.init_rglru_state(cfg, batch)
@@ -142,7 +149,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         _cache_entry(cfg, cfg.layer_kind(rep * p_ + i), batch, max_len, kv_quant)
         for i in range(rem)
     ]
-    return {"pos": jnp.zeros((), jnp.int32), "layers": stacked, "remainder": remainder}
+    # "pos" is *per-slot* (B,): the serving engine admits requests into slots
+    # at different times, so every slot decodes at its own absolute position.
+    return {"pos": jnp.zeros((batch,), jnp.int32), "layers": stacked,
+            "remainder": remainder}
 
 
 # ---------------------------------------------------------------------------
@@ -150,11 +160,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 # ---------------------------------------------------------------------------
 
 
-def _attention_decode(params, cfg: ModelConfig, x, cache, pos, policy, counter):
-    """One-token attention against the ring cache.  x: (B, 1, d)."""
+def _attention_decode(params, cfg: ModelConfig, x, cache, pos, policy, counter,
+                      kv_offset=None):
+    """One-token attention against the ring cache.  x: (B, 1, d).
+
+    ``pos`` is the per-slot absolute position — scalar or (B,) — so slots
+    admitted at different times decode independently.  ``kv_offset`` (B,)
+    optionally shifts the dither counter of the int8 KV quantiser per slot
+    (the engine threads each request's counter offset through it so
+    concurrent requests walk independent pulse sequences, DESIGN.md §6).
+    """
     b = x.shape[0]
     hd, nh, nkv = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
     cap = cache["k"].shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
 
     q = dense(x, params["wq"], policy, counter, seed=1).reshape(b, 1, nh, hd)
     k = dense(x, params["wk"], policy, counter, seed=2).reshape(b, 1, nkv, hd)
@@ -163,45 +182,50 @@ def _attention_decode(params, cfg: ModelConfig, x, cache, pos, policy, counter):
         q = q + params["bq"].reshape(1, 1, nh, hd)
         k = k + params["bk"].reshape(1, 1, nkv, hd)
         v = v + params["bv"].reshape(1, 1, nkv, hd)
-    posv = jnp.full((b, 1), pos)
+    posv = pos[:, None]
     q = layers.rope(q, posv, cfg.rope_theta)
     k = layers.rope(k, posv, cfg.rope_theta)
 
+    rows = jnp.arange(b)
     slot = jnp.mod(pos, cap)
     quantized = cache["k"].dtype == jnp.int8
     if quantized:
-        # dither-round the new K/V token into int8 codes (counter = pos)
+        # dither-round the new K/V token into int8 codes; the counter is the
+        # per-slot absolute position (+ per-request offset)
         from repro.core import rounding as _rnd
+
+        ctr = pos if kv_offset is None else pos + jnp.broadcast_to(
+            jnp.asarray(kv_offset, jnp.int32), (b,))
+        ctr4 = ctr.reshape(b, 1, 1, 1)
 
         def q8(t, seed):
             scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) + 1e-6
             scaled = t.astype(jnp.float32) / scale[..., None] * 127.0 + 128.0
             idx = jnp.arange(t.size, dtype=jnp.uint32).reshape(t.shape)
-            slot_d = _rnd.lcg_slot(pos, idx, 16, seed=seed)
-            u = _rnd.hash_uniform(seed ^ 0xD1CE, idx, pos)
+            slot_d = _rnd.lcg_slot(ctr4, idx, 16, seed=seed)
+            u = _rnd.hash_uniform(seed ^ 0xD1CE, idx, ctr4)
             codes = jnp.floor(scaled) + _rnd.dither_bit(
                 scaled - jnp.floor(scaled), slot_d, u, 16)
             return (jnp.clip(codes, 0.0, 255.0) - 128.0).astype(jnp.int8), scale
 
         kq, ks = q8(k, 101)
         vq, vs = q8(v, 102)
-        ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
-        kss = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
-        vss = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
-        k_pos = jax.lax.dynamic_update_slice(
-            cache["k_pos"], pos[None].astype(jnp.int32), (slot,))
+        ck = cache["k"].at[rows, slot].set(kq[:, 0])
+        cv = cache["v"].at[rows, slot].set(vq[:, 0])
+        kss = cache["k_scale"].at[rows, slot].set(ks[:, 0])
+        vss = cache["v_scale"].at[rows, slot].set(vs[:, 0])
+        k_pos = cache["k_pos"].at[rows, slot].set(pos)
         new_cache = {"k": ck, "v": cv, "k_scale": kss, "v_scale": vss,
                      "k_pos": k_pos}
     else:
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-        k_pos = jax.lax.dynamic_update_slice(cache["k_pos"], pos[None].astype(jnp.int32), (slot,))
+        ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+        k_pos = cache["k_pos"].at[rows, slot].set(pos)
         new_cache = {"k": ck, "v": cv, "k_pos": k_pos}
 
-    valid = (k_pos >= 0) & (k_pos <= pos)
+    valid = (k_pos >= 0) & (k_pos <= pos[:, None])            # (B, cap)
     if cfg.window:
-        valid = valid & (k_pos > pos - cfg.window)
+        valid = valid & (k_pos > pos[:, None] - cfg.window)
 
     # grouped GQA decode: read the cache once, no repeated-KV materialisation
     group = nh // nkv
@@ -211,7 +235,7 @@ def _attention_decode(params, cfg: ModelConfig, x, cache, pos, policy, counter):
     if quantized:
         # fold per-position/per-head key scales in after the int8 dot
         logits = logits * (new_cache["k_scale"] / 127.0).transpose(0, 2, 1)[:, :, None, None, :]
-    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     if quantized:
         # per-position value scales attach to the probabilities
@@ -239,18 +263,24 @@ def _apply_block(
     cache_entry=None,
     pos=None,
     window_override=None,
+    kv_offset=None,
+    collect_kv=False,
 ):
     h = layers.rms_norm(x, bp["ln1"], cfg.norm_eps)
     new_cache = cache_entry
     if kind == "attn":
         window = cfg.window if window_override is None else window_override
         if cache_entry is not None:
-            out, new_cache = _attention_decode(bp["attn"], cfg, h, cache_entry, pos, policy, counter)
+            out, new_cache = _attention_decode(bp["attn"], cfg, h, cache_entry,
+                                               pos, policy, counter,
+                                               kv_offset=kv_offset)
         else:
-            out, _ = layers.attention(
+            out, kv = layers.attention(
                 bp["attn"], cfg, h, positions, causal=True, window=window,
-                policy=policy, counter=counter,
+                policy=policy, counter=counter, return_kv=collect_kv,
             )
+            if collect_kv:
+                new_cache = kv
     elif kind == "rglru":
         if cache_entry is not None:
             out, new_cache = hybrid.rglru_decode_step(bp["rec"], cfg, h, cache_entry, policy, counter)
@@ -325,13 +355,159 @@ def forward(
 
 
 def prefill(params, cfg, tokens, *, embeds=None, policy=None, counter=0):
-    """Prefill forward (no cache materialisation — dry-run measures compute).
+    """Prefill forward, logits only (the dry-run's compute-roofline cell).
 
-    Production serving would also emit the cache; for the benchmark shapes
-    prefill cost is the forward pass itself.
+    The serving engine uses ``prefill_with_cache`` below, which additionally
+    materialises the ring-buffer decode cache; for roofline purposes prefill
+    cost is the forward pass itself.
     """
     return forward(params, cfg, tokens, embeds=embeds, policy=policy,
                    counter=counter, remat=False)
+
+
+def _prefill_entry(cfg: ModelConfig, kv, lengths, cap: int, kv_quant: bool,
+                   kv_offset):
+    """Scatter one attention layer's full-sequence K/V into a ring cache entry.
+
+    kv: post-RoPE ``(k, v)``, each (B, S, n_kv_heads, hd).  Ring slot j ends
+    up holding the *last* prompt position p ≡ j (mod cap) below the slot's
+    prompt length — bit-identical layout to what token-by-token decode
+    writes would have left behind (including the dither-quantised int8
+    codes, whose counter is the absolute position + per-request offset).
+    """
+    k_full, v_full = kv
+    b, s = k_full.shape[0], k_full.shape[1]
+    j = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    last = lengths[:, None].astype(jnp.int32) - 1              # (B, 1)
+    pj = last - jnp.mod(last - j, cap)                         # (B, cap)
+    valid = pj >= 0
+    idx = jnp.clip(pj, 0, s - 1)
+    gk = jnp.take_along_axis(k_full, idx[:, :, None, None], axis=1)
+    gv = jnp.take_along_axis(v_full, idx[:, :, None, None], axis=1)
+    k_pos = jnp.where(valid, pj, -1).astype(jnp.int32)
+
+    if not kv_quant:
+        zero = jnp.zeros((), jnp.bfloat16)
+        return {
+            "k": jnp.where(valid[:, :, None, None], gk.astype(jnp.bfloat16), zero),
+            "v": jnp.where(valid[:, :, None, None], gv.astype(jnp.bfloat16), zero),
+            "k_pos": k_pos,
+        }
+
+    from repro.core import rounding as _rnd
+
+    off = (jnp.zeros((b,), jnp.int32) if kv_offset is None
+           else jnp.broadcast_to(jnp.asarray(kv_offset, jnp.int32), (b,)))
+    ctr = (pj + off[:, None])[:, :, None, None]                # (B, cap, 1, 1)
+    nkv, hd = k_full.shape[2], k_full.shape[3]
+    # same element indices as the decode-step quantiser's (B, 1, nkv, hd) token
+    idx4 = jnp.arange(b * nkv * hd, dtype=jnp.uint32).reshape(b, 1, nkv, hd)
+
+    def q8(t, seed):
+        scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) + 1e-6
+        scaled = t.astype(jnp.float32) / scale[..., None] * 127.0 + 128.0
+        slot_d = _rnd.lcg_slot(ctr, idx4, 16, seed=seed)
+        u = _rnd.hash_uniform(seed ^ 0xD1CE, idx4, ctr)
+        codes = jnp.floor(scaled) + _rnd.dither_bit(
+            scaled - jnp.floor(scaled), slot_d, u, 16)
+        q = (jnp.clip(codes, 0.0, 255.0) - 128.0).astype(jnp.int8)
+        return (jnp.where(valid[:, :, None, None], q, jnp.int8(0)),
+                jnp.where(valid[:, :, None], scale, 0.0))
+
+    kq, ks = q8(gk, 101)
+    vq, vs = q8(gv, 102)
+    return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs, "k_pos": k_pos}
+
+
+def prefill_with_cache(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,    # (B, S) right-padded prompts
+    lengths: jax.Array,   # (B,) true prompt lengths (0 = inactive row)
+    max_len: int,
+    *,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+    kv_quant: bool = False,
+    kv_offset=None,
+):
+    """Batched prefill: one full-sequence forward that also materialises the
+    ring-buffer decode cache (DESIGN.md §6).
+
+    Attention-only architectures: every prompt token's K/V is computed in a
+    single batched forward (right-padded; causal masking keeps real tokens
+    blind to the padding) and scattered into the per-slot ring cache, so
+    prompt cost is one forward instead of O(prompt_len) decode ticks.
+    Returns ``(logits, cache)`` — logits (B, S, vocab_size) f32, and a cache
+    whose ``pos`` is ``lengths``.  Architectures with recurrent state (SSM /
+    RG-LRU) or an encoder are served by the scanned fallback in
+    ``models/registry.apply_prefill`` instead.
+    """
+    for i in range(cfg.n_layers):
+        if cfg.layer_kind(i) != "attn":
+            raise ValueError("prefill_with_cache requires attention-only "
+                             "layers; use registry.apply_prefill")
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s, _ = x.shape
+    lengths = jnp.asarray(lengths, jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    p_ = _period(cfg)
+
+    def body(carry, xs):
+        h = carry
+        kvs = []
+        for pos_i in range(p_):
+            h, kv = _apply_block(
+                xs[pos_i], cfg, "attn", h, positions, policy=policy,
+                counter=counter, collect_kv=True,
+            )
+            kvs.append(kv)
+        return h, tuple(kvs)
+
+    kv_stacked = ()
+    if params["blocks"]:
+        x, kv_stacked = jax.lax.scan(body, x, tuple(params["blocks"]))
+    kv_rem = []
+    for i, bp in enumerate(params["remainder"]):
+        x, kv = _apply_block(bp, cfg, "attn", x, positions, policy=policy,
+                             counter=counter, collect_kv=True)
+        kv_rem.append(kv)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = dense(x, head, policy, counter, seed=9).astype(jnp.float32)
+    logits = logits[:, :, : cfg.vocab_size]
+
+    cap = min(cfg.window, max_len) if cfg.window else max_len
+    entry = functools.partial(_prefill_entry, cfg, lengths=lengths, cap=cap,
+                              kv_quant=kv_quant, kv_offset=kv_offset)
+    # stacked pattern positions carry a leading repeat axis — vmap over it
+    stacked = [jax.vmap(lambda kv: entry(kv))(kv) for kv in kv_stacked]
+    remainder = [entry(kv) for kv in kv_rem]
+    cache = {"pos": lengths, "layers": stacked, "remainder": remainder}
+    return logits, cache
+
+
+def merge_cache(old: Params, new: Params, active: jax.Array) -> Params:
+    """Per-slot cache insertion: rows of ``new`` where ``active`` (B,) bool
+    replace rows of ``old`` — how prefill results enter the live engine
+    cache, and how the scanned-prefill fallback freezes finished slots.
+
+    Stacked pattern entries carry batch at axis 1 (leading repeat axis),
+    remainder entries at axis 0; ``pos`` is (B,).
+    """
+    def sel(axis):
+        def f(o, n):
+            shp = [1] * n.ndim
+            shp[axis] = active.shape[0]
+            return jnp.where(active.reshape(shp), n, o)
+        return f
+
+    return {
+        "pos": jnp.where(active, new["pos"], old["pos"]),
+        "layers": jax.tree.map(sel(1), old["layers"], new["layers"]),
+        "remainder": jax.tree.map(sel(0), old["remainder"], new["remainder"]),
+    }
 
 
 def decode_step(
@@ -342,12 +518,19 @@ def decode_step(
     *,
     policy: Optional[QuantPolicy] = None,
     counter=0,
+    kv_offset=None,
 ):
-    """One decode step: (B,) token + cache → (B, vocab) logits, new cache."""
+    """One decode step: (B,) token + cache → (B, vocab) logits, new cache.
+
+    ``cache["pos"]`` is per-slot (B,); every slot advances by one.
+    ``kv_offset`` (B,) shifts the int8-KV dither counter per slot
+    (per-request counter offsets, DESIGN.md §6).
+    """
     pos = cache["pos"]
     x = jnp.take(params["embed"], token[:, None], axis=0)
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
     p_ = _period(cfg)
 
     def body(carry, xs):
@@ -359,6 +542,7 @@ def decode_step(
             h, ne = _apply_block(
                 bp[pos_i], cfg, kind, h, positions, policy=policy,
                 counter=counter, cache_entry=ce[pos_i], pos=pos,
+                kv_offset=kv_offset,
             )
             new_entries.append(ne)
         return h, tuple(new_entries)
@@ -375,7 +559,7 @@ def decode_step(
         kind = cfg.layer_kind(rep * p_ + i)
         x, ne = _apply_block(
             bp, cfg, kind, x, positions, policy=policy, counter=counter,
-            cache_entry=cache["remainder"][i], pos=pos,
+            cache_entry=cache["remainder"][i], pos=pos, kv_offset=kv_offset,
         )
         new_rem.append(ne)
 

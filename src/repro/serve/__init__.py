@@ -1,1 +1,8 @@
-"""repro.serve"""
+"""repro.serve — two-phase batched-prefill/decode serving (DESIGN.md §6)."""
+
+from repro.serve.engine import Engine, Request, make_serve_fns
+from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.scheduler import Scheduler
+
+__all__ = ["Engine", "Request", "make_serve_fns", "SamplingParams",
+           "sample_tokens", "Scheduler"]

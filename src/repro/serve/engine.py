@@ -1,117 +1,317 @@
-"""Serving: prefill + batched decode engine.
+"""Serving: two-phase (batched prefill → batched decode) engine.
 
-``make_serve_fns`` builds the two pjit-able entry points the dry-run lowers
-(``prefill_step`` and ``decode_step``); ``Engine`` is the host-side loop used
-by the examples — continuous batching over a request queue with a shared
-ring-buffer KV cache (slots freed on EOS / max-len).
+``make_serve_fns`` builds the two jit-able entry points — ``prefill_step``
+and ``decode_step`` — and ``Engine`` is the host-side loop that drives them
+(DESIGN.md §6): a :class:`~repro.serve.scheduler.Scheduler` admits queued
+requests into free decode slots; admitted prompts run through the *batched*
+``prefill_step`` (right-padded prompt batch, one forward pass, KV written
+per-slot into the shared ring cache, prefill logits seeding the first
+sampled token); the steady state is one ``decode_step`` per tick over every
+active slot.  Per-request :class:`~repro.serve.sampling.SamplingParams`
+drive greedy/temperature/top-k sampling, EOS/stop handling and the
+per-request dither-counter offsets; slots are preempted at ``max_len`` and
+recycled; streaming callbacks fire per emitted token.
+
+The numerics policy — and therefore the fused kernel backend — applies to
+prefill and decode alike, so weight-quantised serving exercises the same
+dispatcher path as training.
 """
 
 from __future__ import annotations
 
-import functools
+import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Callable, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.numerics.policy import QuantPolicy
+from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.scheduler import Scheduler
 
-__all__ = ["make_serve_fns", "Engine"]
+__all__ = ["make_serve_fns", "Engine", "Request", "SamplingParams", "Scheduler"]
 
 
-def make_serve_fns(cfg: ModelConfig, policy: Optional[QuantPolicy] = None):
-    # pin backend aliases to a concrete kernel-dispatcher backend at build
-    # time, so the lowered prefill/decode route through kernels/dispatch.py
+def make_serve_fns(cfg: ModelConfig, policy: Optional[QuantPolicy] = None, *,
+                   max_len: int, kv_quant: bool = False, frames=None):
+    """Build the two jit-able serving entry points (DESIGN.md §6).
+
+    ``prefill_step(params, tokens, lengths, kv_offset, counter)`` maps a
+    right-padded (B, S) prompt batch + (B,) true lengths to the last-prompt-
+    token logits (B, vocab) and a full decode cache whose per-slot positions
+    equal ``lengths`` — attention-only architectures do this in one batched
+    forward (``transformer.prefill_with_cache``); recurrent/enc-dec
+    architectures fall back to a scanned on-device prefill
+    (``registry.apply_prefill``).  ``decode_step(params, token, cache,
+    kv_offset, counter)`` is one token for every slot.  The engine jits
+    exactly these two functions (launch/dryrun.py rooflines the same
+    prefill-forward and decode-step compute at pod scale).  ``policy`` is
+    resolved here so the traced steps embed a concrete kernel-dispatcher
+    backend.
+    """
     policy = policy.resolved() if policy is not None else None
+    batched = registry.supports_batched_prefill(cfg)
 
-    def prefill_step(params, batch):
-        return registry.apply_model(params, cfg, batch, policy=policy, remat=False)
+    def prefill_step(params, tokens, lengths, kv_offset=None, counter=0):
+        cache0 = None
+        if not batched:
+            cache0 = registry.make_cache(
+                params, cfg, tokens.shape[0], max_len, frames=frames,
+                policy=policy, kv_quant=kv_quant)
+        return registry.apply_prefill(
+            params, cfg, tokens, lengths, max_len, policy=policy,
+            counter=counter, kv_quant=kv_quant, kv_offset=kv_offset,
+            cache0=cache0)
 
-    def decode_step(params, token, cache):
-        return registry.apply_decode(params, cfg, token, cache, policy=policy)
+    def decode_step(params, token, cache, kv_offset=None, counter=0):
+        return registry.apply_decode(params, cfg, token, cache, policy=policy,
+                                     counter=counter, kv_offset=kv_offset)
 
     return prefill_step, decode_step
 
 
 @dataclass
 class Request:
+    """One generation request.
+
+    Lifecycle (DESIGN.md §6): ``queued`` → (scheduler admits) → ``active``
+    → ``done`` with ``finish_reason`` ∈ {"eos", "stop", "length",
+    "preempted", "rejected"}.  ``sampling`` carries the per-request decode
+    controls; ``max_new`` is a convenience override of
+    ``sampling.max_new`` kept from the original API.  ``stream`` (if set)
+    is called as ``stream(request, token)`` for every emitted token.
+    Timing fields are host-clock seconds: ``ttft`` = time-to-first-token
+    from submission, ``itl`` = inter-token latencies.
+    """
+
     rid: int
     prompt: List[int]
-    max_new: int = 16
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    priority: int = 0
+    max_new: Optional[int] = None
+    stream: Optional[Callable[["Request", int], None]] = None
     out: List[int] = field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[str] = None
+    state: str = "new"
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_last: Optional[float] = None
+    itl: List[float] = field(default_factory=list)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first is None or self.t_submit is None:
+            return None
+        return self.t_first - self.t_submit
+
+    def effective_max_new(self) -> int:
+        return self.max_new if self.max_new is not None else self.sampling.max_new
+
+
+def _bucket(n: int) -> int:
+    """Round a prompt length up to a power of two (≥ 8) so the jitted
+    prefill compiles once per bucket, not once per prompt length."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
 
 
 class Engine:
-    """Minimal continuous-batching decode engine (example/serving driver).
+    """Host-side continuous-batching loop over the two jitted serve fns.
 
-    Fixed decode batch B; requests are admitted into free slots, prompts are
-    prefilled token-by-token into the slot's cache region (CPU-scale demo —
-    a production deployment would use the prefill_step path), then decoded
-    greedily until EOS/max_new.
+    Fixed decode batch B (the slot count) over a shared per-slot ring-buffer
+    KV cache.  Each :meth:`step`:
+
+    1. asks the scheduler for requests to fill free slots; admitted prompts
+       are right-padded into a (B, S_bucket) batch and run through the
+       batched ``prefill_step`` — the prompt costs one forward pass, its KV
+       lands in the admitted slots, and the prefill logits seed each
+       request's first sampled token;
+    2. runs one ``decode_step`` for every active slot and samples with the
+       per-request :class:`SamplingParams` (per-slot temperature / top-k /
+       seed / counter arrays, one jitted ``sample_tokens`` call);
+    3. retires slots on EOS/stop tokens, ``max_new``, or ``max_len``
+       preemption, freeing them for the next admission wave.
+
+    The policy dither counter advances once per engine tick ("rounding in
+    time", §VII); per-request ``counter_offset`` shifts the int8-KV and
+    sampling counters so concurrent requests walk independent pulse
+    sequences and restarts replay identically (DESIGN.md §6).
     """
 
     def __init__(self, params, cfg: ModelConfig, batch: int, max_len: int,
                  policy: Optional[QuantPolicy] = None, frames=None,
-                 kv_quant: bool = False):
+                 kv_quant: bool = False,
+                 scheduler: Union[str, Scheduler] = "fcfs"):
         self.params, self.cfg, self.batch, self.max_len = params, cfg, batch, max_len
         policy = policy.resolved() if policy is not None else None
         self.policy = policy
-        self.cache = registry.make_cache(params, cfg, batch, max_len, frames=frames,
-                                         policy=policy, kv_quant=kv_quant)
-        self._decode = jax.jit(
-            lambda p, t, c: registry.apply_decode(p, cfg, t, c, policy=policy)
-        )
+        self.kv_quant = kv_quant
+        self.cache = registry.make_cache(params, cfg, batch, max_len,
+                                         frames=frames, policy=policy,
+                                         kv_quant=kv_quant)
+        prefill_step, decode_step = make_serve_fns(
+            cfg, policy, max_len=max_len, kv_quant=kv_quant, frames=frames)
+        self._prefill = jax.jit(prefill_step)
+        self._decode = jax.jit(decode_step)
+        self._sample = jax.jit(sample_tokens)
+        self._merge = jax.jit(
+            lambda old, new, act: registry.merge_prefill(cfg, old, new, act))
+
+        self.scheduler = (Scheduler(scheduler) if isinstance(scheduler, str)
+                          else scheduler)
         self.slots: List[Optional[Request]] = [None] * batch
-        self.queue: List[Request] = []
-        self.token = jnp.zeros((batch,), jnp.int32)
+        self.finished: List[Request] = []
+        self.tick = 0
+        # per-slot state mirrored on the host (packed into arrays per call)
+        self._last_token = np.zeros((batch,), np.int32)
+        self._slot_pos = np.zeros((batch,), np.int64)
+        self._temps = np.zeros((batch,), np.float32)
+        self._topks = np.zeros((batch,), np.int32)
+        self._seeds = np.zeros((batch,), np.int32)
+        self._offsets = np.zeros((batch,), np.int32)
+        self._counters = np.zeros((batch,), np.int32)
+        self.stats = {"prefill_s": 0.0, "prefill_tokens": 0, "prefill_calls": 0,
+                      "decode_s": 0.0, "decode_tokens": 0, "decode_calls": 0}
+
+    # ------------------------------------------------------------------ API
+
+    def reset_stats(self):
+        """Zero the throughput counters (benchmarks call this after a
+        warm-up wave so compile time stays out of the measured rates)."""
+        self.stats = {k: type(v)() for k, v in self.stats.items()}
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        req.state = "queued"
+        if req.t_submit is None:
+            req.t_submit = time.time()
+        self.scheduler.submit(req)
 
-    def _admit(self):
-        for i, s in enumerate(self.slots):
-            if s is None and self.queue:
-                self.slots[i] = self.queue.pop(0)
+    def step(self) -> List[Request]:
+        """One engine tick: admit + batched-prefill, then decode every
+        active slot.  Returns the requests still active after the tick."""
+        self._admit_and_prefill()
+        if any(s is not None for s in self.slots):
+            self._decode_tick()
+        return [s for s in self.slots if s is not None]
 
-    def step(self):
-        """One engine tick: admit, decode one token for every active slot."""
-        self._admit()
-        feed = []
-        for i, req in enumerate(self.slots):
-            if req is None:
-                feed.append(0)
-            elif req.prompt:
-                feed.append(req.prompt.pop(0))       # prefill phase (teacher-forced)
-            elif req.out:
-                feed.append(req.out[-1])
-            else:
-                feed.append(1)                        # BOS
-        token = jnp.asarray(feed, jnp.int32)
-        logits, self.cache = self._decode(self.params, token, self.cache)
-        nxt = jnp.argmax(logits, axis=-1)
-        for i, req in enumerate(self.slots):
-            if req is None or req.prompt:
-                continue
-            req.out.append(int(nxt[i]))
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.slots[i] = None
-        return [r for r in [s for s in self.slots] if r is not None]
-
-    def run(self, ticks: int):
-        done: List[Request] = []
-        seen = set()
-        all_reqs = list(self.queue)
+    def run(self, ticks: int) -> List[Request]:
+        """Drive :meth:`step` until the queue and slots drain (or ``ticks``
+        elapse); returns every request finished so far."""
         for _ in range(ticks):
             self.step()
-            for r in all_reqs:
-                if r.done and r.rid not in seen:
-                    seen.add(r.rid)
-                    done.append(r)
-            if not self.queue and all(s is None for s in self.slots):
+            if not len(self.scheduler) and all(s is None for s in self.slots):
                 break
-        return done
+        return self.finished
+
+    # ------------------------------------------------------------ internals
+
+    def _admit_and_prefill(self):
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return
+        admitted = []
+        for req in self.scheduler.admit(len(free)):
+            if len(req.prompt) > self.max_len:
+                req.done, req.finish_reason, req.state = True, "rejected", "done"
+                self.finished.append(req)
+                continue
+            admitted.append(req)
+        if not admitted:
+            return
+
+        now = time.time()
+        lens = np.zeros((self.batch,), np.int32)
+        prompts = {}
+        for req in admitted:
+            i = free.pop(0)
+            sp = req.sampling
+            self.slots[i] = req
+            req.state, req.t_admit = "active", now
+            prompts[i] = list(req.prompt) or [1]          # empty prompt → BOS
+            lens[i] = len(prompts[i])
+            self._temps[i] = sp.temperature
+            self._topks[i] = sp.top_k
+            self._seeds[i] = sp.seed
+            self._offsets[i] = sp.counter_offset
+            self._counters[i] = sp.counter_offset
+            self._slot_pos[i] = lens[i]
+
+        s_bucket = _bucket(int(lens.max()))
+        toks = np.zeros((self.batch, s_bucket), np.int32)
+        for i, p in prompts.items():
+            toks[i, : len(p)] = p
+
+        t0 = time.time()
+        last_logits, pf_cache = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(self._offsets), self.tick)
+        self.cache = self._merge(self.cache, pf_cache,
+                                 jnp.asarray(lens > 0))
+        first = np.asarray(self._sample(
+            last_logits, jnp.asarray(self._temps), jnp.asarray(self._topks),
+            jnp.asarray(self._seeds), jnp.asarray(self._counters)))
+        dt = time.time() - t0
+        self.stats["prefill_s"] += dt
+        self.stats["prefill_tokens"] += int(lens.sum())
+        self.stats["prefill_calls"] += 1
+
+        now = time.time()
+        for i, req in list(prompts.items()):
+            self._emit(i, self.slots[i], int(first[i]), now)
+
+    def _decode_tick(self):
+        active = [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        t0 = time.time()
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self._last_token), self.cache,
+            jnp.asarray(self._offsets), self.tick)
+        toks = np.asarray(self._sample(
+            logits, jnp.asarray(self._temps), jnp.asarray(self._topks),
+            jnp.asarray(self._seeds), jnp.asarray(self._counters)))
+        dt = time.time() - t0
+        self.tick += 1
+        self.stats["decode_s"] += dt
+        self.stats["decode_tokens"] += len(active)
+        self.stats["decode_calls"] += 1
+
+        now = time.time()
+        for i, req in active:
+            self._slot_pos[i] += 1
+            self._emit(i, req, int(toks[i]), now)
+
+    def _emit(self, i: int, req: Request, tok: int, now: float):
+        req.out.append(tok)
+        if req.t_first is None:
+            req.t_first = now
+        else:
+            req.itl.append(now - req.t_last)
+        req.t_last = now
+        self._counters[i] += 1
+        self._last_token[i] = tok
+        if req.stream is not None:
+            req.stream(req, tok)
+
+        sp = req.sampling
+        if sp.eos_id is not None and tok == sp.eos_id:
+            self._finish(i, req, "eos")
+        elif tok in sp.stop_set():
+            self._finish(i, req, "stop")
+        elif len(req.out) >= req.effective_max_new():
+            self._finish(i, req, "length")
+        elif self._slot_pos[i] >= self.max_len:
+            # the slot's ring cache is full: preempt so the next admission
+            # wave can recycle it (the request keeps what it generated)
+            self._finish(i, req, "preempted")
+
+    def _finish(self, i: int, req: Request, reason: str):
+        req.done, req.finish_reason, req.state = True, reason, "done"
+        self.finished.append(req)
+        self.slots[i] = None

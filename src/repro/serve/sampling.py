@@ -1,0 +1,78 @@
+"""Per-request sampling for the serving engine (DESIGN.md §6).
+
+``SamplingParams`` rides on each ``Request``; the engine packs the per-slot
+fields into arrays and samples every active slot in one jitted
+``sample_tokens`` call.  Randomness is the repo's stateless hash of
+``(seed, vocab_index, counter)`` (core/rounding.hash_uniform): the counter
+is the request's dither-counter offset plus its emitted-token count, so
+concurrent requests walk independent sampling sequences and a restarted
+engine replaying the same requests reproduces them exactly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import FrozenSet, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import rounding
+
+__all__ = ["SamplingParams", "sample_tokens"]
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Decode-time controls carried by one request.
+
+    * ``temperature <= 0`` — greedy (argmax); otherwise softmax sampling at
+      that temperature via Gumbel-max over hash uniforms.
+    * ``top_k`` — restrict sampling to the k highest logits (0 = full vocab).
+    * ``seed`` — per-request sampling stream seed.
+    * ``eos_id`` / ``stop_ids`` — generation stops when the sampled token
+      matches (finish_reason "eos" / "stop"; the token is kept in ``out``).
+    * ``max_new`` — generated-token budget (finish_reason "length").
+    * ``counter_offset`` — per-request dither-counter offset: added to the
+      sampling counter *and* to the int8-KV quantiser counter for this
+      request's slot, so concurrent requests walk independent pulse
+      sequences (DESIGN.md §6).
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    stop_ids: Tuple[int, ...] = ()
+    counter_offset: int = 0
+
+    def stop_set(self) -> FrozenSet[int]:
+        stops = set(self.stop_ids)
+        if self.eos_id is not None:
+            stops.add(self.eos_id)
+        return frozenset(stops)
+
+
+def sample_tokens(logits, temperature, top_k, seed, counter):
+    """Sample one token per row under per-row controls (jit-able).
+
+    logits (B, V) f32; temperature (B,) f32; top_k / seed / counter (B,)
+    int32.  Rows with ``temperature <= 0`` take the argmax; the rest draw
+    from the top-k-masked, temperature-scaled distribution by Gumbel-max,
+    with the Gumbel noise a stateless hash of (seed, vocab index, counter)
+    — no PRNG state, bit-identical across backends and engine restarts.
+    """
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    k = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v)
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+    thresh = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    masked = jnp.where(logits >= thresh, logits, -jnp.inf)
+
+    idx = jnp.arange(v, dtype=jnp.uint32)[None, :]
+    u = rounding.hash_uniform(seed[:, None], idx, counter[:, None])
+    gumbel = -jnp.log(-jnp.log(u + 1e-12) + 1e-12)
+    scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jnp.argmax(scaled + gumbel, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)

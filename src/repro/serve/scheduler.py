@@ -1,0 +1,46 @@
+"""Admission scheduling for the serving engine (DESIGN.md §6).
+
+The scheduler owns the QUEUED stage of the request lifecycle; the engine
+asks it for up to ``n`` requests whenever decode slots free up and routes
+the admitted batch through the prefill step.
+
+* ``fcfs``     — strict submission order.
+* ``priority`` — highest ``Request.priority`` first; submission order
+  breaks ties (stable), so equal-priority traffic degrades to FCFS.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List
+
+__all__ = ["Scheduler"]
+
+
+class Scheduler:
+    POLICIES = ("fcfs", "priority")
+
+    def __init__(self, policy: str = "fcfs"):
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown scheduling policy {policy!r}; "
+                             f"expected one of {self.POLICIES}")
+        self.policy = policy
+        self._queue: List[Any] = []
+        self._arrivals = 0
+
+    def submit(self, req) -> None:
+        req._arrival = self._arrivals
+        self._arrivals += 1
+        self._queue.append(req)
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def admit(self, n: int) -> List[Any]:
+        """Pop up to ``n`` requests in policy order."""
+        if n <= 0 or not self._queue:
+            return []
+        if self.policy == "priority":
+            self._queue.sort(
+                key=lambda r: (-getattr(r, "priority", 0), r._arrival))
+        picked, self._queue = self._queue[:n], self._queue[n:]
+        return picked

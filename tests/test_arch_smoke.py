@@ -38,7 +38,9 @@ def test_forward_and_decode(arch):
     lg, cache = registry.apply_decode(params, cfg, jnp.ones((2,), jnp.int32), cache)
     lg2, cache = registry.apply_decode(params, cfg, jnp.ones((2,), jnp.int32), cache)
     assert lg.shape == (2, cfg.vocab_size)
-    assert int(cache["pos"]) == 2
+    # per-slot positions (serving slots decode independently, DESIGN.md §6)
+    assert cache["pos"].shape == (2,)
+    assert [int(p) for p in cache["pos"]] == [2, 2]
     assert not bool(jnp.any(jnp.isnan(lg2)))
 
 

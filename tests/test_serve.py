@@ -1,0 +1,316 @@
+"""Serving-layer tests (DESIGN.md §6): batched prefill vs token-by-token
+cache equivalence (policy on and off), scheduler admission / preemption /
+EOS, per-request sampling, and restart determinism of the per-request
+dither counters."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.numerics.policy import QuantPolicy
+from repro.serve import Engine, Request, SamplingParams, Scheduler, make_serve_fns
+from repro.serve.sampling import sample_tokens
+
+CFG = get_config("smollm_135m").reduced()
+PARAMS = registry.init_model(jax.random.PRNGKey(0), CFG)
+
+
+def _prompts(seed, n, length):
+    key = jax.random.PRNGKey(seed)
+    return np.asarray(
+        jax.random.randint(key, (n, length), 1, CFG.vocab_size)).tolist()
+
+
+def _ref_generate(params, cfg, prompts, max_new, policy=None, kv_quant=False,
+                  max_len=32):
+    """The pre-rebuild engine's path: equal-length prompts admitted together
+    and fed token-by-token through ``decode_step``, then greedy decode."""
+    toks = jnp.asarray(prompts, jnp.int32)
+    b, s = toks.shape
+    cache = registry.make_cache(params, cfg, b, max_len, kv_quant=kv_quant)
+    for t in range(s):
+        logits, cache = registry.apply_decode(params, cfg, toks[:, t], cache,
+                                              policy=policy)
+    outs = [[] for _ in range(b)]
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(max_new):
+        for i in range(b):
+            outs[i].append(int(cur[i]))
+        logits, cache = registry.apply_decode(params, cfg, cur, cache,
+                                              policy=policy)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    return outs
+
+
+def _engine_generate(prompts, max_new, policy=None, kv_quant=False,
+                     max_len=32, **req_kw):
+    eng = Engine(PARAMS, CFG, batch=len(prompts), max_len=max_len,
+                 policy=policy, kv_quant=kv_quant)
+    for r, p in enumerate(prompts):
+        eng.submit(Request(rid=r, prompt=list(p), max_new=max_new, **req_kw))
+    done = sorted(eng.run(40 + 4 * max_new), key=lambda r: r.rid)
+    return [r.out for r in done]
+
+
+# ---------------------------------------------------------------------------
+# prefill ≡ token-by-token
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_prefill_matches_token_by_token_policy_off(seed):
+    """Acceptance: the batched-prefill engine emits exactly the tokens the
+    old per-token prompt feeding produced (greedy, full precision)."""
+    prompts = _prompts(seed, 2, 5)
+    ref = _ref_generate(PARAMS, CFG, prompts, 6)
+    assert _engine_generate(prompts, 6) == ref
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_prefill_matches_token_by_token_policy_dither(seed):
+    """Same check with int8 dither-rounded matmuls switched on.  (The
+    rounding element indices differ between a (B·S, d) prefill matmul and a
+    (B, d) decode matmul, so logits agree only to rounding noise — these
+    seeds are decisively argmax-stable and the outputs are identical.)"""
+    pol = QuantPolicy(scheme="dither", bits=8)
+    prompts = _prompts(seed, 2, 5)
+    ref = _ref_generate(PARAMS, CFG, prompts, 6, policy=pol)
+    assert _engine_generate(prompts, 6, policy=pol) == ref
+
+
+def test_prefill_cache_bitwise_equals_decode_cache():
+    """prefill_with_cache writes the exact bf16 K/V ring layout (per-slot
+    positions included) that token-by-token decode would have written —
+    variable prompt lengths, right-padded."""
+    toks = jnp.asarray(_prompts(4, 3, 8), jnp.int32)
+    lengths = jnp.array([8, 5, 3], jnp.int32)
+    toks = toks * (jnp.arange(8)[None, :] < lengths[:, None])
+    _, cache = registry.apply_prefill(PARAMS, CFG, toks, lengths, 16)
+
+    ref = registry.make_cache(PARAMS, CFG, 3, 16)
+    for t in range(8):
+        _, new = registry.apply_decode(PARAMS, CFG, toks[:, t], ref)
+        # freeze rows whose prompt already ended (what the engine's slot
+        # lifecycle guarantees)
+        ref = registry.merge_prefill(CFG, ref, new, t < lengths)
+
+    assert jnp.array_equal(cache["pos"], lengths)
+    for got, want in zip(jax.tree.leaves(cache), jax.tree.leaves(ref)):
+        assert got.shape == want.shape
+        assert jnp.array_equal(got.astype(jnp.float32),
+                               want.astype(jnp.float32))
+
+
+def test_prefill_quantised_cache_first_layer_bit_exact():
+    """int8 KV path: the first layer sees identical inputs either way, so
+    its dither-quantised codes must match bit-for-bit (same counter = the
+    absolute position).  Deeper layers differ by design: batched prefill
+    computes prompt attention in full precision and quantises only for
+    storage, while token-by-token decode re-reads quantised KV."""
+    toks = jnp.asarray(_prompts(5, 2, 6), jnp.int32)
+    lengths = jnp.full((2,), 6, jnp.int32)
+    _, cache = registry.apply_prefill(PARAMS, CFG, toks, lengths, 16,
+                                      kv_quant=True)
+    ref = registry.make_cache(PARAMS, CFG, 2, 16, kv_quant=True)
+    for t in range(6):
+        _, ref = registry.apply_decode(PARAMS, CFG, toks[:, t], ref)
+
+    got, want = cache["layers"][0], ref["layers"][0]
+    for name in ("k", "v", "k_pos"):
+        assert jnp.array_equal(got[name][0], want[name][0]), name
+    assert jnp.allclose(got["k_scale"][0], want["k_scale"][0], rtol=1e-6)
+
+
+def test_make_serve_fns_prefill_then_decode():
+    """The two jit-able entry points compose: prefill seeds the cache at
+    pos = lengths and decode continues from it."""
+    prefill_step, decode_step = make_serve_fns(CFG, None, max_len=16)
+    toks = jnp.asarray(_prompts(6, 2, 4), jnp.int32)
+    lengths = jnp.full((2,), 4, jnp.int32)
+    last_logits, cache = jax.jit(prefill_step)(PARAMS, toks, lengths)
+    assert last_logits.shape == (2, CFG.vocab_size)
+    assert jnp.array_equal(cache["pos"], lengths)
+    tok = jnp.argmax(last_logits, -1).astype(jnp.int32)
+    logits, cache = jax.jit(decode_step)(PARAMS, tok, cache)
+    assert logits.shape == (2, CFG.vocab_size)
+    assert jnp.array_equal(cache["pos"], lengths + 1)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+def test_scanned_prefill_fallback_matches_token_by_token():
+    """Recurrent architectures (no batched prefill) use the scanned
+    on-device fallback — same decode math, so greedy outputs are identical
+    to per-token prompt feeding."""
+    cfg = get_config("mamba2_370m").reduced()
+    params = registry.init_model(jax.random.PRNGKey(0), cfg)
+    assert not registry.supports_batched_prefill(cfg)
+    prompts = _prompts(7, 2, 5)
+    ref = _ref_generate(params, cfg, prompts, 5)
+    eng = Engine(params, cfg, batch=2, max_len=32)
+    for r, p in enumerate(prompts):
+        eng.submit(Request(rid=r, prompt=list(p), max_new=5))
+    done = sorted(eng.run(60), key=lambda r: r.rid)
+    assert [r.out for r in done] == ref
+
+
+# ---------------------------------------------------------------------------
+# scheduler: admission order, preemption, EOS/stop
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_fcfs_and_priority_order():
+    sched = Scheduler("fcfs")
+    reqs = [Request(rid=r, prompt=[1], priority=p)
+            for r, p in enumerate([0, 5, 5])]
+    for r in reqs:
+        sched.submit(r)
+    assert [r.rid for r in sched.admit(3)] == [0, 1, 2]
+
+    sched = Scheduler("priority")
+    for r in reqs:
+        sched.submit(r)
+    assert [r.rid for r in sched.admit(2)] == [1, 2]   # ties stay FCFS
+    assert [r.rid for r in sched.admit(2)] == [0]
+    with pytest.raises(ValueError):
+        Scheduler("sjf")
+
+
+def test_engine_priority_admission_order():
+    """batch=1 engine: the high-priority latecomer is served first."""
+    eng = Engine(PARAMS, CFG, batch=1, max_len=32, scheduler="priority")
+    for rid, prio in [(0, 0), (1, 5), (2, 5)]:
+        eng.submit(Request(rid=rid, prompt=[1 + rid, 2], max_new=2,
+                           priority=prio))
+    done = eng.run(60)
+    assert [r.rid for r in done] == [1, 2, 0]
+    assert all(r.finish_reason == "length" for r in done)
+
+
+def test_engine_preempts_slot_on_max_len():
+    """A request that would overflow its slot's ring cache is preempted and
+    the slot recycled for the next queued request."""
+    eng = Engine(PARAMS, CFG, batch=1, max_len=8)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3, 4], max_new=100))
+    eng.submit(Request(rid=1, prompt=[5, 6], max_new=2))
+    done = eng.run(60)
+    assert [r.rid for r in done] == [0, 1]
+    assert done[0].finish_reason == "preempted"
+    # prefill emits 1 token at pos=4; decode fills pos 5..8 → 5 tokens total
+    assert len(done[0].out) == 8 - 4 + 1
+    assert done[1].finish_reason == "length" and len(done[1].out) == 2
+
+
+def test_engine_rejects_overlong_prompt():
+    eng = Engine(PARAMS, CFG, batch=1, max_len=8)
+    eng.submit(Request(rid=0, prompt=list(range(1, 20)), max_new=4))
+    done = eng.run(10)
+    assert done[0].finish_reason == "rejected" and done[0].out == []
+
+
+def test_engine_eos_and_stop_tokens():
+    """EOS/stop matching: replay a greedy run with eos_id / stop_ids set to
+    a token it is known to emit."""
+    prompts = _prompts(0, 1, 4)
+    base = _engine_generate(prompts, 6)[0]
+    eos = base[1]
+
+    outs = _engine_generate(prompts, 6,
+                            sampling=SamplingParams(eos_id=eos, max_new=6))
+    eng_done = outs[0]
+    assert eng_done == base[:2]
+
+    eng = Engine(PARAMS, CFG, batch=1, max_len=32)
+    eng.submit(Request(rid=0, prompt=list(prompts[0]),
+                       sampling=SamplingParams(stop_ids=(eos,), max_new=6)))
+    req = eng.run(40)[0]
+    assert req.finish_reason == "stop" and req.out == base[:2]
+
+
+def test_engine_streaming_and_timing():
+    got = []
+    eng = Engine(PARAMS, CFG, batch=2, max_len=32)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4,
+                       stream=lambda r, t: got.append(t)))
+    req = eng.run(40)[0]
+    assert got == req.out
+    assert req.ttft is not None and req.ttft >= 0
+    assert len(req.itl) == len(req.out) - 1
+
+
+# ---------------------------------------------------------------------------
+# sampling + per-request dither counters
+# ---------------------------------------------------------------------------
+
+
+def test_sample_tokens_greedy_topk_temperature():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 32)),
+                         jnp.float32)
+    z = jnp.zeros((4,), jnp.int32)
+    greedy = sample_tokens(logits, jnp.zeros((4,)), z, z, z)
+    assert jnp.array_equal(greedy, jnp.argmax(logits, -1))
+    # top_k=1 at any temperature is greedy
+    t = sample_tokens(logits, jnp.full((4,), 2.0), jnp.ones((4,), jnp.int32),
+                      z, z)
+    assert jnp.array_equal(t, greedy)
+    # sampling is deterministic in (seed, counter) and varies across them
+    s1 = sample_tokens(logits, jnp.full((4,), 1.0), z, z, z)
+    s2 = sample_tokens(logits, jnp.full((4,), 1.0), z, z, z)
+    assert jnp.array_equal(s1, s2)
+    draws = [sample_tokens(logits, jnp.full((4,), 5.0), z, z,
+                           jnp.full((4,), c, jnp.int32))
+             for c in range(8)]
+    assert len({tuple(np.asarray(d)) for d in draws}) > 1
+    # top-k masking really restricts support
+    topk = [int(x) for c in range(16) for x in np.asarray(
+        sample_tokens(logits, jnp.full((4,), 5.0),
+                      jnp.full((4,), 2, jnp.int32), z,
+                      jnp.full((4,), c, jnp.int32)))]
+    top2 = np.argsort(np.asarray(logits), axis=-1)[:, -2:]
+    for c in range(16):
+        for row in range(4):
+            assert topk[4 * c + row] in top2[row]
+
+
+def test_per_request_counter_offsets_decorrelate_streams():
+    """Two concurrent requests with the same prompt and seed: identical
+    counter offsets → identical sampled streams; distinct offsets →
+    distinct streams (independent pulse walks, DESIGN.md §6)."""
+    prompt = [3, 1, 4, 1, 5]
+
+    def run(offsets):
+        eng = Engine(PARAMS, CFG, batch=2, max_len=32)
+        for r, off in enumerate(offsets):
+            eng.submit(Request(rid=r, prompt=list(prompt),
+                               sampling=SamplingParams(
+                                   temperature=1.0, seed=7, max_new=8,
+                                   counter_offset=off)))
+        return [r.out for r in sorted(eng.run(60), key=lambda r: r.rid)]
+
+    same = run([0, 0])
+    assert same[0] == same[1]
+    diff = run([0, 1000])
+    assert diff[0] != diff[1]
+
+
+def test_restart_determinism_of_dither_counters():
+    """A fresh engine replaying the same submissions reproduces every
+    token: KV-quantiser counters are (position + per-request offset),
+    sampling counters are (offset + emitted count), and the policy counter
+    is the engine tick — none depend on wall clock or engine history."""
+    pol = QuantPolicy(scheme="dither", bits=8)
+
+    def run():
+        eng = Engine(PARAMS, CFG, batch=2, max_len=32, policy=pol,
+                     kv_quant=True)
+        for r in range(4):
+            eng.submit(Request(
+                rid=r, prompt=[1 + r, 2, 3],
+                sampling=SamplingParams(temperature=0.8, top_k=16, seed=r,
+                                        max_new=5, counter_offset=100 * r)))
+        return [(r.rid, tuple(r.out), r.finish_reason)
+                for r in sorted(eng.run(80), key=lambda r: r.rid)]
+
+    assert run() == run()
