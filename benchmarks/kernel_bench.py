@@ -1,17 +1,22 @@
 """Pallas kernel benchmark: backend × block-shape sweep with a JSON artifact.
 
-Sweeps the fused dither-matmul and elementwise quantise kernels over the
-dispatcher backends (pallas-interpret / xla-ref on CPU; pallas-tpu on TPU)
-and a tile-size grid from the autotuner's candidate model, checking every
-timed configuration against the kernels/ref.py oracle.  Numbers on CPU are
-relative (interpret mode trades speed for bit-exactness with the TPU path);
-they guide BlockSpec choices and catch regressions — absolute TPU perf comes
+Sweeps the fused dither-matmul, elementwise quantise, and flash-decode
+attention kernels over the dispatcher backends (pallas-interpret / xla-ref
+on CPU; pallas-tpu on TPU) and a tile-size grid from the autotuner's
+candidate model, checking every timed configuration against the
+kernels/ref.py oracles.  The decode-attention sweep additionally times the
+retired full-softmax einsum path (which upcast the whole int8 cache to fp)
+as a baseline and reports analytic per-token HBM bytes for both, across
+cap ∈ {256, 1024, 4096} under ``--full``.  Numbers on CPU are relative
+(interpret mode trades speed for bit-exactness with the TPU path); they
+guide BlockSpec choices and catch regressions — absolute TPU perf comes
 from the §Roofline dry-run terms.
 
 Standalone CLI (emits the perf artifact future PRs diff against):
 
   PYTHONPATH=src python benchmarks/kernel_bench.py --backend all \
-      [--full] [--autotune] [--out benchmarks/artifacts/kernel_bench.json]
+      [--smoke | --full] [--autotune] \
+      [--out benchmarks/artifacts/kernel_bench.json]
 
 The artifact schema is documented in benchmarks/README.md.
 """
@@ -30,15 +35,18 @@ if __package__ is None or __package__ == "":  # `python benchmarks/kernel_bench.
         if _p not in sys.path:
             sys.path.insert(0, _p)
 
+import math
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import autotune, dispatch, ref
 
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "artifacts", "kernel_bench.json")
 
-ARTIFACT_VERSION = 1
+ARTIFACT_VERSION = 2
 
 
 def _cpu_backends():
@@ -68,7 +76,126 @@ def _quantize_blocks(m: int, n: int, full: bool):
     return cands if full else cands[:2]
 
 
-def sweep(full: bool = False, backends=None, do_autotune: bool = False):
+def _ring_cache(rng, b, cap, nkv, hd, pos_frac=0.75):
+    """Synthetic int8 dither-code ring cache at 3/4 occupancy (so the
+    length-aware block skipping shows up in the timings and byte counts)."""
+    pos_val = max(0, int(cap * pos_frac) - 1)
+    q = jnp.asarray(rng.normal(size=(b, nkv, 2, hd)), jnp.bfloat16)
+    kpos = np.full((b, cap), -1, np.int64)
+    for i in range(b):
+        kpos[i, : pos_val + 1] = np.arange(pos_val + 1)
+    k = jnp.asarray(rng.integers(-127, 128, size=(b, cap, nkv, hd)), jnp.int8)
+    v = jnp.asarray(rng.integers(-127, 128, size=(b, cap, nkv, hd)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.1, 2.0, size=(b, cap, nkv)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.1, 2.0, size=(b, cap, nkv)), jnp.float32)
+    return (q, k, v, jnp.asarray(kpos, jnp.int32),
+            jnp.full((b,), pos_val, jnp.int32), ks, vs), pos_val
+
+
+def decode_attn_bytes_per_token(cap, nkv, hd, *, pos, bk, quantized=True,
+                                fp_upcast=False):
+    """Analytic per-token attention HBM read bytes for one slot, one layer.
+
+    The flash path reads ceil((pos+1)/bk) cache blocks of int8 K + V codes
+    plus their f32 scales and k_pos; the einsum baseline read the whole cap
+    *and* materialised an fp32 upcast of both code tensors."""
+    elem = 1 if quantized else 2
+    slots = cap if bk is None else min(cap, math.ceil((pos + 1) / bk) * bk)
+    bytes_ = nkv * (2 * slots * hd * elem)              # K + V codes
+    if quantized:
+        bytes_ += nkv * 2 * slots * 4                   # k_scale + v_scale
+    bytes_ += slots * 4                                 # k_pos
+    if fp_upcast:
+        bytes_ += nkv * 2 * cap * hd * 4                # full-cap fp32 copies
+    return int(bytes_)
+
+
+@jax.jit
+def _einsum_decode_baseline(q, k, v, k_pos, pos, ks, vs):
+    """The retired pre-PR-3 decode path: upcast the entire int8 ring cache
+    to fp, full (cap,) logits + softmax, scales folded outside the kernel."""
+    b, cap, nkv, hd = k.shape
+    x_dtype = q.dtype
+    logits = jnp.einsum("bhgd,bkhd->bhgk", q,
+                        k.astype(x_dtype)).astype(jnp.float32) / math.sqrt(hd)
+    logits = logits * (ks / 127.0).transpose(0, 2, 1)[:, :, None, :]
+    valid = (k_pos >= 0) & (k_pos <= pos[:, None])
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x_dtype)
+    pv = probs * (vs / 127.0).transpose(0, 2, 1)[:, :, None, :].astype(x_dtype)
+    return jnp.einsum("bhgk,bkhd->bhgd", pv, v.astype(x_dtype))
+
+
+def sweep_decode_attention(caps, backends=None, do_autotune: bool = False):
+    """Flash-decode attention sweep: tok/s and bytes/token vs the einsum
+    baseline across cache capacities.  Returns (rows, results, winners)."""
+    backends = backends or _cpu_backends()
+    rng = np.random.default_rng(7)
+    b, nkv, group, hd = 2, 2, 2, 64
+    rows, results, winners = [], [], {}
+    for cap in caps:
+        (q, k, v, k_pos, pos, ks, vs), pos_val = _ring_cache(rng, b, cap, nkv, hd)
+        ref_out = ref.decode_attention_ref(q, k, v, k_pos, pos, ks, vs,
+                                           block=(16,))
+        base_us = _time_call(lambda: _einsum_decode_baseline(
+            q, k, v, k_pos, pos, ks, vs))
+        base_bytes = decode_attn_bytes_per_token(cap, nkv, hd, pos=pos_val,
+                                                 bk=None, fp_upcast=True)
+        for backend in backends:
+            cands = autotune.decode_attention_candidates(
+                cap, hd=hd, group=group, quantized=True)
+            blocks = [None] if backend == "xla-ref" else [None] + cands[:3]
+            for blk in blocks:
+                out = dispatch.decode_attention(
+                    q, k, v, k_pos, pos, k_scale=ks, v_scale=vs, block=blk,
+                    backend=backend)
+                err = float(jnp.max(jnp.abs(out - ref_out)))
+                us = _time_call(lambda: dispatch.decode_attention(
+                    q, k, v, k_pos, pos, k_scale=ks, v_scale=vs, block=blk,
+                    backend=backend))
+                eff_bk = (cap if blk is None and backend == "xla-ref"
+                          else (blk or autotune.best_block(
+                              "decode_attention", (b, cap, nkv, group, hd),
+                              "int8", 8, "flash", backend))[0])
+                bpt = decode_attn_bytes_per_token(cap, nkv, hd, pos=pos_val,
+                                                  bk=eff_bk)
+                label = "auto" if blk is None else str(blk[0])
+                rows.append((
+                    f"kernel_decode_attn[{backend}|cap={cap}|bk={label}]", us,
+                    f"tok_s={b * 1e6 / us:.0f} bytes/tok={bpt} "
+                    f"einsum_bytes/tok={base_bytes} max_err={err:.1e}"))
+                results.append({
+                    "kernel": "decode_attention", "backend": backend,
+                    "shape": [b, cap, nkv, group, hd], "cap": cap,
+                    "block": list(blk) if blk else None, "us": us,
+                    "tok_s": b * 1e6 / us,
+                    "us_einsum_baseline": base_us,
+                    "bytes_per_token": bpt,
+                    "bytes_per_token_einsum": base_bytes,
+                    "max_abs_err_vs_ref": err,
+                })
+        if do_autotune:
+            for backend in backends:
+                if backend == "xla-ref":
+                    continue
+                winner, _ = autotune.autotune_decode_attention(
+                    b, cap, nkv, group, hd, backend=backend, repeats=1,
+                    run=lambda blk: dispatch.decode_attention(
+                        q, k, v, k_pos, pos, k_scale=ks, v_scale=vs,
+                        block=tuple(blk), backend=backend),
+                    candidates=autotune.decode_attention_candidates(
+                        cap, hd=hd, group=group, quantized=True)[:3])
+                key = autotune.cache_key(
+                    "decode_attention", (b, cap, nkv, group, hd), "int8", 8,
+                    "flash", backend)
+                winners[key] = list(winner)
+                rows.append((f"kernel_autotune_decode_attn[{backend}|cap={cap}]",
+                             0.0, f"winner={winner[0]}"))
+    return rows, results, winners
+
+
+def sweep(full: bool = False, backends=None, do_autotune: bool = False,
+          smoke: bool = False):
     """Sweep; returns (rows, artifact).  rows = (name, us, derived) for the
     benchmarks/run.py CSV harness."""
     backends = backends or _cpu_backends()
@@ -152,6 +279,15 @@ def sweep(full: bool = False, backends=None, do_autotune: bool = False):
             rows.append((f"kernel_autotune_quantize[{backend}]", 0.0,
                          f"winner={'x'.join(map(str, q_winner))}"))
 
+    # flash-decode attention: cap grid scales with the mode (--smoke keeps
+    # CI to one small cap; --full covers the ISSUE's 256/1024/4096 sweep)
+    caps = [256] if smoke else ([256, 1024, 4096] if full else [256, 1024])
+    da_rows, da_results, da_winners = sweep_decode_attention(
+        caps, backends=backends, do_autotune=do_autotune)
+    rows += da_rows
+    results += da_results
+    winners.update(da_winners)
+
     artifact = {
         "version": ARTIFACT_VERSION,
         "generated_by": "benchmarks/kernel_bench.py",
@@ -166,7 +302,7 @@ def sweep(full: bool = False, backends=None, do_autotune: bool = False):
 
 def run(full: bool = False):
     """benchmarks/run.py harness entry point: rows only (harness prints CSV)."""
-    rows, _ = sweep(full=full)
+    rows, _ = sweep(full=full, smoke=not full)
     return rows
 
 
@@ -176,7 +312,11 @@ def main(argv=None) -> None:
                     help="'all', 'default' (platform pick + reference), or a "
                          "comma list of dispatcher backend names")
     ap.add_argument("--full", action="store_true",
-                    help="paper-scale shapes and the full tile grid")
+                    help="paper-scale shapes, the full tile grid, and the "
+                         "cap ∈ {256,1024,4096} decode-attention sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI shape: small matmul/quantize shapes and a "
+                         "single-cap decode-attention sweep")
     ap.add_argument("--autotune", action="store_true",
                     help="run the measured block sweep and cache winners")
     ap.add_argument("--out", default=DEFAULT_OUT,
@@ -194,7 +334,7 @@ def main(argv=None) -> None:
                     for b in args.backend.split(",")]
 
     rows, artifact = sweep(full=args.full, backends=backends,
-                           do_autotune=args.autotune)
+                           do_autotune=args.autotune, smoke=args.smoke)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")

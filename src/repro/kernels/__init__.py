@@ -1,4 +1,5 @@
-"""Pallas TPU kernels for the compute hot-spots (quantise, fused matmul).
+"""Pallas TPU kernels for the compute hot-spots (quantise, fused matmul,
+flash-decode attention over the serving ring KV cache).
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
 ref.py (pure-jnp oracle, bit-exact).

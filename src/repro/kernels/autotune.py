@@ -28,9 +28,10 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 __all__ = [
     "VMEM_BUDGET_BYTES",
-    "matmul_vmem_bytes", "quantize_vmem_bytes",
-    "matmul_candidates", "quantize_candidates",
+    "matmul_vmem_bytes", "quantize_vmem_bytes", "decode_attention_vmem_bytes",
+    "matmul_candidates", "quantize_candidates", "decode_attention_candidates",
     "best_block", "autotune_matmul", "autotune_quantize",
+    "autotune_decode_attention",
     "cache_key", "load_cache", "save_cache", "clear_cache",
 ]
 
@@ -64,6 +65,25 @@ def quantize_vmem_bytes(block: Tuple[int, int]) -> int:
     """Elementwise kernel: double-buffered f32 input and int32 output tiles."""
     bm, bn = block
     return 2 * (bm * bn * _F32) * 2
+
+
+def decode_attention_vmem_bytes(block: Tuple[int], *, hd: int, group: int,
+                                quantized: bool) -> int:
+    """Working-set model for the flash-decode kernel at one grid step:
+    double-buffered K and V cache tiles (bk, hd) in their storage dtype
+    (int8 codes or bf16), their register upcasts (modelled as one f32 copy
+    each), the (group, bk) logit/weight tiles, per-position scale and k_pos
+    rows, and the online-softmax state (acc + m + s) plus the query tile."""
+    (bk,) = block
+    elem = 1 if quantized else 2
+    kv_tiles = 2 * 2 * bk * hd * elem          # double-buffered K and V
+    upcast = 2 * bk * hd * _F32                # in-register f32 working copies
+    logits = 2 * group * bk * _F32             # logit + weight tiles
+    scales = (2 * 2 * bk * _F32) if quantized else 0
+    kpos = 2 * bk * 4
+    state = group * (hd + 2) * _F32            # acc, m, s scratch
+    q_tile = group * hd * _F32
+    return kv_tiles + upcast + logits + scales + kpos + state + q_tile
 
 
 def _tile_sizes(dim: int, quantum: int, ceiling: int) -> List[int]:
@@ -100,6 +120,21 @@ def quantize_candidates(m: int, n: int) -> List[Tuple[int, int]]:
         for bn in _tile_sizes(n, _LANE, 1024)
         if quantize_vmem_bytes((bm, bn)) <= budget
     ]
+
+
+def decode_attention_candidates(cap: int, *, hd: int, group: int,
+                                quantized: bool) -> List[Tuple[int]]:
+    """(bk,) cache-length tile candidates under the VMEM budget.  Lane-quantum
+    multiples up to the cap; tiny caps (CPU-scale serving tests) fall back to
+    the cap itself so every shape stays tunable."""
+    budget = VMEM_BUDGET_BYTES * _VMEM_USABLE_FRACTION
+    cands = [
+        (bk,)
+        for bk in _tile_sizes(cap, _LANE, 4096)
+        if decode_attention_vmem_bytes((bk,), hd=hd, group=group,
+                                       quantized=quantized) <= budget
+    ]
+    return cands or [(cap,)]
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +211,13 @@ def best_block(kind: str, shape: tuple, dtype, bits: int, scheme: str,
     if kind == "quantize":
         m, n = shape
         return max(quantize_candidates(m, n), key=lambda b: b[0] * b[1])
+    if kind == "decode_attention":
+        _b, cap, _nkv, group, hd = shape
+        cands = decode_attention_candidates(
+            cap, hd=hd, group=group, quantized="int8" in str(dtype))
+        # largest tile = fewest sequential cache blocks per (slot, head);
+        # length-aware skipping still prunes at this granularity
+        return max(cands, key=lambda b: b[0])
     raise ValueError(f"unknown kernel kind {kind!r}")
 
 
@@ -233,3 +275,17 @@ def autotune_quantize(m: int, n: int, *, bits: int, scheme: str, backend: str,
     cands = candidates or quantize_candidates(m, n)
     return _sweep("quantize", (m, n), dtype, bits, scheme, backend, cands,
                   run, repeats)
+
+
+def autotune_decode_attention(b: int, cap: int, nkv: int, group: int, hd: int,
+                              *, backend: str, run: Callable[[tuple], object],
+                              dtype="int8", repeats: int = 2,
+                              candidates: Optional[List[tuple]] = None):
+    """Measured (bk,) sweep for the flash-decode attention kernel.  ``dtype``
+    is the cache storage dtype ('int8' or 'bfloat16'); bits follow from it."""
+    quantized = "int8" in str(dtype)
+    cands = candidates or decode_attention_candidates(
+        cap, hd=hd, group=group, quantized=quantized)
+    return _sweep("decode_attention", (b, cap, nkv, group, hd), dtype,
+                  8 if quantized else 16, "flash", backend, cands, run,
+                  repeats)

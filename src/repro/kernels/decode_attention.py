@@ -1,0 +1,212 @@
+"""Pallas TPU kernel: flash-decode attention over the ring KV cache
+(DESIGN.md §2/§3 — the serving hot path, one query token per slot).
+
+One grid program per (batch slot, kv head, cache-length block):
+
+  grid = (B, n_kv_heads, cap/bk), cache-length innermost (sequential);
+  each step streams one (bk, hd) K tile and V tile through VMEM, computes
+  the (group, bk) logit tile for the slot's GQA query group, and folds it
+  into an online-softmax state (running max m, running sum s, f32 value
+  accumulator) held in VMEM scratch — the classic split-K flash-decode
+  recurrence, so the full (cap,) logit row is never materialised.
+
+The int8 dither-quantised cache is consumed *as codes*: the K tile is
+upcast int8→bf16 in registers (tile-sized, never the full cache), the dot
+runs int8-codes·bf16-query with f32 accumulation, and the per-position
+``k_scale``/``v_scale`` fold in *after* the dot — the paper's "compute on
+the pulse-coded representation" argument applied to attention (the same
+fold as the unary dot-products of arXiv:2307.03204).  Keeping the codes
+un-dequantised in HBM is what preserves the §VII variance analysis
+(arXiv:2207.10321) and cuts decode-attention HBM traffic from
+O(cap·hd·4 B) fp to O(cap·hd·1 B) codes per head per token.
+
+Masking is in-kernel: slot validity (``k_pos >= 0``), causality
+(``k_pos <= pos``), and the sliding window (``k_pos > pos - window``) are
+evaluated per K tile.  **Length-aware block skipping**: the per-slot
+position array is a scalar-prefetch operand, so the K/V BlockSpec index
+maps clamp the cache-block index to ``pos // bk`` — Pallas elides the
+copy when the block index repeats, and a ``pl.when`` guard skips the
+compute, so a slot at position p reads ceil((p+1)/bk) blocks instead of
+all of cap.
+
+Numerics contract: the recurrence (op order, f32 state, -1e30 mask) is
+mirrored exactly by ``kernels/ref.decode_attention_ref`` — the
+``xla-ref`` dispatcher backend — so ``pallas-interpret`` is bit-identical
+to the oracle for the same ``block`` (tests/test_decode_attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_call", "shrink_block"]
+
+# renamed TPUCompilerParams -> CompilerParams across jax versions
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+_NEG_BIG = -1e30  # matches the pre-kernel einsum path's mask value
+
+
+def shrink_block(bk: int, cap: int) -> int:
+    """Largest block size ≤ bk that divides cap (cap stays un-padded: ring
+    slots are positional state, padding would invent phantom slots)."""
+    bk = max(1, min(bk, cap))
+    while cap % bk:
+        bk -= 1
+    return bk
+
+
+def _attn_body(
+    pos_ref,        # scalar prefetch: (B,) int32 per-slot absolute positions
+    q_ref,          # (1, 1, group, hd)
+    k_ref,          # (1, bk, 1, hd) int8 codes or bf16
+    v_ref,          # (1, bk, 1, hd)
+    ks_ref,         # (1, 1, bk) f32 — only when quantized
+    vs_ref,         # (1, 1, bk) f32 — only when quantized
+    kpos_ref,       # (1, bk) int32
+    out_ref,        # (1, 1, group, hd) f32
+    m_ref,          # scratch (group, 1) f32 — running max
+    s_ref,          # scratch (group, 1) f32 — running sum of exp
+    acc_ref,        # scratch (group, hd) f32 — value accumulator
+    *,
+    bk: int,
+    group: int,
+    hd: int,
+    window: int,
+    quantized: bool,
+):
+    b, j = pl.program_id(0), pl.program_id(2)
+    nb = pl.num_programs(2)
+    pos_b = pos_ref[b]
+    last = pos_b // bk  # blocks past this hold only unwritten (k_pos=-1) slots
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full((group, 1), -jnp.inf, jnp.float32)
+        s_ref[...] = jnp.zeros((group, 1), jnp.float32)
+        acc_ref[...] = jnp.zeros((group, hd), jnp.float32)
+
+    @pl.when(j <= last)
+    def _accumulate():
+        q = q_ref[...].reshape(group, hd)
+        kc = k_ref[...].reshape(bk, hd).astype(q.dtype)  # int8→bf16 upcast, tile only
+        logits = jax.lax.dot_general(
+            q, kc, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * float(1.0 / math.sqrt(hd))                   # (group, bk)
+        if quantized:
+            # per-position key scales fold in after the codes dot
+            logits = logits * (ks_ref[...].reshape(1, bk) * (1.0 / 127.0))
+        kp = kpos_ref[...].reshape(1, bk)
+        valid = (kp >= 0) & (kp <= pos_b)
+        if window:
+            valid = valid & (kp > pos_b - window)
+        logits = jnp.where(valid, logits, _NEG_BIG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new)                       # (group, bk)
+        m_ref[...] = m_new
+        s_ref[...] = s_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        if quantized:
+            # per-position value scales attach to the (unnormalised) weights
+            p = p * (vs_ref[...].reshape(1, bk) * (1.0 / 127.0))
+        vc = v_ref[...].reshape(bk, hd).astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, vc, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        out_ref[...] = (acc_ref[...] / s_ref[...]).reshape(1, 1, group, hd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block", "interpret"),
+)
+def decode_attention_call(
+    q: jax.Array,        # (B, n_kv, group, hd) bf16/f32 — post-RoPE queries
+    k: jax.Array,        # (B, cap, n_kv, hd) int8 codes or bf16
+    v: jax.Array,        # (B, cap, n_kv, hd)
+    k_pos: jax.Array,    # (B, cap) int32 — absolute position per ring slot
+    pos: jax.Array,      # (B,) int32 — per-slot absolute decode position
+    k_scale: jax.Array | None = None,   # (B, cap, n_kv) f32 when int8
+    v_scale: jax.Array | None = None,
+    *,
+    window: int = 0,
+    block: tuple = (512,),
+    interpret: bool = True,
+) -> jax.Array:
+    """Flash-decode attention over the ring cache → (B, n_kv, group, hd) f32.
+
+    ``block = (bk,)`` is the cache-length tile (shrunk to a divisor of cap).
+    The f32 output is unprojected attention; callers cast and apply W_O.
+    """
+    bsz, cap, nkv, hd = k.shape
+    group = q.shape[2]
+    quantized = k_scale is not None
+    (bk,) = block
+    bk = shrink_block(bk, cap)
+    nb = cap // bk
+
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (bsz,))
+    inputs = [q, k, v]
+    in_specs = [
+        pl.BlockSpec((1, 1, group, hd), lambda b, h, j, p_: (b, h, 0, 0)),
+        pl.BlockSpec((1, bk, 1, hd),
+                     lambda b, h, j, p_: (b, jnp.minimum(j, p_[b] // bk), h, 0)),
+        pl.BlockSpec((1, bk, 1, hd),
+                     lambda b, h, j, p_: (b, jnp.minimum(j, p_[b] // bk), h, 0)),
+    ]
+    body = _attn_body
+    if quantized:
+        # (B, cap, n_kv) → (B, n_kv, cap): the lane dimension must be the
+        # tiled cache axis (layout change only — no float ops, so the oracle
+        # parity is unaffected)
+        inputs += [k_scale.transpose(0, 2, 1), v_scale.transpose(0, 2, 1)]
+        in_specs += [
+            pl.BlockSpec((1, 1, bk),
+                         lambda b, h, j, p_: (b, h, jnp.minimum(j, p_[b] // bk))),
+            pl.BlockSpec((1, 1, bk),
+                         lambda b, h, j, p_: (b, h, jnp.minimum(j, p_[b] // bk))),
+        ]
+    else:
+        def body(pos_ref, q_ref, k_ref, v_ref, kpos_ref, out_ref,
+                 m_ref, s_ref, acc_ref, **kw):
+            return _attn_body(pos_ref, q_ref, k_ref, v_ref, None, None,
+                              kpos_ref, out_ref, m_ref, s_ref, acc_ref, **kw)
+    inputs.append(k_pos)
+    in_specs.append(
+        pl.BlockSpec((1, bk), lambda b, h, j, p_: (b, jnp.minimum(j, p_[b] // bk)))
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, nkv, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda b, h, j, p_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(body, bk=bk, group=group, hd=hd, window=window,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, nkv, group, hd), jnp.float32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pos, *inputs)

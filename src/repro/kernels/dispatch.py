@@ -1,8 +1,10 @@
 """Kernel backend registry + dispatch (DESIGN.md §3).
 
 One entry point per hot-path kernel — ``matmul`` (the fused §VIII 'separate'
-quantise+multiply) and ``quantize`` (elementwise codes) — routed to one of
-three interchangeable backends:
+quantise+multiply), ``quantize`` (elementwise codes), and
+``decode_attention`` (flash-decode over the serving ring KV cache, int8
+dither codes consumed in-kernel) — routed to one of three interchangeable
+backends:
 
 * ``pallas-tpu``       — the compiled Pallas kernels (real TPU).
 * ``pallas-interpret`` — the *same* kernel bodies evaluated in Pallas
@@ -36,11 +38,12 @@ import jax.numpy as jnp
 
 from repro.kernels import autotune, ref
 from repro.kernels import ops as kops
+from repro.kernels.decode_attention import decode_attention_call
 
 __all__ = [
     "KernelBackend", "register_backend", "available_backends",
     "resolve_backend", "resolve_policy_backend", "matmul", "quantize",
-    "DEFAULT_CPU_BACKEND",
+    "decode_attention", "DEFAULT_CPU_BACKEND",
 ]
 
 ENV_VAR = "REPRO_KERNEL_BACKEND"
@@ -49,17 +52,23 @@ DEFAULT_CPU_BACKEND = "xla-ref"
 
 @dataclass(frozen=True)
 class KernelBackend:
-    """A named implementation of the two hot-path kernels.
+    """A named implementation of the hot-path kernels.
 
     ``matmul(a, b, *, bits, scheme, counter, seed, a_range, b_range, fmt,
     block)`` → (M, N) f32;  ``quantize(x, *, bits, lo, hi, scheme, counter,
-    seed, n_pulses, fmt, block)`` → (M, N) int32 codes.  ``block`` may be
-    ignored by backends without a tiling concept (xla-ref).
+    seed, n_pulses, fmt, block)`` → (M, N) int32 codes;
+    ``decode_attention(q, k, v, k_pos, pos, *, k_scale, v_scale, window,
+    block)`` → (B, n_kv, group, hd) f32 flash-decode attention over the ring
+    KV cache.  ``block`` may be ignored by backends without a tiling concept
+    — except for ``decode_attention``, where the block *is* part of the
+    split-K recurrence contract and every backend honours it (xla-ref
+    defaults to one whole-cap block).
     """
 
     name: str
     matmul: Callable
     quantize: Callable
+    decode_attention: Optional[Callable] = None
 
 
 _REGISTRY: dict = {}
@@ -94,7 +103,14 @@ def _make_pallas(name: str, interpret: bool) -> KernelBackend:
             seed=seed, n_pulses=n_pulses, fmt=fmt, block=block,
             interpret=interpret)
 
-    return register_backend(KernelBackend(name, _matmul, _quantize))
+    def _decode_attention(q, k, v, k_pos, pos, *, k_scale, v_scale, window,
+                          block):
+        return decode_attention_call(
+            q, k, v, k_pos, pos, k_scale, v_scale, window=window,
+            block=tuple(block), interpret=interpret)
+
+    return register_backend(
+        KernelBackend(name, _matmul, _quantize, _decode_attention))
 
 
 def _make_xla_ref() -> KernelBackend:
@@ -136,7 +152,21 @@ def _make_xla_ref() -> KernelBackend:
                              lo=lo, hi=hi, scheme=scheme, n_pulses=n_pulses,
                              fmt=fmt)
 
-    return register_backend(KernelBackend("xla-ref", _matmul, _quantize))
+    @functools.partial(jax.jit, static_argnames=("window", "block"))
+    def _decattn_jit(q, k, v, k_pos, pos, k_scale, v_scale, *, window, block):
+        return ref.decode_attention_ref(
+            q, k, v, k_pos, pos, k_scale, v_scale, window=window, block=block)
+
+    def _decode_attention(q, k, v, k_pos, pos, *, k_scale, v_scale, window,
+                          block):
+        # the oracle honours `block` (it is part of the split-K contract);
+        # None collapses to one whole-cap block — the fast XLA serving path
+        return _decattn_jit(q, k, v, k_pos, jnp.asarray(pos, jnp.int32),
+                            k_scale, v_scale, window=window,
+                            block=None if block is None else tuple(block))
+
+    return register_backend(
+        KernelBackend("xla-ref", _matmul, _quantize, _decode_attention))
 
 
 _make_pallas("pallas-tpu", interpret=False)
@@ -238,3 +268,37 @@ def quantize(
     return be.quantize(x, bits=bits, lo=lo, hi=hi, scheme=scheme,
                        counter=counter, seed=seed, n_pulses=n_pulses, fmt=fmt,
                        block=block)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, n_kv_heads, group, hd) — post-RoPE queries
+    k: jax.Array,        # (B, cap, n_kv_heads, hd) int8 codes or bf16
+    v: jax.Array,        # (B, cap, n_kv_heads, hd)
+    k_pos: jax.Array,    # (B, cap) int32 absolute position per ring slot
+    pos: jax.Array,      # (B,) int32 per-slot decode position
+    *,
+    k_scale: Optional[jax.Array] = None,   # (B, cap, n_kv_heads) f32 when int8
+    v_scale: Optional[jax.Array] = None,
+    window: int = 0,
+    block: Optional[tuple] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Flash-decode attention over the ring KV cache → (B, n_kv, group, hd)
+    f32, through the selected backend (DESIGN.md §2/§6).
+
+    The int8 dither-quantised cache is consumed as codes — upcast tile-by-
+    tile in VMEM, scales folded in after the dot — so the decode path never
+    materialises a full-cap fp copy of the cache.  ``block=(bk,)`` is the
+    cache-length tile of the split-K online-softmax recurrence; Pallas
+    backends autotune it, xla-ref defaults to one whole-cap block.
+    """
+    be = resolve_backend(backend)
+    if block is None and be.name.startswith("pallas"):
+        b, cap, nkv, hd = k.shape
+        group = q.shape[2]
+        bits = 8 if k.dtype == jnp.int8 else 16
+        block = autotune.best_block("decode_attention",
+                                    (b, cap, nkv, group, hd), str(k.dtype),
+                                    bits, "flash", be.name)
+    return be.decode_attention(q, k, v, k_pos, pos, k_scale=k_scale,
+                               v_scale=v_scale, window=window, block=block)

@@ -7,6 +7,8 @@ exact equality of integer codes and tight allclose on float outputs.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -17,6 +19,7 @@ __all__ = [
     "dither_round_ref",
     "stochastic_round_ref",
     "dither_matmul_ref",
+    "decode_attention_ref",
 ]
 
 
@@ -121,3 +124,100 @@ def dither_matmul_ref(
             + q * a_range[0] * b_range[0]
         )
     return out
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, n_kv, group, hd) bf16/f32 — post-RoPE queries
+    k: jax.Array,        # (B, cap, n_kv, hd) int8 codes or bf16
+    v: jax.Array,        # (B, cap, n_kv, hd)
+    k_pos: jax.Array,    # (B, cap) int32
+    pos: jax.Array,      # (B,) int32 per-slot absolute decode position
+    k_scale: jax.Array | None = None,   # (B, cap, n_kv) f32 when int8
+    v_scale: jax.Array | None = None,
+    *,
+    window: int = 0,
+    block: tuple | None = None,
+) -> jax.Array:
+    """Oracle for the flash-decode attention kernel → (B, n_kv, group, hd) f32.
+
+    The dispatch-level contract for ``decode_attention`` is the *split-K
+    online-softmax recurrence over cache-length blocks* — this function IS
+    that contract, in plain jnp: a ``lax.scan`` over cap/bk blocks whose
+    per-block ops (int8→query-dtype upcast, f32-accumulated dot, post-dot
+    scale folding, -1e30 masking, running max/sum/value state) mirror the
+    Pallas kernel body op-for-op, so ``pallas-interpret`` is bit-identical
+    to this oracle for the same ``block``.  Mathematically it equals the
+    pre-kernel full-softmax einsum path (softmax over every valid slot);
+    numerically it differs only by float-summation association — and it is
+    *more* precise, since the value dot accumulates in f32 instead of the
+    einsum path's bf16 probabilities (tests/test_decode_attention.py pins
+    both properties).
+
+    ``block=None`` → one block of the whole cap: the recurrence collapses
+    to a single masked softmax pass — the fast XLA path the serving engine
+    uses off-TPU.
+    """
+    # late import: the kernel module hosts shrink_block (both paths MUST
+    # shrink `block` to the same divisor of cap or the bit-parity contract
+    # silently breaks); it only depends on pallas at pallas_call time
+    from repro.kernels.decode_attention import shrink_block
+
+    bsz, cap, nkv, hd = k.shape
+    group = q.shape[2]
+    quantized = k_scale is not None
+    bk = shrink_block(cap if block is None else block[0], cap)
+    nb = cap // bk
+    inv = float(1.0 / math.sqrt(hd))
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (bsz,))
+    last = pos // bk
+
+    def gather(x, start):
+        """Per-row (bk,)-long block of axis 1, starting at slot ``start``."""
+        return jax.vmap(
+            lambda xb, st: jax.lax.dynamic_slice_in_dim(xb, st, bk, axis=0)
+        )(x, start)
+
+    def step(carry, j):
+        m, s, acc = carry
+        jc = jnp.minimum(j, last) * bk                     # clamped block start
+        kb = gather(k, jc)                                 # (B, bk, n_kv, hd)
+        vb = gather(v, jc)
+        kpb = gather(k_pos, jc)                            # (B, bk)
+        kc = kb.astype(q.dtype)
+        logits = jax.lax.dot_general(
+            q, kc, dimension_numbers=(((3,), (3,)), ((0, 1), (0, 2))),
+            preferred_element_type=jnp.float32,
+        ) * inv                                            # (B, n_kv, group, bk)
+        if quantized:
+            ksb = gather(k_scale, jc).transpose(0, 2, 1)   # (B, n_kv, bk)
+            logits = logits * (ksb[:, :, None, :] * (1.0 / 127.0))
+        kp = kpb[:, None, None, :]
+        pb = pos[:, None, None, None]
+        valid = (kp >= 0) & (kp <= pb)
+        if window:
+            valid = valid & (kp > pb - window)
+        logits = jnp.where(valid, logits, -1e30)
+
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new)
+        s_new = s * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        if quantized:
+            vsb = gather(v_scale, jc).transpose(0, 2, 1)
+            p = p * (vsb[:, :, None, :] * (1.0 / 127.0))
+        acc_new = acc * alpha + jax.lax.dot_general(
+            p, vb.astype(jnp.float32),
+            dimension_numbers=(((3,), (1,)), ((0, 1), (0, 2))),
+            preferred_element_type=jnp.float32,
+        )
+        act = (j <= last)[:, None, None, None]
+        return (jnp.where(act, m_new, m), jnp.where(act, s_new, s),
+                jnp.where(act, acc_new, acc)), None
+
+    init = (
+        jnp.full((bsz, nkv, group, 1), -jnp.inf, jnp.float32),
+        jnp.zeros((bsz, nkv, group, 1), jnp.float32),
+        jnp.zeros((bsz, nkv, group, hd), jnp.float32),
+    )
+    (m, s, acc), _ = jax.lax.scan(step, init, jnp.arange(nb, dtype=jnp.int32))
+    return acc / s

@@ -20,7 +20,6 @@ single batched forward.
 from __future__ import annotations
 
 import functools
-import math
 from typing import Any, Dict, Optional
 
 import jax
@@ -223,26 +222,22 @@ def _attention_decode(params, cfg: ModelConfig, x, cache, pos, policy, counter,
         k_pos = cache["k_pos"].at[rows, slot].set(pos)
         new_cache = {"k": ck, "v": cv, "k_pos": k_pos}
 
-    valid = (k_pos >= 0) & (k_pos <= pos[:, None])            # (B, cap)
-    if cfg.window:
-        valid = valid & (k_pos > pos[:, None] - cfg.window)
+    # flash-decode over the ring cache through the kernel dispatcher
+    # (DESIGN.md §2/§3): int8 codes stay codes — upcast tile-by-tile in
+    # VMEM, per-position scales folded in after the dot — with k_pos
+    # validity / causality / sliding-window masking and length-aware block
+    # skipping in-kernel.  Backend: $REPRO_KERNEL_BACKEND or the platform
+    # default (TPU → pallas-tpu, else the jitted xla-ref oracle).
+    from repro.kernels import dispatch as _dispatch
 
-    # grouped GQA decode: read the cache once, no repeated-KV materialisation
     group = nh // nkv
-    qg = q.reshape(b, 1, nkv, group, hd)
-    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
-                        ck.astype(x.dtype)).astype(jnp.float32) / math.sqrt(hd)
-    if quantized:
-        # fold per-position/per-head key scales in after the int8 dot
-        logits = logits * (new_cache["k_scale"] / 127.0).transpose(0, 2, 1)[:, :, None, None, :]
-    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
-    if quantized:
-        # per-position value scales attach to the probabilities
-        pv = probs * (new_cache["v_scale"] / 127.0).transpose(0, 2, 1)[:, :, None, None, :].astype(probs.dtype)
-        out = jnp.einsum("bhgqk,bkhd->bqhgd", pv, cv.astype(x.dtype)).reshape(b, 1, nh * hd)
-    else:
-        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cv).reshape(b, 1, nh * hd)
+    qg = q[:, 0].reshape(b, nkv, group, hd)
+    attn = _dispatch.decode_attention(
+        qg, ck, cv, k_pos, pos,
+        k_scale=new_cache.get("k_scale"), v_scale=new_cache.get("v_scale"),
+        window=cfg.window or 0,
+    )
+    out = attn.astype(x.dtype).reshape(b, 1, nh * hd)
     return dense(out, params["wo"], policy, counter, seed=4), new_cache
 
 

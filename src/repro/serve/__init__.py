@@ -1,8 +1,9 @@
 """repro.serve — two-phase batched-prefill/decode serving (DESIGN.md §6)."""
 
-from repro.serve.engine import Engine, Request, make_serve_fns
+from repro.serve.engine import (Engine, Request, make_decode_and_sample,
+                                make_serve_fns)
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
 
-__all__ = ["Engine", "Request", "make_serve_fns", "SamplingParams",
-           "sample_tokens", "Scheduler"]
+__all__ = ["Engine", "Request", "make_serve_fns", "make_decode_and_sample",
+           "SamplingParams", "sample_tokens", "Scheduler"]

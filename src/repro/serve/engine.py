@@ -33,7 +33,8 @@ from repro.numerics.policy import QuantPolicy
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
 
-__all__ = ["make_serve_fns", "Engine", "Request", "SamplingParams", "Scheduler"]
+__all__ = ["make_serve_fns", "make_decode_and_sample", "Engine", "Request",
+           "SamplingParams", "Scheduler"]
 
 
 def make_serve_fns(cfg: ModelConfig, policy: Optional[QuantPolicy] = None, *,
@@ -47,11 +48,13 @@ def make_serve_fns(cfg: ModelConfig, policy: Optional[QuantPolicy] = None, *,
     forward (``transformer.prefill_with_cache``); recurrent/enc-dec
     architectures fall back to a scanned on-device prefill
     (``registry.apply_prefill``).  ``decode_step(params, token, cache,
-    kv_offset, counter)`` is one token for every slot.  The engine jits
-    exactly these two functions (launch/dryrun.py rooflines the same
-    prefill-forward and decode-step compute at pod scale).  ``policy`` is
-    resolved here so the traced steps embed a concrete kernel-dispatcher
-    backend.
+    kv_offset, counter)`` is one token for every slot.  The engine jits the
+    prefill step directly and drives decode through the fused
+    ``make_decode_and_sample`` tick below; ``decode_step`` remains the
+    standalone two-call building block (launch/dryrun.py rooflines the same
+    prefill-forward and decode-step compute at pod scale, and the parity
+    tests replay it against the fused path).  ``policy`` is resolved here so
+    the traced steps embed a concrete kernel-dispatcher backend.
     """
     policy = policy.resolved() if policy is not None else None
     batched = registry.supports_batched_prefill(cfg)
@@ -72,6 +75,34 @@ def make_serve_fns(cfg: ModelConfig, policy: Optional[QuantPolicy] = None, *,
                                      counter=counter, kv_offset=kv_offset)
 
     return prefill_step, decode_step
+
+
+def make_decode_and_sample(cfg: ModelConfig,
+                           policy: Optional[QuantPolicy] = None):
+    """Build the fused single-dispatch decode tick (DESIGN.md §6).
+
+    One jitted call per generated token: ``decode_and_sample(params, token,
+    cache, kv_offset, counter, temps, topks, seeds, counters)`` runs the
+    model decode step *and* the per-slot sampler on device and returns
+    ``(tokens (B,) int32, counters + 1, new cache)`` — the PR-2 engine's
+    ``decode_step`` + ``sample_tokens`` pair collapsed into one device
+    dispatch, so the steady-state tick costs one host→device launch instead
+    of two.  The sampling counters advance on device (one emitted token per
+    tick per slot); the engine refreshes its device-resident copies only
+    when slot state actually changes.  Token-stream equivalence with the
+    two-call path is pinned by tests/test_decode_attention.py.
+    """
+    policy = policy.resolved() if policy is not None else None
+
+    def decode_and_sample(params, token, cache, kv_offset, counter,
+                          temps, topks, seeds, counters):
+        logits, new_cache = registry.apply_decode(
+            params, cfg, token, cache, policy=policy, counter=counter,
+            kv_offset=kv_offset)
+        toks = sample_tokens(logits, temps, topks, seeds, counters)
+        return toks, counters + 1, new_cache
+
+    return decode_and_sample
 
 
 @dataclass
@@ -134,11 +165,20 @@ class Engine:
        batched ``prefill_step`` — the prompt costs one forward pass, its KV
        lands in the admitted slots, and the prefill logits seed each
        request's first sampled token;
-    2. runs one ``decode_step`` for every active slot and samples with the
-       per-request :class:`SamplingParams` (per-slot temperature / top-k /
-       seed / counter arrays, one jitted ``sample_tokens`` call);
+    2. runs one fused ``decode_and_sample`` call for every active slot —
+       model decode step *and* per-request sampling
+       (:class:`SamplingParams`) in a single device dispatch per tick;
     3. retires slots on EOS/stop tokens, ``max_new``, or ``max_len``
        preemption, freeing them for the next admission wave.
+
+    Steady-state host↔device traffic is minimal: the per-slot sampling
+    state (temperature / top-k / seed / counter-offset arrays) and the last
+    sampled token live **device-resident** and are re-uploaded only when
+    slot membership changes (admission), with the sampling counters and
+    last tokens advancing on device inside the fused step; and the ring
+    cache argument is **donated** to the jitted decode and prefill-merge
+    steps, so the B×cap×layers KV updates in place instead of
+    double-buffering every tick.
 
     The policy dither counter advances once per engine tick ("rounding in
     time", §VII); per-request ``counter_offset`` shifts the int8-KV and
@@ -160,17 +200,24 @@ class Engine:
         prefill_step, decode_step = make_serve_fns(
             cfg, policy, max_len=max_len, kv_quant=kv_quant, frames=frames)
         self._prefill = jax.jit(prefill_step)
-        self._decode = jax.jit(decode_step)
         self._sample = jax.jit(sample_tokens)
+        # one fused device dispatch per decode tick; the cache argument is
+        # donated so the ring buffer updates in place (no double-buffered
+        # B×cap×layers KV copy per token)
+        self._decode_and_sample = jax.jit(
+            make_decode_and_sample(cfg, policy), donate_argnums=(2,))
         self._merge = jax.jit(
-            lambda old, new, act: registry.merge_prefill(cfg, old, new, act))
+            lambda old, new, act: registry.merge_prefill(cfg, old, new, act),
+            donate_argnums=(0,))
 
         self.scheduler = (Scheduler(scheduler) if isinstance(scheduler, str)
                           else scheduler)
         self.slots: List[Optional[Request]] = [None] * batch
         self.finished: List[Request] = []
         self.tick = 0
-        # per-slot state mirrored on the host (packed into arrays per call)
+        # per-slot state: host mirrors for bookkeeping, plus device-resident
+        # copies refreshed only when slot membership changes (admission);
+        # steady-state decode ticks advance the device copies in place
         self._last_token = np.zeros((batch,), np.int32)
         self._slot_pos = np.zeros((batch,), np.int64)
         self._temps = np.zeros((batch,), np.float32)
@@ -178,6 +225,8 @@ class Engine:
         self._seeds = np.zeros((batch,), np.int32)
         self._offsets = np.zeros((batch,), np.int32)
         self._counters = np.zeros((batch,), np.int32)
+        self._dev = {}
+        self._dev_dirty = True
         self.stats = {"prefill_s": 0.0, "prefill_tokens": 0, "prefill_calls": 0,
                       "decode_s": 0.0, "decode_tokens": 0, "decode_calls": 0}
 
@@ -212,6 +261,22 @@ class Engine:
         return self.finished
 
     # ------------------------------------------------------------ internals
+
+    def _refresh_device_state(self):
+        """Re-upload the per-slot sampling state and last tokens if any slot
+        changed since the previous tick (admission marks the state dirty);
+        in steady state this is a no-op and decode ticks touch the host only
+        to read the sampled tokens back."""
+        if self._dev_dirty:
+            self._dev = {
+                "temps": jnp.asarray(self._temps),
+                "topks": jnp.asarray(self._topks),
+                "seeds": jnp.asarray(self._seeds),
+                "offsets": jnp.asarray(self._offsets),
+                "counters": jnp.asarray(self._counters),
+                "last_token": jnp.asarray(self._last_token),
+            }
+            self._dev_dirty = False
 
     def _admit_and_prefill(self):
         free = [i for i, s in enumerate(self.slots) if s is None]
@@ -249,15 +314,17 @@ class Engine:
         for i, p in prompts.items():
             toks[i, : len(p)] = p
 
+        self._dev_dirty = True            # admission changed per-slot state
+        self._refresh_device_state()
         t0 = time.time()
         last_logits, pf_cache = self._prefill(
             self.params, jnp.asarray(toks), jnp.asarray(lens),
-            jnp.asarray(self._offsets), self.tick)
+            self._dev["offsets"], self.tick)
         self.cache = self._merge(self.cache, pf_cache,
                                  jnp.asarray(lens > 0))
         first = np.asarray(self._sample(
-            last_logits, jnp.asarray(self._temps), jnp.asarray(self._topks),
-            jnp.asarray(self._seeds), jnp.asarray(self._counters)))
+            last_logits, self._dev["temps"], self._dev["topks"],
+            self._dev["seeds"], self._dev["counters"]))
         dt = time.time() - t0
         self.stats["prefill_s"] += dt
         self.stats["prefill_tokens"] += int(lens.sum())
@@ -266,17 +333,25 @@ class Engine:
         now = time.time()
         for i, req in list(prompts.items()):
             self._emit(i, self.slots[i], int(first[i]), now)
+        # _emit advanced host counters / last tokens for the admitted slots;
+        # re-sync the device copies before the first decode tick reads them
+        self._dev_dirty = True
 
     def _decode_tick(self):
         active = [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        self._refresh_device_state()
         t0 = time.time()
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(self._last_token), self.cache,
-            jnp.asarray(self._offsets), self.tick)
-        toks = np.asarray(self._sample(
-            logits, jnp.asarray(self._temps), jnp.asarray(self._topks),
-            jnp.asarray(self._seeds), jnp.asarray(self._counters)))
+        toks_dev, counters_dev, self.cache = self._decode_and_sample(
+            self.params, self._dev["last_token"], self.cache,
+            self._dev["offsets"], self.tick,
+            self._dev["temps"], self._dev["topks"], self._dev["seeds"],
+            self._dev["counters"])
+        toks = np.asarray(toks_dev)
         dt = time.time() - t0
+        # the fused step advanced counters and produced the next input token
+        # on device — keep those copies resident (no re-upload next tick)
+        self._dev["counters"] = counters_dev
+        self._dev["last_token"] = toks_dev
         self.tick += 1
         self.stats["decode_s"] += dt
         self.stats["decode_tokens"] += len(active)

@@ -69,22 +69,31 @@ def test_engine_prefill_matches_token_by_token_policy_off(seed):
     assert _engine_generate(prompts, 6) == ref
 
 
-@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("seed", [1, 7])
 def test_engine_prefill_matches_token_by_token_policy_dither(seed):
     """Same check with int8 dither-rounded matmuls switched on.  (The
     rounding element indices differ between a (B·S, d) prefill matmul and a
     (B, d) decode matmul, so logits agree only to rounding noise — these
-    seeds are decisively argmax-stable and the outputs are identical.)"""
+    seeds are argmax-stable under the flash-decode attention path's f32
+    value accumulation and the outputs are identical.  Re-pinned from
+    [0, 1] when PR 3 routed decode attention through the kernel dispatcher:
+    the old einsum path rounded logits and probabilities to bf16, and seed
+    0's chain included exact logit ties that only survived by luck.)"""
     pol = QuantPolicy(scheme="dither", bits=8)
     prompts = _prompts(seed, 2, 5)
     ref = _ref_generate(PARAMS, CFG, prompts, 6, policy=pol)
     assert _engine_generate(prompts, 6, policy=pol) == ref
 
 
-def test_prefill_cache_bitwise_equals_decode_cache():
-    """prefill_with_cache writes the exact bf16 K/V ring layout (per-slot
+def test_prefill_cache_equals_decode_cache():
+    """prefill_with_cache writes the same bf16 K/V ring layout (per-slot
     positions included) that token-by-token decode would have written —
-    variable prompt lengths, right-padded."""
+    variable prompt lengths, right-padded.  The first layer sees identical
+    inputs either way, so its K/V must match bit-for-bit; deeper layers'
+    inputs pass through attention — full-sequence einsum in prefill vs the
+    flash-decode kernel path in decode (f32 value accumulation, PR 3) — so
+    their bf16 K/V agree to rounding (≤ a couple of bf16 ULPs), exactly as
+    the int8-cache variant below has always documented."""
     toks = jnp.asarray(_prompts(4, 3, 8), jnp.int32)
     lengths = jnp.array([8, 5, 3], jnp.int32)
     toks = toks * (jnp.arange(8)[None, :] < lengths[:, None])
@@ -98,10 +107,19 @@ def test_prefill_cache_bitwise_equals_decode_cache():
         ref = registry.merge_prefill(CFG, ref, new, t < lengths)
 
     assert jnp.array_equal(cache["pos"], lengths)
-    for got, want in zip(jax.tree.leaves(cache), jax.tree.leaves(ref)):
+    got0, want0 = cache["layers"][0], ref["layers"][0]
+    for name in ("k", "v", "k_pos"):
+        assert jnp.array_equal(got0[name][0], want0[name][0]), name
+    for (path, got), (_, want) in zip(
+            jax.tree_util.tree_leaves_with_path(cache),
+            jax.tree_util.tree_leaves_with_path(ref)):
         assert got.shape == want.shape
-        assert jnp.array_equal(got.astype(jnp.float32),
-                               want.astype(jnp.float32))
+        if got.dtype == jnp.int32:          # pos / k_pos stay exact
+            assert jnp.array_equal(got, want), path
+        else:
+            assert jnp.allclose(got.astype(jnp.float32),
+                                want.astype(jnp.float32),
+                                rtol=2e-2, atol=2e-2), path
 
 
 def test_prefill_quantised_cache_first_layer_bit_exact():
