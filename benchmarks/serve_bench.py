@@ -9,13 +9,21 @@ rates.  The headline check is ``prefill_to_decode_ratio``: batched prefill
 pushes prompt tokens at a multiple of the decode rate because a prompt
 costs one forward pass instead of O(prompt_len) decode ticks.
 
+``--kv-layout paged`` runs the same grid over the paged block-pool cache
+(PR 4), and attention-only archs additionally get a **prefix-reuse
+workload**: every request shares a block-aligned system prompt, served
+once with prefix caching on and once off — reporting the prefix-hit rate,
+TTFT with vs without reuse, and the pool's peak *live* KV HBM footprint
+against what the dense ring would have reserved up front.
+
 Standalone CLI (emits the perf artifact future PRs diff against, alongside
 ``kernel_bench.json``):
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke     # CI: tiny
       # config; quantised policies run the Pallas interpret backend
   PYTHONPATH=src python benchmarks/serve_bench.py [--full] \
-      [--arch smollm_135m] [--out benchmarks/artifacts/serve_bench.json]
+      [--kv-layout ring|paged] [--arch smollm_135m] \
+      [--out benchmarks/artifacts/serve_bench.json]
 
 The artifact schema is documented in benchmarks/README.md.  CPU numbers are
 relative; they track the serving path's perf trajectory across PRs.
@@ -48,7 +56,7 @@ from repro.serve import Engine, Request, SamplingParams
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "artifacts", "serve_bench.json")
 
-ARTIFACT_VERSION = 2
+ARTIFACT_VERSION = 3
 
 POLICIES = ("none", "dither", "stochastic", "deterministic")
 
@@ -57,33 +65,69 @@ def _pct(xs, q):
     return float(np.percentile(np.asarray(xs, float), q)) if xs else 0.0
 
 
-def _attn_profile(cfg, max_len: int, kv_quant: bool, batch: int):
+def _n_attn(cfg) -> int:
+    return sum(1 for i in range(cfg.n_layers) if cfg.layer_kind(i) == "attn")
+
+
+def _kv_bytes_per_block(cfg, block_size: int, kv_quant: bool) -> int:
+    """HBM bytes one pool block costs across every attention layer."""
+    nkv, hd = cfg.n_kv_heads, cfg.hd()
+    elem = 1 if kv_quant else 2
+    per_layer = 2 * block_size * nkv * hd * elem
+    if kv_quant:
+        per_layer += 2 * block_size * nkv * 4
+    return _n_attn(cfg) * per_layer
+
+
+def _kv_bytes_dense_ring(cfg, batch: int, max_len: int,
+                         kv_quant: bool) -> int:
+    """What the dense per-slot ring reserves up front (slots × cap)."""
+    cap = min(cfg.window, max_len) if cfg.window else max_len
+    nkv, hd = cfg.n_kv_heads, cfg.hd()
+    elem = 1 if kv_quant else 2
+    per_layer = batch * (2 * cap * nkv * hd * elem + cap * 4)
+    if kv_quant:
+        per_layer += batch * 2 * cap * nkv * 4
+    return _n_attn(cfg) * per_layer
+
+
+def _attn_profile(cfg, max_len: int, kv_quant: bool, batch: int,
+                  kv_layout: str = "ring", block_size=None):
     """How decode attention runs for this config: the dispatcher backend the
     engine's traced decode step embeds, its cache-length block, and the
     analytic steady-state attention HBM bytes per generated token per slot
-    (sum over attention layers, ring at full occupancy).  Since PR 3 the
+    (sum over attention layers, cache at full occupancy).  Since PR 3 the
     int8 cache is consumed as codes in-kernel — never upcast to a full-cap
-    fp tensor — so there is no fp-upcast term."""
+    fp tensor — so there is no fp-upcast term.  The paged layout's block is
+    the pool block size; its per-token read replaces the ring's k_pos rows
+    with the (tiny) block-table fetch."""
     backend = dispatch.resolve_backend(None).name
     cap = min(cfg.window, max_len) if cfg.window else max_len
     nkv, hd = cfg.n_kv_heads, cfg.hd()
     group = max(1, cfg.n_heads // max(1, nkv))
-    if backend.startswith("pallas"):
-        dtype = "int8" if kv_quant else "bfloat16"
-        block = list(autotune.best_block(
-            "decode_attention", (batch, cap, nkv, group, hd), dtype,
-            8 if kv_quant else 16, "flash", backend))
-    else:
-        block = None                   # xla-ref: one whole-cap pass
     elem = 1 if kv_quant else 2
-    n_attn = sum(1 for i in range(cfg.n_layers) if cfg.layer_kind(i) == "attn")
-    per_layer = nkv * 2 * cap * hd * elem + cap * 4
-    if kv_quant:
-        per_layer += nkv * 2 * cap * 4
+    if kv_layout == "paged":
+        bs = int(block_size)
+        block = [bs]
+        nbmax = -(-max_len // bs)
+        per_layer = nkv * 2 * max_len * hd * elem + nbmax * 4
+        if kv_quant:
+            per_layer += nkv * 2 * max_len * 4
+    else:
+        if backend.startswith("pallas"):
+            dtype = "int8" if kv_quant else "bfloat16"
+            block = list(autotune.best_block(
+                "decode_attention", (batch, cap, nkv, group, hd), dtype,
+                8 if kv_quant else 16, "flash", backend))
+        else:
+            block = None               # xla-ref: one whole-cap pass
+        per_layer = nkv * 2 * cap * hd * elem + cap * 4
+        if kv_quant:
+            per_layer += nkv * 2 * cap * 4
     return {
         "attn_backend": backend,
         "attn_block": block,
-        "attn_bytes_per_token": int(n_attn * per_layer),
+        "attn_bytes_per_token": int(_n_attn(cfg) * per_layer),
         "attn_full_cap_fp32_upcast": False,
     }
 
@@ -91,7 +135,7 @@ def _attn_profile(cfg, max_len: int, kv_quant: bool, batch: int):
 def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
                  backend: str, batch: int, max_len: int, prompt_len: int,
                  max_new: int, requests: int, temperature: float = 0.0,
-                 waves: int = 3):
+                 waves: int = 3, kv_layout: str = "ring", block_size=None):
     """Measure one (policy × kv_quant) serving configuration.
 
     Builds a fresh engine, runs one warm-up request through the same prompt
@@ -106,8 +150,14 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
     frames = (jnp.zeros((batch, cfg.n_enc_tokens, cfg.d_model), jnp.bfloat16)
               if cfg.is_encdec else None)
     kv_quant = kv_quant and not cfg.is_encdec   # enc-dec self-KV stays bf16
+    kw = {}
+    if kv_layout == "paged":
+        kw = dict(kv_layout="paged", block_size=block_size,
+                  prefix_cache=False)           # the grid measures cold rates
     engine = Engine(params, cfg, batch, max_len, policy=policy, frames=frames,
-                    kv_quant=kv_quant)
+                    kv_quant=kv_quant, **kw)
+    if kv_layout == "paged":
+        block_size = engine.block_size
 
     engine.submit(Request(rid=-1, prompt=[1] * prompt_len, max_new=2))
     engine.run(ticks=8)
@@ -138,11 +188,14 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
     reasons = {}
     for r in done:
         reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
-    attn_profile = _attn_profile(cfg, max_len, kv_quant, batch)
+    attn_profile = _attn_profile(cfg, max_len, kv_quant, batch,
+                                 kv_layout=kv_layout, block_size=block_size)
     return {
         "arch": cfg.name, "policy": policy_name,
         "kernel_backend": backend if policy_name != "none" else None,
         **attn_profile,
+        "kv_layout": kv_layout,
+        "block_size": int(block_size) if kv_layout == "paged" else None,
         "kv_quant": bool(kv_quant), "batch": batch, "max_len": max_len,
         "prompt_len": prompt_len, "max_new": max_new, "requests": requests,
         "waves": waves,
@@ -156,36 +209,134 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
     }
 
 
+def bench_prefix_reuse(cfg, params, *, batch: int, max_len: int,
+                       prefix_len: int, tail_len: int, max_new: int,
+                       requests: int, block_size: int,
+                       kv_quant: bool = False):
+    """The prefix-reuse workload (PR 4): every request shares one
+    block-aligned system prompt plus a unique tail, served twice — prefix
+    caching on vs off — on the paged engine.  Reports the hit rate, TTFT
+    both ways, and the pool's peak *live* HBM footprint against the dense
+    ring's up-front reservation.  The caching-on engine is warmed with one
+    seeding wave so the measured wave hits the already-sealed prefix (the
+    steady state of a shared-system-prompt deployment)."""
+    prefix_len = max(block_size, (prefix_len // block_size) * block_size)
+    system = [(3 * i) % (cfg.vocab_size - 1) + 1 for i in range(prefix_len)]
+
+    def wave(rid0):
+        return [Request(rid=rid0 + r,
+                        prompt=system + [(7 * r + i) % (cfg.vocab_size - 1) + 1
+                                         for i in range(tail_len)],
+                        sampling=SamplingParams(max_new=max_new, seed=r))
+                for r in range(requests)]
+
+    def serve(prefix_cache: bool):
+        eng = Engine(params, cfg, batch, max_len, kv_quant=kv_quant,
+                     kv_layout="paged", block_size=block_size,
+                     prefix_cache=prefix_cache)
+        for req in wave(0):              # warm-up + prefix-seeding wave
+            eng.submit(req)
+        eng.run(ticks=requests * (max_new + 4) + 20)
+        eng.finished.clear()
+        eng.reset_stats()
+        for req in wave(1000):           # measured wave
+            eng.submit(req)
+        peak_live = 0
+        for _ in range(requests * (max_new + 4) + 20):
+            eng.step()
+            peak_live = max(peak_live, eng.pool.live_blocks)
+            if not len(eng.scheduler) and all(s is None for s in eng.slots):
+                break
+        done = eng.finished
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        return eng, done, ttfts, peak_live
+
+    eng_hit, done_hit, ttft_hit, peak_live = serve(True)
+    _, done_cold, ttft_cold, _ = serve(False)
+    prompt_tokens = requests * (prefix_len + tail_len)
+    live_bytes = peak_live * _kv_bytes_per_block(cfg, block_size, kv_quant)
+    dense_bytes = _kv_bytes_dense_ring(cfg, batch, max_len, kv_quant)
+    return {
+        "workload": "prefix_reuse", "arch": cfg.name,
+        "kv_layout": "paged", "block_size": int(block_size),
+        "kv_quant": bool(kv_quant),
+        "batch": batch, "max_len": max_len, "prefix_len": prefix_len,
+        "tail_len": tail_len, "max_new": max_new, "requests": requests,
+        "completed": len(done_hit),
+        "prefix_hit_tokens": int(eng_hit.stats["prefix_hit_tokens"]),
+        "prefix_hit_rate": eng_hit.stats["prefix_hit_tokens"] / prompt_tokens,
+        "ttft_ms_hit": {"mean": 1e3 * float(np.mean(ttft_hit)) if ttft_hit else 0.0,
+                        "p50": 1e3 * _pct(ttft_hit, 50)},
+        "ttft_ms_cold": {"mean": 1e3 * float(np.mean(ttft_cold)) if ttft_cold else 0.0,
+                         "p50": 1e3 * _pct(ttft_cold, 50)},
+        "kv_hbm_bytes_peak_live": int(live_bytes),
+        "kv_hbm_bytes_dense_ring": int(dense_bytes),
+        "kv_hbm_live_to_dense": live_bytes / dense_bytes if dense_bytes else 0.0,
+    }
+
+
 def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
           full: bool = False, backend: str = "jnp", policies=POLICIES,
-          reduced: bool = True):
-    """Run the policy × kv_quant grid; returns (rows, artifact)."""
+          reduced: bool = True, kv_layout: str = "ring", block_size=None):
+    """Run the policy × kv_quant grid; returns (rows, artifact).  The paged
+    layout additionally runs the prefix-reuse workload on attention-only
+    archs (others fall back to the ring grid — the paged pool requires
+    per-position KV)."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
     params = registry.init_model(jax.random.PRNGKey(0), cfg)
+    if kv_layout == "paged" and not registry.supports_paged_kv(cfg):
+        print(f"arch {cfg.name} has no per-position KV to page; "
+              f"falling back to kv_layout=ring", file=sys.stderr)
+        kv_layout = "ring"
 
     if smoke:
         shape = dict(batch=2, max_len=32, prompt_len=8, max_new=4, requests=3)
+        prefix_shape = dict(batch=2, max_len=32, prefix_len=16, tail_len=4,
+                            max_new=4, requests=3)
     elif full:
         shape = dict(batch=8, max_len=256, prompt_len=64, max_new=32,
                      requests=16)
+        prefix_shape = dict(batch=8, max_len=256, prefix_len=64, tail_len=16,
+                            max_new=16, requests=16)
     else:
         shape = dict(batch=4, max_len=128, prompt_len=16, max_new=8,
                      requests=6)
+        prefix_shape = dict(batch=4, max_len=128, prefix_len=32, tail_len=8,
+                            max_new=8, requests=6)
+
+    if kv_layout == "paged" and block_size is None:
+        block_size = max(4, min(16, shape["max_len"] // 4))
 
     rows, results = [], []
     for policy_name in policies:
         for kv_quant in (False, True):
             res = bench_config(cfg, params, policy_name, kv_quant,
-                               backend=backend, **shape)
+                               backend=backend, kv_layout=kv_layout,
+                               block_size=block_size, **shape)
             results.append(res)
             us_per_tok = (1e6 / res["decode_tok_s"]
                           if res["decode_tok_s"] else 0.0)
             rows.append((
-                f"serve[{policy_name}|kv_quant={int(kv_quant)}]", us_per_tok,
+                f"serve[{policy_name}|kv_quant={int(kv_quant)}"
+                f"|{kv_layout}]", us_per_tok,
                 f"prefill/decode={res['prefill_to_decode_ratio']:.1f}x "
                 f"ttft_p50={res['ttft_ms']['p50']:.0f}ms"))
+
+    if kv_layout == "paged":
+        for kv_quant in (False, True):
+            res = bench_prefix_reuse(cfg, params, block_size=block_size,
+                                     kv_quant=kv_quant, **prefix_shape)
+            results.append(res)
+            speedup = (res["ttft_ms_cold"]["p50"] / res["ttft_ms_hit"]["p50"]
+                       if res["ttft_ms_hit"]["p50"] else 0.0)
+            rows.append((
+                f"serve[prefix_reuse|kv_quant={int(kv_quant)}|paged]",
+                res["ttft_ms_hit"]["p50"] * 1e3,
+                f"hit_rate={res['prefix_hit_rate']:.2f} "
+                f"ttft_cold/hit={speedup:.2f}x "
+                f"live/dense_hbm={res['kv_hbm_live_to_dense']:.2f}"))
 
     artifact = {
         "version": ARTIFACT_VERSION,
@@ -194,6 +345,7 @@ def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
         "platform": jax.default_backend(),
         "unix_time": time.time(),
         "smoke": smoke, "full": full, "arch": cfg.name, "shape": shape,
+        "kv_layout": kv_layout,
         "attn_backend": dispatch.resolve_backend(None).name,
         "results": results,
     }
@@ -225,6 +377,11 @@ def main(argv=None) -> None:
                     help="decode-attention dispatcher backend (sets "
                          "$REPRO_KERNEL_BACKEND for the engine's decode "
                          "step; default: platform pick / existing env)")
+    ap.add_argument("--kv-layout", default="ring", choices=["ring", "paged"],
+                    help="KV cache layout: dense per-slot ring or the paged "
+                         "block pool (adds the prefix-reuse workload)")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="paged pool block size in tokens")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="JSON artifact path ('' to skip writing)")
     args = ap.parse_args(argv)
@@ -236,12 +393,15 @@ def main(argv=None) -> None:
     rows, artifact = sweep(args.arch, smoke=args.smoke, full=args.full,
                            backend=backend,
                            policies=tuple(args.policies.split(",")),
-                           reduced=not args.no_reduced)
+                           reduced=not args.no_reduced,
+                           kv_layout=args.kv_layout,
+                           block_size=args.block_size)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")
 
-    ratios = [r["prefill_to_decode_ratio"] for r in artifact["results"]]
+    ratios = [r["prefill_to_decode_ratio"] for r in artifact["results"]
+              if "prefill_to_decode_ratio" in r]
     print(f"prefill/decode tokens/s ratio: min={min(ratios):.1f}x "
           f"max={max(ratios):.1f}x", file=sys.stderr)
 

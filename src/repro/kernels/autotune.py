@@ -30,8 +30,9 @@ __all__ = [
     "VMEM_BUDGET_BYTES",
     "matmul_vmem_bytes", "quantize_vmem_bytes", "decode_attention_vmem_bytes",
     "matmul_candidates", "quantize_candidates", "decode_attention_candidates",
+    "paged_attention_candidates",
     "best_block", "autotune_matmul", "autotune_quantize",
-    "autotune_decode_attention",
+    "autotune_decode_attention", "autotune_paged_attention",
     "cache_key", "load_cache", "save_cache", "clear_cache",
 ]
 
@@ -137,6 +138,29 @@ def decode_attention_candidates(cap: int, *, hd: int, group: int,
     return cands or [(cap,)]
 
 
+def paged_attention_candidates(max_len: int, *, hd: int, group: int,
+                               quantized: bool) -> List[Tuple[int]]:
+    """(bs,) pool-block-size candidates for the paged KV cache.
+
+    Unlike the ring kernel's per-call cache tile, the paged split-K tile is
+    the pool block itself — fixed when the pool is allocated, because the
+    block is both the kernel's gather granularity *and* the allocator's
+    unit of capacity/prefix-sharing (serve/kvpool.py).  Candidates are
+    sublane-quantum multiples: small enough that a short request wastes
+    little of its last block, large enough that the per-block VMEM tile
+    keeps the MXU fed; the same working-set model as the ring kernel
+    rejects oversized blocks."""
+    budget = VMEM_BUDGET_BYTES * _VMEM_USABLE_FRACTION
+    cands = [
+        (bs,)
+        for bs in _tile_sizes(max_len, _SUBLANE, 1024)
+        if bs <= max_len
+        and decode_attention_vmem_bytes((bs,), hd=hd, group=group,
+                                        quantized=quantized) <= budget
+    ]
+    return cands or [(max(1, max_len),)]
+
+
 # ---------------------------------------------------------------------------
 # winner cache: in-memory dict, optionally persisted to a JSON file
 # ---------------------------------------------------------------------------
@@ -185,8 +209,20 @@ def save_cache(path: Optional[str] = None) -> Optional[str]:
             pass
     merged.update({k: list(v) for k, v in _CACHE.items()})
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(dict(sorted(merged.items())), f, indent=1)
+    # atomic rename: parallel bench/CI runs each write a complete temp file
+    # and swap it in, so a concurrent reader/writer never sees a truncated
+    # cache (last swap wins; its content includes the merge above)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(dict(sorted(merged.items())), f, indent=1)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
     return path
 
 
@@ -218,6 +254,17 @@ def best_block(kind: str, shape: tuple, dtype, bits: int, scheme: str,
         # largest tile = fewest sequential cache blocks per (slot, head);
         # length-aware skipping still prunes at this granularity
         return max(cands, key=lambda b: b[0])
+    if kind == "paged_attention":
+        _b, max_len, _nkv, group, hd = shape
+        cands = paged_attention_candidates(
+            max_len, hd=hd, group=group, quantized="int8" in str(dtype))
+        # the pool block is also the allocation/prefix-sharing unit, so the
+        # model pick balances kernel tile size against granularity: the
+        # largest candidate that still gives a full-length request ≥ 4
+        # blocks (falls back to the smallest candidate for tiny max_len)
+        fitting = [c for c in cands if c[0] * 4 <= max_len]
+        return (max(fitting, key=lambda b: b[0]) if fitting
+                else min(cands, key=lambda b: b[0]))
     raise ValueError(f"unknown kernel kind {kind!r}")
 
 
@@ -287,5 +334,25 @@ def autotune_decode_attention(b: int, cap: int, nkv: int, group: int, hd: int,
     cands = candidates or decode_attention_candidates(
         cap, hd=hd, group=group, quantized=quantized)
     return _sweep("decode_attention", (b, cap, nkv, group, hd), dtype,
+                  8 if quantized else 16, "flash", backend, cands, run,
+                  repeats)
+
+
+def autotune_paged_attention(b: int, max_len: int, nkv: int, group: int,
+                             hd: int, *, backend: str,
+                             run: Callable[[tuple], object],
+                             dtype="int8", repeats: int = 2,
+                             candidates: Optional[List[tuple]] = None):
+    """Measured (bs,) pool-block-size sweep for paged decode attention.
+
+    ``run((bs,))`` must build a pool with that block size and time a decode
+    pass — the block size is baked into the pool layout, so unlike the ring
+    sweep each candidate re-allocates the cache.  The winner is what
+    ``serve/kvpool.py`` (and the engine's ``kv_layout='paged'`` path) picks
+    up when no explicit ``block_size`` is given."""
+    quantized = "int8" in str(dtype)
+    cands = candidates or paged_attention_candidates(
+        max_len, hd=hd, group=group, quantized=quantized)
+    return _sweep("paged_attention", (b, max_len, nkv, group, hd), dtype,
                   8 if quantized else 16, "flash", backend, cands, run,
                   repeats)

@@ -1,5 +1,7 @@
-"""Pallas TPU kernel: flash-decode attention over the ring KV cache
-(DESIGN.md §2/§3 — the serving hot path, one query token per slot).
+"""Pallas TPU kernels: flash-decode attention over the KV cache
+(DESIGN.md §2/§3 — the serving hot path, one query token per slot), in two
+cache layouts: the dense per-slot ring buffer (``decode_attention_call``)
+and the paged block pool (``paged_decode_attention_call``, DESIGN.md §6).
 
 One grid program per (batch slot, kv head, cache-length block):
 
@@ -45,7 +47,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["decode_attention_call", "shrink_block"]
+__all__ = ["decode_attention_call", "paged_decode_attention_call",
+           "shrink_block"]
 
 # renamed TPUCompilerParams -> CompilerParams across jax versions
 _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
@@ -210,3 +213,165 @@ def decode_attention_call(
         ),
         interpret=interpret,
     )(pos, *inputs)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: block-table gather over the shared block pool (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+def _paged_attn_body(
+    pos_ref,        # scalar prefetch: (B,) int32 per-slot decode positions
+    bt_ref,         # scalar prefetch: (B, nbmax) int32 physical block ids
+    q_ref,          # (1, 1, group, hd)
+    k_ref,          # (1, bs, 1, hd) int8 codes or bf16 — one pool block
+    v_ref,          # (1, bs, 1, hd)
+    ks_ref,         # (1, 1, bs) f32 — only when quantized
+    vs_ref,         # (1, 1, bs) f32 — only when quantized
+    out_ref,        # (1, 1, group, hd) f32
+    m_ref,          # scratch (group, 1) f32 — running max
+    s_ref,          # scratch (group, 1) f32 — running sum of exp
+    acc_ref,        # scratch (group, hd) f32 — value accumulator
+    *,
+    bs: int,
+    group: int,
+    hd: int,
+    window: int,
+    quantized: bool,
+):
+    """Same split-K online-softmax recurrence as ``_attn_body``, over pool
+    blocks instead of ring tiles.  The key position of slot t in *logical*
+    block j is implicit — ``j·bs + t`` (the pool is append-only, never a
+    ring) — so no k_pos tile is fetched; the block-table gather happened in
+    the BlockSpec index maps via the scalar-prefetched table."""
+    b, j = pl.program_id(0), pl.program_id(2)
+    nb = pl.num_programs(2)
+    pos_b = pos_ref[b]
+    last = pos_b // bs   # logical blocks past this are unallocated
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full((group, 1), -jnp.inf, jnp.float32)
+        s_ref[...] = jnp.zeros((group, 1), jnp.float32)
+        acc_ref[...] = jnp.zeros((group, hd), jnp.float32)
+
+    @pl.when(j <= last)
+    def _accumulate():
+        q = q_ref[...].reshape(group, hd)
+        kc = k_ref[...].reshape(bs, hd).astype(q.dtype)
+        logits = jax.lax.dot_general(
+            q, kc, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * float(1.0 / math.sqrt(hd))                   # (group, bs)
+        if quantized:
+            logits = logits * (ks_ref[...].reshape(1, bs) * (1.0 / 127.0))
+        # implicit key positions of this logical block
+        kp = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        valid = kp <= pos_b
+        if window:
+            valid = valid & (kp > pos_b - window)
+        logits = jnp.where(valid, logits, _NEG_BIG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new)                       # (group, bs)
+        m_ref[...] = m_new
+        s_ref[...] = s_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        if quantized:
+            p = p * (vs_ref[...].reshape(1, bs) * (1.0 / 127.0))
+        vc = v_ref[...].reshape(bs, hd).astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, vc, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        out_ref[...] = (acc_ref[...] / s_ref[...]).reshape(1, 1, group, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention_call(
+    q: jax.Array,        # (B, n_kv, group, hd) bf16/f32 — post-RoPE queries
+    k: jax.Array,        # (n_blocks, bs, n_kv, hd) int8 codes or bf16 pool
+    v: jax.Array,        # (n_blocks, bs, n_kv, hd)
+    block_tables: jax.Array,  # (B, nbmax) int32 physical block per logical
+    pos: jax.Array,      # (B,) int32 — per-slot absolute decode position
+    k_scale: jax.Array | None = None,   # (n_blocks, bs, n_kv) f32 when int8
+    v_scale: jax.Array | None = None,
+    *,
+    window: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paged flash-decode attention → (B, n_kv, group, hd) f32.
+
+    The cache-length tile IS the pool block (bs = ``k.shape[1]``): the K/V
+    BlockSpec index maps gather physical block ``block_tables[b, min(j,
+    pos[b]//bs)]`` via the scalar-prefetched table, so a slot at position p
+    reads its own ceil((p+1)/bs) blocks wherever they live in the pool —
+    and shared prefix blocks are fetched from the same physical tiles for
+    every request that holds them.  For bs == bk the recurrence is
+    step-for-step the ring kernel's, so the two layouts are bit-identical
+    on the same token stream (tests/test_paged_attention.py).
+    """
+    nblk, bs, nkv, hd = k.shape
+    bsz = q.shape[0]
+    nbmax = block_tables.shape[1]
+    group = q.shape[2]
+    quantized = k_scale is not None
+
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (bsz,))
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+
+    def kv_map(b, h, j, p_, bt_):
+        return (bt_[b, jnp.minimum(j, p_[b] // bs)], 0, h, 0)
+
+    inputs = [q, k, v]
+    in_specs = [
+        pl.BlockSpec((1, 1, group, hd), lambda b, h, j, p_, bt_: (b, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+    ]
+    body = _paged_attn_body
+    if quantized:
+        # (n_blocks, bs, n_kv) → (n_blocks, n_kv, bs): the lane dimension
+        # must be the tiled in-block axis (layout change only)
+        inputs += [k_scale.transpose(0, 2, 1), v_scale.transpose(0, 2, 1)]
+        in_specs += [
+            pl.BlockSpec((1, 1, bs),
+                         lambda b, h, j, p_, bt_:
+                         (bt_[b, jnp.minimum(j, p_[b] // bs)], h, 0)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda b, h, j, p_, bt_:
+                         (bt_[b, jnp.minimum(j, p_[b] // bs)], h, 0)),
+        ]
+    else:
+        def body(pos_ref, bt_ref, q_ref, k_ref, v_ref, out_ref,
+                 m_ref, s_ref, acc_ref, **kw):
+            return _paged_attn_body(pos_ref, bt_ref, q_ref, k_ref, v_ref,
+                                    None, None, out_ref, m_ref, s_ref,
+                                    acc_ref, **kw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, nkv, nbmax),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda b, h, j, p_, bt_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(body, bs=bs, group=group, hd=hd, window=window,
+                          quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, nkv, group, hd), jnp.float32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pos, block_tables, *inputs)

@@ -1,10 +1,11 @@
 """Kernel backend registry + dispatch (DESIGN.md §3).
 
 One entry point per hot-path kernel — ``matmul`` (the fused §VIII 'separate'
-quantise+multiply), ``quantize`` (elementwise codes), and
-``decode_attention`` (flash-decode over the serving ring KV cache, int8
-dither codes consumed in-kernel) — routed to one of three interchangeable
-backends:
+quantise+multiply), ``quantize`` (elementwise codes), ``decode_attention``
+(flash-decode over the serving ring KV cache, int8 dither codes consumed
+in-kernel) and ``paged_decode_attention`` (the same recurrence over the
+paged block pool, gathered through a scalar-prefetched block table) —
+routed to one of three interchangeable backends:
 
 * ``pallas-tpu``       — the compiled Pallas kernels (real TPU).
 * ``pallas-interpret`` — the *same* kernel bodies evaluated in Pallas
@@ -38,12 +39,13 @@ import jax.numpy as jnp
 
 from repro.kernels import autotune, ref
 from repro.kernels import ops as kops
-from repro.kernels.decode_attention import decode_attention_call
+from repro.kernels.decode_attention import (decode_attention_call,
+                                            paged_decode_attention_call)
 
 __all__ = [
     "KernelBackend", "register_backend", "available_backends",
     "resolve_backend", "resolve_policy_backend", "matmul", "quantize",
-    "decode_attention", "DEFAULT_CPU_BACKEND",
+    "decode_attention", "paged_decode_attention", "DEFAULT_CPU_BACKEND",
 ]
 
 ENV_VAR = "REPRO_KERNEL_BACKEND"
@@ -62,13 +64,17 @@ class KernelBackend:
     KV cache.  ``block`` may be ignored by backends without a tiling concept
     — except for ``decode_attention``, where the block *is* part of the
     split-K recurrence contract and every backend honours it (xla-ref
-    defaults to one whole-cap block).
+    defaults to one whole-cap block).  ``paged_decode_attention(q, k, v,
+    block_tables, pos, *, k_scale, v_scale, window)`` is the paged-pool
+    variant (DESIGN.md §6): the cache tile is pinned to the pool block size
+    by the array layout, so it takes no ``block`` argument.
     """
 
     name: str
     matmul: Callable
     quantize: Callable
     decode_attention: Optional[Callable] = None
+    paged_decode_attention: Optional[Callable] = None
 
 
 _REGISTRY: dict = {}
@@ -109,8 +115,15 @@ def _make_pallas(name: str, interpret: bool) -> KernelBackend:
             q, k, v, k_pos, pos, k_scale, v_scale, window=window,
             block=tuple(block), interpret=interpret)
 
+    def _paged_decode_attention(q, k, v, block_tables, pos, *, k_scale,
+                                v_scale, window):
+        return paged_decode_attention_call(
+            q, k, v, block_tables, pos, k_scale, v_scale, window=window,
+            interpret=interpret)
+
     return register_backend(
-        KernelBackend(name, _matmul, _quantize, _decode_attention))
+        KernelBackend(name, _matmul, _quantize, _decode_attention,
+                      _paged_decode_attention))
 
 
 def _make_xla_ref() -> KernelBackend:
@@ -165,8 +178,22 @@ def _make_xla_ref() -> KernelBackend:
                             k_scale, v_scale, window=window,
                             block=None if block is None else tuple(block))
 
+    @functools.partial(jax.jit, static_argnames=("window",))
+    def _paged_jit(q, k, v, block_tables, pos, k_scale, v_scale, *, window):
+        return ref.paged_decode_attention_ref(
+            q, k, v, block_tables, pos, k_scale, v_scale, window=window)
+
+    def _paged_decode_attention(q, k, v, block_tables, pos, *, k_scale,
+                                v_scale, window):
+        # the paged recurrence's tile is the pool block itself, so the
+        # oracle runs the exact kernel recurrence — no whole-cap collapse
+        return _paged_jit(q, k, v, block_tables,
+                          jnp.asarray(pos, jnp.int32), k_scale, v_scale,
+                          window=window)
+
     return register_backend(
-        KernelBackend("xla-ref", _matmul, _quantize, _decode_attention))
+        KernelBackend("xla-ref", _matmul, _quantize, _decode_attention,
+                      _paged_decode_attention))
 
 
 _make_pallas("pallas-tpu", interpret=False)
@@ -302,3 +329,33 @@ def decode_attention(
                                     bits, "flash", be.name)
     return be.decode_attention(q, k, v, k_pos, pos, k_scale=k_scale,
                                v_scale=v_scale, window=window, block=block)
+
+
+def paged_decode_attention(
+    q: jax.Array,        # (B, n_kv_heads, group, hd) — post-RoPE queries
+    k: jax.Array,        # (n_blocks, bs, n_kv_heads, hd) int8 codes or bf16
+    v: jax.Array,        # (n_blocks, bs, n_kv_heads, hd)
+    block_tables: jax.Array,  # (B, nbmax) int32 physical block per logical
+    pos: jax.Array,      # (B,) int32 per-slot decode position
+    *,
+    k_scale: Optional[jax.Array] = None,  # (n_blocks, bs, n_kv) f32 when int8
+    v_scale: Optional[jax.Array] = None,
+    window: int = 0,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Paged flash-decode attention over the block-pool KV cache →
+    (B, n_kv, group, hd) f32, through the selected backend (DESIGN.md §6).
+
+    The split-K tile is the pool block itself (``bs = k.shape[1]``, chosen
+    at pool-creation time from ``autotune.best_block('paged_attention',
+    ...)``), so unlike the ring entry point there is no per-call ``block``:
+    every backend runs the same per-block recurrence, and ``xla-ref`` is
+    the bit-exact oracle rather than a whole-cap collapse.  The Pallas
+    backends gather cache tiles through the scalar-prefetched block table,
+    which is what makes refcount-shared prefix blocks readable by several
+    requests at once without any copy.
+    """
+    be = resolve_backend(backend)
+    return be.paged_decode_attention(q, k, v, block_tables, pos,
+                                     k_scale=k_scale, v_scale=v_scale,
+                                     window=window)

@@ -20,6 +20,7 @@ __all__ = [
     "stochastic_round_ref",
     "dither_matmul_ref",
     "decode_attention_ref",
+    "paged_decode_attention_ref",
 ]
 
 
@@ -220,4 +221,83 @@ def decode_attention_ref(
         jnp.zeros((bsz, nkv, group, hd), jnp.float32),
     )
     (m, s, acc), _ = jax.lax.scan(step, init, jnp.arange(nb, dtype=jnp.int32))
+    return acc / s
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,        # (B, n_kv, group, hd) bf16/f32 — post-RoPE queries
+    k: jax.Array,        # (n_blocks, bs, n_kv, hd) int8 codes or bf16 pool
+    v: jax.Array,        # (n_blocks, bs, n_kv, hd)
+    block_tables: jax.Array,  # (B, nbmax) int32 physical block per logical
+    pos: jax.Array,      # (B,) int32 per-slot absolute decode position
+    k_scale: jax.Array | None = None,   # (n_blocks, bs, n_kv) f32 when int8
+    v_scale: jax.Array | None = None,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Oracle for the paged flash-decode kernel → (B, n_kv, group, hd) f32.
+
+    The same split-K online-softmax recurrence as ``decode_attention_ref``,
+    with the per-block gather routed through the block table: logical block
+    j of slot b lives at physical pool block ``block_tables[b, j]``, and the
+    key position of in-block slot t is the *implicit* ``j·bs + t`` (the pool
+    is append-only; no stored k_pos).  The cache-length tile is pinned to
+    the pool block size, so for bs == bk this is bit-identical to the ring
+    recurrence on the same token stream — the reuse guarantee that makes
+    prefix blocks shareable across requests (DESIGN.md §6)."""
+    nblk, bs, nkv, hd = k.shape
+    bsz = q.shape[0]
+    nbmax = block_tables.shape[1]
+    group = q.shape[2]
+    quantized = k_scale is not None
+    inv = float(1.0 / math.sqrt(hd))
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (bsz,))
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    last = pos // bs
+
+    def step(carry, j):
+        m, s, acc = carry
+        jc = jnp.minimum(j, last)                          # clamped logical
+        phys = jax.vmap(lambda bt, i: bt[i])(block_tables, jc)   # (B,)
+        kb = jnp.take(k, phys, axis=0)                     # (B, bs, n_kv, hd)
+        vb = jnp.take(v, phys, axis=0)
+        kc = kb.astype(q.dtype)
+        logits = jax.lax.dot_general(
+            q, kc, dimension_numbers=(((3,), (3,)), ((0, 1), (0, 2))),
+            preferred_element_type=jnp.float32,
+        ) * inv                                            # (B, n_kv, group, bs)
+        if quantized:
+            ksb = jnp.take(k_scale, phys, axis=0).transpose(0, 2, 1)
+            logits = logits * (ksb[:, :, None, :] * (1.0 / 127.0))
+        kp = (jc[:, None] * bs + jnp.arange(bs, dtype=jnp.int32)[None, :]
+              )[:, None, None, :]
+        pb = pos[:, None, None, None]
+        valid = kp <= pb
+        if window:
+            valid = valid & (kp > pb - window)
+        logits = jnp.where(valid, logits, -1e30)
+
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new)
+        s_new = s * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        if quantized:
+            vsb = jnp.take(v_scale, phys, axis=0).transpose(0, 2, 1)
+            p = p * (vsb[:, :, None, :] * (1.0 / 127.0))
+        acc_new = acc * alpha + jax.lax.dot_general(
+            p, vb.astype(jnp.float32),
+            dimension_numbers=(((3,), (1,)), ((0, 1), (0, 2))),
+            preferred_element_type=jnp.float32,
+        )
+        act = (j <= last)[:, None, None, None]
+        return (jnp.where(act, m_new, m), jnp.where(act, s_new, s),
+                jnp.where(act, acc_new, acc)), None
+
+    init = (
+        jnp.full((bsz, nkv, group, 1), -jnp.inf, jnp.float32),
+        jnp.zeros((bsz, nkv, group, 1), jnp.float32),
+        jnp.zeros((bsz, nkv, group, hd), jnp.float32),
+    )
+    (m, s, acc), _ = jax.lax.scan(step, init,
+                                  jnp.arange(nbmax, dtype=jnp.int32))
     return acc / s

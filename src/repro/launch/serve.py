@@ -40,6 +40,18 @@ def serve_main(argv=None):
                          "(auto, pallas, pallas-interpret, pallas-tpu, xla-ref)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="dither-quantised int8 KV cache (2× decode memory)")
+    ap.add_argument("--kv-layout", default="ring", choices=["ring", "paged"],
+                    help="KV cache layout: dense per-slot ring, or the paged "
+                         "block pool with prefix caching + continuous "
+                         "batching (attention-only archs)")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="paged pool block size in tokens (default: autotune "
+                         "model pick)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged pool capacity in blocks (default: matches "
+                         "the dense ring, batch × ceil(max_len/bs))")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request prefix-block reuse")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 = softmax sampling")
     ap.add_argument("--top-k", type=int, default=0)
@@ -61,7 +73,9 @@ def serve_main(argv=None):
               if cfg.is_encdec else None)
     engine = Engine(params, cfg, args.batch, args.max_len, policy=policy,
                     frames=frames, kv_quant=args.kv_quant and not cfg.is_encdec,
-                    scheduler=args.sched)
+                    scheduler=args.sched, kv_layout=args.kv_layout,
+                    block_size=args.block_size, num_blocks=args.num_blocks,
+                    prefix_cache=not args.no_prefix_cache)
     for r in range(args.requests):
         prompt = [(7 * r + i) % (cfg.vocab_size - 1) + 1
                   for i in range(args.prompt_len)]
@@ -83,6 +97,14 @@ def serve_main(argv=None):
     print(f"served {len(done)}/{args.requests} requests in {dt:.2f}s "
           f"(prefill {pf:.0f} tok/s over {st['prefill_calls']} calls, "
           f"decode {dc:.0f} tok/s over {st['decode_calls']} ticks)")
+    if args.kv_layout == "paged":
+        ps = engine.pool.stats
+        print(f"paged pool: block_size={engine.block_size} "
+              f"blocks={engine.num_blocks} allocs={ps['allocated']} "
+              f"evictions={ps['evicted']} "
+              f"prefix_hit_tokens={st['prefix_hit_tokens']} "
+              f"preemptions={st['preemptions']} "
+              f"cached_now={engine.pool.cached_blocks}")
 
 
 if __name__ == "__main__":

@@ -24,7 +24,8 @@ Params = Dict[str, Any]
 
 __all__ = [
     "init_model", "apply_model", "make_cache", "apply_decode", "batch_spec",
-    "apply_prefill", "merge_prefill", "supports_batched_prefill",
+    "apply_prefill", "apply_prefill_paged", "merge_prefill",
+    "supports_batched_prefill", "supports_paged_kv",
 ]
 
 
@@ -57,12 +58,22 @@ def apply_model(
 
 def make_cache(params: Params, cfg: ModelConfig, batch_size: int, max_len: int,
                frames: Optional[jax.Array] = None, *, policy=None,
-               kv_quant: bool = False) -> Params:
+               kv_quant: bool = False, kv_layout: str = "ring",
+               block_size: Optional[int] = None,
+               num_blocks: Optional[int] = None) -> Params:
     if cfg.is_encdec:
         assert frames is not None
+        if kv_layout != "ring":
+            raise ValueError("paged KV layout requires an attention-only "
+                             "decoder (see supports_paged_kv)")
         return encdec.init_encdec_cache(params, cfg, frames, batch_size, max_len,
                                         policy=policy)
-    return transformer.init_cache(cfg, batch_size, max_len, kv_quant=kv_quant)
+    if kv_layout != "ring" and not supports_paged_kv(cfg):
+        raise ValueError("paged KV layout requires an attention-only decoder "
+                         f"(arch {cfg.name!r} has recurrent state)")
+    return transformer.init_cache(cfg, batch_size, max_len, kv_quant=kv_quant,
+                                  kv_layout=kv_layout, block_size=block_size,
+                                  num_blocks=num_blocks)
 
 
 def apply_decode(params: Params, cfg: ModelConfig, token: jax.Array, cache: Params,
@@ -85,6 +96,45 @@ def supports_batched_prefill(cfg: ModelConfig) -> bool:
     prefill inside ``apply_prefill`` instead (DESIGN.md §6)."""
     return (not cfg.is_encdec
             and all(cfg.layer_kind(i) == "attn" for i in range(cfg.n_layers)))
+
+
+def supports_paged_kv(cfg: ModelConfig) -> bool:
+    """True when the arch can serve from the paged block-pool KV cache
+    (DESIGN.md §6): attention-only decoders.  Recurrent layers carry O(1)
+    state with no per-position cache to page, and the encoder-decoder's
+    cross-KV is a fixed full-precision tensor — both stay on the ring/dense
+    layout."""
+    return supports_batched_prefill(cfg)
+
+
+def apply_prefill_paged(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,    # (B, S) right-padded prompt suffixes
+    lengths: jax.Array,   # (B,) suffix lengths; 0 marks an inactive row
+    starts: jax.Array,    # (B,) block-aligned absolute start positions
+    block_tables: jax.Array,
+    cache: Params,
+    *,
+    policy=None,
+    counter=0,
+    kv_quant: bool = False,
+    kv_offset=None,
+    prefix_blocks: int = 0,
+):
+    """Paged batched prefill → (last-suffix-token logits (B, vocab_size),
+    the live cache with the suffix blocks scattered in).  Prefix-hit rows
+    (``starts > 0``) skip recomputing the shared prefix — its K/V is
+    gathered from the refcounted pool blocks inside attention."""
+    b, s = tokens.shape
+    lengths = jnp.asarray(lengths, jnp.int32)
+    logits, cache = transformer.prefill_with_cache_paged(
+        params, cfg, tokens, lengths, starts, block_tables, cache,
+        policy=policy, counter=counter, kv_quant=kv_quant,
+        kv_offset=kv_offset, prefix_blocks=prefix_blocks)
+    last = jnp.clip(lengths - 1, 0, s - 1)
+    last_logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+    return last_logits, cache
 
 
 def merge_prefill(cfg: ModelConfig, old: Params, new: Params,

@@ -33,8 +33,33 @@ Params = Dict[str, Any]
 
 __all__ = [
     "init_params", "forward", "decode_step", "init_cache", "prefill",
-    "prefill_with_cache", "merge_cache",
+    "prefill_with_cache", "prefill_with_cache_paged", "merge_cache",
 ]
+
+
+def _kv_q8(t, ctr, idx, seed):
+    """Dither-round K/V to int8 codes + per-position scales (§Perf it.10).
+
+    One quantiser for every cache write path — decode step, ring prefill
+    scatter and paged prefill scatter — so the codes a position holds are a
+    function of (value, absolute position + per-request offset, element
+    index) only, never of *which* path wrote them.  That invariance is what
+    makes paged prefix blocks bit-reusable across requests (DESIGN.md §6):
+    dither codes are deterministic in absolute position (the Θ(1/N²)
+    construction), where stochastic rounding would need hidden RNG state.
+    ``ctr`` and ``idx`` broadcast against ``t``; callers pass the absolute
+    position (+ offset) as ``ctr`` and the decode-step element index
+    pattern as ``idx``.
+    """
+    from repro.core import rounding as _rnd
+
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) + 1e-6
+    scaled = t.astype(jnp.float32) / scale[..., None] * 127.0 + 128.0
+    slot_d = _rnd.lcg_slot(ctr, idx, 16, seed=seed)
+    u = _rnd.hash_uniform(seed ^ 0xD1CE, idx, ctr)
+    codes = jnp.floor(scaled) + _rnd.dither_bit(
+        scaled - jnp.floor(scaled), slot_d, u, 16)
+    return (jnp.clip(codes, 0.0, 255.0) - 128.0).astype(jnp.int8), scale
 
 
 # ---------------------------------------------------------------------------
@@ -132,26 +157,71 @@ def _cache_entry(cfg: ModelConfig, kind: str, batch: int, max_len: int,
     raise ValueError(kind)
 
 
+def _paged_cache_entry(cfg: ModelConfig, kind: str, num_blocks: int,
+                       block_size: int, kv_quant: bool):
+    """One attention layer's share of the paged block pool (DESIGN.md §6):
+    ``num_blocks`` usable blocks of ``block_size`` token slots each, plus a
+    trailing *trash* block (physical id ``num_blocks``) that absorbs writes
+    routed through unallocated block-table entries — scatters never need a
+    validity branch, and reads of the trash block are always masked."""
+    if kind != "attn":
+        raise ValueError("paged KV layout requires attention-only layers")
+    nbp = num_blocks + 1
+    nkv, hd = cfg.n_kv_heads, cfg.hd()
+    if kv_quant:
+        return {
+            "k": jnp.zeros((nbp, block_size, nkv, hd), jnp.int8),
+            "v": jnp.zeros((nbp, block_size, nkv, hd), jnp.int8),
+            "k_scale": jnp.zeros((nbp, block_size, nkv), jnp.float32),
+            "v_scale": jnp.zeros((nbp, block_size, nkv), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((nbp, block_size, nkv, hd), jnp.bfloat16),
+        "v": jnp.zeros((nbp, block_size, nkv, hd), jnp.bfloat16),
+    }
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               kv_quant: bool = False) -> Params:
+               kv_quant: bool = False, kv_layout: str = "ring",
+               block_size: Optional[int] = None,
+               num_blocks: Optional[int] = None) -> Params:
+    paged = kv_layout == "paged"
+    if kv_layout not in ("ring", "paged"):
+        raise ValueError(f"unknown kv_layout {kv_layout!r}")
+    if paged:
+        if not block_size or block_size <= 0:
+            raise ValueError("paged kv_layout requires a positive block_size")
+        nbmax = -(-max_len // block_size)          # blocks per full request
+        num_blocks = num_blocks if num_blocks is not None else batch * nbmax
     p_ = _period(cfg)
     rep, rem = divmod(cfg.n_layers, p_)
     stacked = []
     if rep:
         for pos in range(p_):
             kind = cfg.layer_kind(pos)
-            one = _cache_entry(cfg, kind, batch, max_len, kv_quant)
+            one = (_paged_cache_entry(cfg, kind, num_blocks, block_size,
+                                      kv_quant) if paged
+                   else _cache_entry(cfg, kind, batch, max_len, kv_quant))
             stacked.append(
                 jax.tree.map(lambda x: jnp.broadcast_to(x, (rep,) + x.shape), one)
             )
     remainder = [
-        _cache_entry(cfg, cfg.layer_kind(rep * p_ + i), batch, max_len, kv_quant)
+        (_paged_cache_entry(cfg, cfg.layer_kind(rep * p_ + i), num_blocks,
+                            block_size, kv_quant) if paged
+         else _cache_entry(cfg, cfg.layer_kind(rep * p_ + i), batch, max_len,
+                           kv_quant))
         for i in range(rem)
     ]
     # "pos" is *per-slot* (B,): the serving engine admits requests into slots
     # at different times, so every slot decodes at its own absolute position.
-    return {"pos": jnp.zeros((batch,), jnp.int32), "layers": stacked,
-            "remainder": remainder}
+    cache = {"pos": jnp.zeros((batch,), jnp.int32), "layers": stacked,
+             "remainder": remainder}
+    if paged:
+        # logical → physical block map per slot; unset entries point at the
+        # trash block so writes through them are harmless and reads masked
+        cache["block_tables"] = jnp.full((batch, nbmax), num_blocks,
+                                         jnp.int32)
+    return cache
 
 
 # ---------------------------------------------------------------------------
@@ -160,18 +230,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def _attention_decode(params, cfg: ModelConfig, x, cache, pos, policy, counter,
-                      kv_offset=None):
-    """One-token attention against the ring cache.  x: (B, 1, d).
+                      kv_offset=None, block_tables=None):
+    """One-token attention against the KV cache.  x: (B, 1, d).
 
     ``pos`` is the per-slot absolute position — scalar or (B,) — so slots
     admitted at different times decode independently.  ``kv_offset`` (B,)
     optionally shifts the dither counter of the int8 KV quantiser per slot
     (the engine threads each request's counter offset through it so
     concurrent requests walk independent pulse sequences, DESIGN.md §6).
+    ``block_tables`` (B, nbmax) selects the *paged* cache layout: the new
+    token scatters into pool block ``block_tables[b, pos//bs]`` at in-block
+    slot ``pos % bs`` and attention gathers through the table
+    (``dispatch.paged_decode_attention``); without it the cache is the
+    dense per-slot ring.
     """
     b = x.shape[0]
     hd, nh, nkv = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
-    cap = cache["k"].shape[1]
+    paged = block_tables is not None
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
 
     q = dense(x, params["wq"], policy, counter, seed=1).reshape(b, 1, nh, hd)
@@ -185,58 +260,78 @@ def _attention_decode(params, cfg: ModelConfig, x, cache, pos, policy, counter,
     q = layers.rope(q, posv, cfg.rope_theta)
     k = layers.rope(k, posv, cfg.rope_theta)
 
-    rows = jnp.arange(b)
-    slot = jnp.mod(pos, cap)
+    if paged:
+        bs = cache["k"].shape[1]
+        # physical block holding this token; engine guarantees it is
+        # allocated (and uniquely owned — copy-on-write happens host-side)
+        # before the tick, or points at the trash block for idle slots
+        phys = jnp.take_along_axis(block_tables, (pos // bs)[:, None],
+                                   axis=1)[:, 0]
+        slot = jnp.mod(pos, bs)
+    else:
+        cap = cache["k"].shape[1]
+        rows = jnp.arange(b)
+        slot = jnp.mod(pos, cap)
     quantized = cache["k"].dtype == jnp.int8
     if quantized:
         # dither-round the new K/V token into int8 codes; the counter is the
         # per-slot absolute position (+ per-request offset)
-        from repro.core import rounding as _rnd
-
         ctr = pos if kv_offset is None else pos + jnp.broadcast_to(
             jnp.asarray(kv_offset, jnp.int32), (b,))
         ctr4 = ctr.reshape(b, 1, 1, 1)
-
-        def q8(t, seed):
-            scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) + 1e-6
-            scaled = t.astype(jnp.float32) / scale[..., None] * 127.0 + 128.0
-            idx = jnp.arange(t.size, dtype=jnp.uint32).reshape(t.shape)
-            slot_d = _rnd.lcg_slot(ctr4, idx, 16, seed=seed)
-            u = _rnd.hash_uniform(seed ^ 0xD1CE, idx, ctr4)
-            codes = jnp.floor(scaled) + _rnd.dither_bit(
-                scaled - jnp.floor(scaled), slot_d, u, 16)
-            return (jnp.clip(codes, 0.0, 255.0) - 128.0).astype(jnp.int8), scale
-
-        kq, ks = q8(k, 101)
-        vq, vs = q8(v, 102)
-        ck = cache["k"].at[rows, slot].set(kq[:, 0])
-        cv = cache["v"].at[rows, slot].set(vq[:, 0])
-        kss = cache["k_scale"].at[rows, slot].set(ks[:, 0])
-        vss = cache["v_scale"].at[rows, slot].set(vs[:, 0])
-        k_pos = cache["k_pos"].at[rows, slot].set(pos)
-        new_cache = {"k": ck, "v": cv, "k_scale": kss, "v_scale": vss,
-                     "k_pos": k_pos}
+        idx4 = jnp.arange(b * nkv * hd, dtype=jnp.uint32).reshape(b, 1, nkv, hd)
+        kq, ks = _kv_q8(k, ctr4, idx4, 101)
+        vq, vs = _kv_q8(v, ctr4, idx4, 102)
+        if paged:
+            new_cache = {
+                "k": cache["k"].at[phys, slot].set(kq[:, 0]),
+                "v": cache["v"].at[phys, slot].set(vq[:, 0]),
+                "k_scale": cache["k_scale"].at[phys, slot].set(ks[:, 0]),
+                "v_scale": cache["v_scale"].at[phys, slot].set(vs[:, 0]),
+            }
+        else:
+            new_cache = {
+                "k": cache["k"].at[rows, slot].set(kq[:, 0]),
+                "v": cache["v"].at[rows, slot].set(vq[:, 0]),
+                "k_scale": cache["k_scale"].at[rows, slot].set(ks[:, 0]),
+                "v_scale": cache["v_scale"].at[rows, slot].set(vs[:, 0]),
+                "k_pos": cache["k_pos"].at[rows, slot].set(pos),
+            }
+    elif paged:
+        new_cache = {
+            "k": cache["k"].at[phys, slot].set(k[:, 0].astype(cache["k"].dtype)),
+            "v": cache["v"].at[phys, slot].set(v[:, 0].astype(cache["v"].dtype)),
+        }
     else:
         ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
         cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
         k_pos = cache["k_pos"].at[rows, slot].set(pos)
         new_cache = {"k": ck, "v": cv, "k_pos": k_pos}
 
-    # flash-decode over the ring cache through the kernel dispatcher
-    # (DESIGN.md §2/§3): int8 codes stay codes — upcast tile-by-tile in
-    # VMEM, per-position scales folded in after the dot — with k_pos
-    # validity / causality / sliding-window masking and length-aware block
-    # skipping in-kernel.  Backend: $REPRO_KERNEL_BACKEND or the platform
-    # default (TPU → pallas-tpu, else the jitted xla-ref oracle).
+    # flash-decode over the cache through the kernel dispatcher (DESIGN.md
+    # §2/§3): int8 codes stay codes — upcast tile-by-tile in VMEM,
+    # per-position scales folded in after the dot — with validity /
+    # causality / sliding-window masking and length-aware block skipping
+    # in-kernel.  Backend: $REPRO_KERNEL_BACKEND or the platform default
+    # (TPU → pallas-tpu, else the jitted xla-ref oracle).
     from repro.kernels import dispatch as _dispatch
 
     group = nh // nkv
     qg = q[:, 0].reshape(b, nkv, group, hd)
-    attn = _dispatch.decode_attention(
-        qg, ck, cv, k_pos, pos,
-        k_scale=new_cache.get("k_scale"), v_scale=new_cache.get("v_scale"),
-        window=cfg.window or 0,
-    )
+    if paged:
+        attn = _dispatch.paged_decode_attention(
+            qg, new_cache["k"], new_cache["v"], block_tables, pos,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"),
+            window=cfg.window or 0,
+        )
+    else:
+        attn = _dispatch.decode_attention(
+            qg, new_cache["k"], new_cache["v"], new_cache["k_pos"], pos,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"),
+            window=cfg.window or 0,
+        )
     out = attn.astype(x.dtype).reshape(b, 1, nh * hd)
     return dense(out, params["wo"], policy, counter, seed=4), new_cache
 
@@ -260,6 +355,7 @@ def _apply_block(
     window_override=None,
     kv_offset=None,
     collect_kv=False,
+    block_tables=None,
 ):
     h = layers.rms_norm(x, bp["ln1"], cfg.norm_eps)
     new_cache = cache_entry
@@ -268,7 +364,8 @@ def _apply_block(
         if cache_entry is not None:
             out, new_cache = _attention_decode(bp["attn"], cfg, h, cache_entry,
                                                pos, policy, counter,
-                                               kv_offset=kv_offset)
+                                               kv_offset=kv_offset,
+                                               block_tables=block_tables)
         else:
             out, kv = layers.attention(
                 bp["attn"], cfg, h, positions, causal=True, window=window,
@@ -389,8 +486,6 @@ def _prefill_entry(cfg: ModelConfig, kv, lengths, cap: int, kv_quant: bool,
             "k_pos": k_pos,
         }
 
-    from repro.core import rounding as _rnd
-
     off = (jnp.zeros((b,), jnp.int32) if kv_offset is None
            else jnp.broadcast_to(jnp.asarray(kv_offset, jnp.int32), (b,)))
     ctr = (pj + off[:, None])[:, :, None, None]                # (B, cap, 1, 1)
@@ -399,13 +494,7 @@ def _prefill_entry(cfg: ModelConfig, kv, lengths, cap: int, kv_quant: bool,
     idx4 = jnp.arange(b * nkv * hd, dtype=jnp.uint32).reshape(b, 1, nkv, hd)
 
     def q8(t, seed):
-        scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) + 1e-6
-        scaled = t.astype(jnp.float32) / scale[..., None] * 127.0 + 128.0
-        slot_d = _rnd.lcg_slot(ctr, idx4, 16, seed=seed)
-        u = _rnd.hash_uniform(seed ^ 0xD1CE, idx4, ctr)
-        codes = jnp.floor(scaled) + _rnd.dither_bit(
-            scaled - jnp.floor(scaled), slot_d, u, 16)
-        q = (jnp.clip(codes, 0.0, 255.0) - 128.0).astype(jnp.int8)
+        q, scale = _kv_q8(t, ctr, idx4, seed)
         return (jnp.where(valid[:, :, None, None], q, jnp.int8(0)),
                 jnp.where(valid[:, :, None], scale, 0.0))
 
@@ -483,14 +572,252 @@ def prefill_with_cache(
     return logits, cache
 
 
+# ---------------------------------------------------------------------------
+# paged prefill: suffix forward + prefix gather + block-pool scatter
+# ---------------------------------------------------------------------------
+
+
+def _gather_prefix(entry, block_tables, prefix_blocks: int):
+    """Gather the leading ``prefix_blocks`` logical blocks of every slot
+    from one layer's pool → tensors over (B, prefix_blocks·bs, ...).
+    Unallocated table entries point at the trash block; the caller masks
+    those positions (implicit position ≥ the slot's prefix length)."""
+    bt = block_tables[:, :prefix_blocks]                   # (B, P)
+    gk = jnp.take(entry["k"], bt, axis=0)                  # (B, P, bs, nkv, hd)
+    gv = jnp.take(entry["v"], bt, axis=0)
+    b, p, bs = gk.shape[0], gk.shape[1], gk.shape[2]
+    out = [gk.reshape(b, p * bs, *gk.shape[3:]),
+           gv.reshape(b, p * bs, *gv.shape[3:])]
+    if "k_scale" in entry:
+        out += [jnp.take(entry["k_scale"], bt, axis=0).reshape(b, p * bs, -1),
+                jnp.take(entry["v_scale"], bt, axis=0).reshape(b, p * bs, -1)]
+    else:
+        out += [None, None]
+    return out
+
+
+def _paged_scatter_entry(entry, k, v, positions, lengths, starts,
+                         block_tables, kv_quant: bool, kv_offset):
+    """Scatter one layer's suffix K/V (post-RoPE, (B, S, nkv, hd)) into its
+    pool blocks.  Suffix token s lands in logical block ``starts//bs + s//bs``
+    at in-block slot ``s % bs`` (starts are block-aligned); blocks beyond the
+    suffix length route to the trash block.  The int8 path quantises with
+    counter = absolute position (+ per-request offset) and the decode-step
+    element indices, so the codes are bit-identical to what token-by-token
+    decode would have written — the bit-reusability contract behind prefix
+    sharing (DESIGN.md §6)."""
+    nbp, bs = entry["k"].shape[0], entry["k"].shape[1]
+    trash = nbp - 1
+    b, s = k.shape[0], k.shape[1]
+    nkv, hd = k.shape[2], k.shape[3]
+    nbmax = block_tables.shape[1]
+    s_pad = -(-s // bs) * bs
+    if s_pad != s:
+        pad = [(0, 0), (0, s_pad - s), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    pos_pad = starts[:, None] + jnp.arange(s_pad, dtype=jnp.int32)[None, :]
+    jb_count = s_pad // bs
+    jb = jnp.arange(jb_count, dtype=jnp.int32)[None, :]              # (1, JB)
+    needed = jb * bs < lengths[:, None]                              # (B, JB)
+    tj = jnp.clip(starts[:, None] // bs + jb, 0, nbmax - 1)
+    phys = jnp.where(needed, jnp.take_along_axis(block_tables, tj, axis=1),
+                     trash).reshape(-1)                              # (B·JB,)
+
+    def blocks(t):
+        return t.reshape((b * jb_count, bs) + t.shape[2:])
+
+    if not kv_quant:
+        dt = entry["k"].dtype
+        return {"k": entry["k"].at[phys].set(blocks(k.astype(dt))),
+                "v": entry["v"].at[phys].set(blocks(v.astype(dt)))}
+
+    off = (jnp.zeros((b,), jnp.int32) if kv_offset is None
+           else jnp.broadcast_to(jnp.asarray(kv_offset, jnp.int32), (b,)))
+    ctr = (pos_pad + off[:, None])[:, :, None, None]     # (B, S_pad, 1, 1)
+    idx4 = jnp.arange(b * nkv * hd, dtype=jnp.uint32).reshape(b, 1, nkv, hd)
+    kq, ks = _kv_q8(k, ctr, idx4, 101)
+    vq, vs = _kv_q8(v, ctr, idx4, 102)
+    return {"k": entry["k"].at[phys].set(blocks(kq)),
+            "v": entry["v"].at[phys].set(blocks(vq)),
+            "k_scale": entry["k_scale"].at[phys].set(blocks(ks)),
+            "v_scale": entry["v_scale"].at[phys].set(blocks(vs))}
+
+
+def _paged_prefill_attention(params, cfg: ModelConfig, x, positions, lengths,
+                             starts, block_tables, entry, policy, counter,
+                             kv_quant: bool, kv_offset, prefix_blocks: int):
+    """Suffix attention for the paged prefill: queries at absolute positions
+    ``starts + t`` attend the in-batch suffix K/V (relative-causal, exactly
+    the cold path's ``layers.attention`` grouped-einsum ops) plus — when
+    ``prefix_blocks > 0`` — the prefix K/V gathered from the shared pool
+    blocks, dequantised per position and joined *before* the softmax, so a
+    prefix-hit request sees one joint distribution over its whole history.
+    Returns ``(out, new_entry)`` with the suffix K/V scattered into the
+    pool."""
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    import math as _math
+
+    q = dense(x, params["wq"], policy, counter, seed=1)
+    k = dense(x, params["wk"], policy, counter, seed=2)
+    v = dense(x, params["wv"], policy, counter, seed=3)
+    if cfg.qkv_bias and "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+
+    window = cfg.window or 0
+    group = nh // nkv
+    qg = q.reshape(b, s, nkv, group, hd)
+    # within-suffix mask is relative (suffix rows share one block-aligned
+    # start each), identical to the cold path's make_causal_mask
+    m_ss = layers.make_causal_mask(s, s, window=window)
+    logits_s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) \
+        / _math.sqrt(hd)
+    logits_s = jnp.where(m_ss[None, None, None, :, :], logits_s, -1e30)
+
+    if prefix_blocks:
+        pk, pv, pks, pvs = _gather_prefix(entry, block_tables, prefix_blocks)
+        if pks is not None:
+            pk = (pk.astype(jnp.float32) * (pks[..., None] / 127.0)).astype(x.dtype)
+            pv = (pv.astype(jnp.float32) * (pvs[..., None] / 127.0)).astype(x.dtype)
+        s_pre = pk.shape[1]
+        kp = jnp.arange(s_pre, dtype=jnp.int32)[None, None, :]   # implicit pos
+        q_abs = positions[:, :, None]
+        vp = kp < starts[:, None, None]                          # (B, S, S_pre)
+        if window:
+            vp = vp & (kp > q_abs - window)
+        logits_p = jnp.einsum("bqhgd,bkhd->bhgqk", qg, pk).astype(jnp.float32) \
+            / _math.sqrt(hd)
+        logits_p = jnp.where(vp[:, None, None, :, :], logits_p, -1e30)
+        probs = jax.nn.softmax(
+            jnp.concatenate([logits_p, logits_s], axis=-1), axis=-1
+        ).astype(x.dtype)
+        out = (jnp.einsum("bhgqk,bkhd->bqhgd", probs[..., :s_pre], pv)
+               + jnp.einsum("bhgqk,bkhd->bqhgd", probs[..., s_pre:], v))
+    else:
+        probs = jax.nn.softmax(logits_s, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    out = out.reshape(b, s, nh * hd)
+    out = dense(out, params["wo"], policy, counter, seed=4)
+
+    new_entry = _paged_scatter_entry(entry, k, v, positions, lengths, starts,
+                                     block_tables, kv_quant, kv_offset)
+    return out, new_entry
+
+
+def _paged_prefill_block(bp, cfg: ModelConfig, x, positions, lengths, starts,
+                         block_tables, entry, policy, counter, kv_quant,
+                         kv_offset, prefix_blocks):
+    """One transformer block of the paged prefill — ``_apply_block``'s attn
+    branch with the prefix-aware attention above in place of
+    ``layers.attention``."""
+    h = layers.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    out, new_entry = _paged_prefill_attention(
+        bp["attn"], cfg, h, positions, lengths, starts, block_tables, entry,
+        policy, counter, kv_quant, kv_offset, prefix_blocks)
+    x = x + out
+    if "mlp" in bp or "moe" in bp:
+        h2 = layers.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if "moe" in bp:
+            x = x + moe.moe_ffn(bp["moe"], cfg, h2, policy, counter)
+        else:
+            x = x + layers.mlp(bp["mlp"], h2, cfg.mlp_act, policy, counter)
+    return x, new_entry
+
+
+def prefill_with_cache_paged(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,    # (B, S) right-padded prompt *suffixes*
+    lengths: jax.Array,   # (B,) suffix lengths (0 = inactive row)
+    starts: jax.Array,    # (B,) block-aligned absolute position of token 0
+    block_tables: jax.Array,  # (B, nbmax) int32 — full logical→physical map
+    cache: Params,        # live paged cache; suffix KV scatters in place
+    *,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+    kv_quant: bool = False,
+    kv_offset=None,
+    prefix_blocks: int = 0,
+):
+    """Batched paged prefill: one forward over the prompt *suffixes* that
+    scatters their K/V into pool blocks (DESIGN.md §6).
+
+    A prefix-cache hit sets ``starts[b] > 0``: tokens before the start are
+    *not* recomputed — their K/V is gathered from the shared, refcounted
+    pool blocks inside each layer's attention (``prefix_blocks`` bounds the
+    gather; 0 on cold waves makes this exactly the cold batched prefill).
+    ``starts`` must be multiples of the pool block size.  Returns
+    ``(logits (B, S, vocab_size), cache')`` where ``cache'`` is the live
+    cache with the suffix blocks written, per-slot ``pos`` advanced to
+    ``starts + lengths`` for active rows, and ``block_tables`` installed.
+    """
+    for i in range(cfg.n_layers):
+        if cfg.layer_kind(i) != "attn":
+            raise ValueError("paged prefill requires attention-only layers")
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s, _ = x.shape
+    lengths = jnp.asarray(lengths, jnp.int32)
+    starts = jnp.asarray(starts, jnp.int32)
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    positions = starts[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    p_ = _period(cfg)
+
+    def body(carry, xs):
+        h = carry
+        bp, ce = xs
+        new_entries = []
+        for pos_i in range(p_):
+            h, ne = _paged_prefill_block(
+                bp[pos_i], cfg, h, positions, lengths, starts, block_tables,
+                ce[pos_i], policy, counter, kv_quant, kv_offset,
+                prefix_blocks)
+            new_entries.append(ne)
+        return h, tuple(new_entries)
+
+    if params["blocks"]:
+        x, new_layers = jax.lax.scan(
+            body, x, (tuple(params["blocks"]), tuple(cache["layers"])))
+    else:
+        new_layers = ()
+    new_rem = []
+    for i, bp in enumerate(params["remainder"]):
+        x, ne = _paged_prefill_block(
+            bp, cfg, x, positions, lengths, starts, block_tables,
+            cache["remainder"][i], policy, counter, kv_quant, kv_offset,
+            prefix_blocks)
+        new_rem.append(ne)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = dense(x, head, policy, counter, seed=9).astype(jnp.float32)
+    logits = logits[:, :, : cfg.vocab_size]
+    new_cache = {
+        "pos": jnp.where(lengths > 0, starts + lengths, cache["pos"]),
+        "block_tables": block_tables,
+        "layers": list(new_layers),
+        "remainder": new_rem,
+    }
+    return logits, new_cache
+
+
 def merge_cache(old: Params, new: Params, active: jax.Array) -> Params:
     """Per-slot cache insertion: rows of ``new`` where ``active`` (B,) bool
     replace rows of ``old`` — how prefill results enter the live engine
     cache, and how the scanned-prefill fallback freezes finished slots.
 
     Stacked pattern entries carry batch at axis 1 (leading repeat axis),
-    remainder entries at axis 0; ``pos`` is (B,).
+    remainder entries at axis 0; ``pos`` is (B,).  Paged caches never merge
+    — their prefill scatters into the shared pool in place.
     """
+    if "block_tables" in old or "block_tables" in new:
+        raise ValueError("merge_cache applies to ring caches only; the paged "
+                         "prefill writes the pool in place")
     def sel(axis):
         def f(o, n):
             shp = [1] * n.ndim
@@ -519,9 +846,13 @@ def decode_step(
 
     ``cache["pos"]`` is per-slot (B,); every slot advances by one.
     ``kv_offset`` (B,) shifts the int8-KV dither counter per slot
-    (per-request counter offsets, DESIGN.md §6).
+    (per-request counter offsets, DESIGN.md §6).  A cache carrying
+    ``block_tables`` decodes against the paged block pool instead of the
+    ring (the tables are loop-invariant across layers — every layer's pool
+    shares one logical→physical map).
     """
     pos = cache["pos"]
+    block_tables = cache.get("block_tables")
     x = jnp.take(params["embed"], token[:, None], axis=0)
     b = x.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
@@ -537,7 +868,7 @@ def decode_step(
             h, ne = _apply_block(
                 bp[pos_i], cfg, kind, h, positions, policy=policy,
                 counter=counter, cache_entry=ce[pos_i], pos=pos,
-                kv_offset=kv_offset,
+                kv_offset=kv_offset, block_tables=block_tables,
             )
             new_entries.append(ne)
         return h, tuple(new_entries)
@@ -555,6 +886,7 @@ def decode_step(
         x, ne = _apply_block(
             bp, cfg, kind, x, positions, policy=policy, counter=counter,
             cache_entry=cache["remainder"][i], pos=pos, kv_offset=kv_offset,
+            block_tables=block_tables,
         )
         new_rem.append(ne)
 
@@ -567,4 +899,6 @@ def decode_step(
         "layers": list(new_layer_caches),
         "remainder": new_rem,
     }
+    if block_tables is not None:
+        new_cache["block_tables"] = block_tables
     return logits, new_cache

@@ -1,9 +1,12 @@
-"""repro.serve — two-phase batched-prefill/decode serving (DESIGN.md §6)."""
+"""repro.serve — two-phase batched-prefill/decode serving over a ring or
+paged-block-pool KV cache (DESIGN.md §6)."""
 
 from repro.serve.engine import (Engine, Request, make_decode_and_sample,
-                                make_serve_fns)
+                                make_paged_prefill, make_serve_fns)
+from repro.serve.kvpool import KVPool
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
 
 __all__ = ["Engine", "Request", "make_serve_fns", "make_decode_and_sample",
-           "SamplingParams", "sample_tokens", "Scheduler"]
+           "make_paged_prefill", "KVPool", "SamplingParams", "sample_tokens",
+           "Scheduler"]

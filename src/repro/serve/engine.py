@@ -30,11 +30,12 @@ import numpy as np
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.numerics.policy import QuantPolicy
+from repro.serve.kvpool import KVPool
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
 
-__all__ = ["make_serve_fns", "make_decode_and_sample", "Engine", "Request",
-           "SamplingParams", "Scheduler"]
+__all__ = ["make_serve_fns", "make_decode_and_sample", "make_paged_prefill",
+           "Engine", "Request", "SamplingParams", "Scheduler", "KVPool"]
 
 
 def make_serve_fns(cfg: ModelConfig, policy: Optional[QuantPolicy] = None, *,
@@ -105,6 +106,31 @@ def make_decode_and_sample(cfg: ModelConfig,
     return decode_and_sample
 
 
+def make_paged_prefill(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
+                       *, kv_quant: bool = False):
+    """Build the jit-able paged prefill step (DESIGN.md §6).
+
+    ``paged_prefill(params, tokens, lengths, starts, block_tables, cache,
+    kv_offset, counter, prefix_blocks=...)`` runs one batched forward over
+    the prompt *suffixes*, scatters their K/V into the pool blocks named by
+    ``block_tables`` and returns ``(last_logits, cache')`` — the live cache
+    is donated by the engine, so the pool updates in place.
+    ``prefix_blocks`` is static (0 on cold waves — exactly the cold batched
+    prefill — or the table width when any admitted request hit the prefix
+    cache), so the engine compiles at most two variants.
+    """
+    policy = policy.resolved() if policy is not None else None
+
+    def paged_prefill(params, tokens, lengths, starts, block_tables, cache,
+                      kv_offset, counter, *, prefix_blocks: int = 0):
+        return registry.apply_prefill_paged(
+            params, cfg, tokens, lengths, starts, block_tables, cache,
+            policy=policy, counter=counter, kv_quant=kv_quant,
+            kv_offset=kv_offset, prefix_blocks=prefix_blocks)
+
+    return paged_prefill
+
+
 @dataclass
 class Request:
     """One generation request.
@@ -134,6 +160,12 @@ class Request:
     t_first: Optional[float] = None
     t_last: Optional[float] = None
     itl: List[float] = field(default_factory=list)
+    # paged-pool lifecycle state (engine-internal): a preempted request's
+    # frozen decode position / pending input token (blocks stay in the
+    # pool, so re-admission resumes instead of re-prefilling), and the
+    # count of its pool blocks sealed into the prefix cache so far
+    _resume: Optional[dict] = None
+    _sealed: int = 0
 
     @property
     def ttft(self) -> Optional[float]:
@@ -189,21 +221,70 @@ class Engine:
     def __init__(self, params, cfg: ModelConfig, batch: int, max_len: int,
                  policy: Optional[QuantPolicy] = None, frames=None,
                  kv_quant: bool = False,
-                 scheduler: Union[str, Scheduler] = "fcfs"):
+                 scheduler: Union[str, Scheduler] = "fcfs",
+                 kv_layout: str = "ring",
+                 block_size: Optional[int] = None,
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True):
         self.params, self.cfg, self.batch, self.max_len = params, cfg, batch, max_len
         policy = policy.resolved() if policy is not None else None
         self.policy = policy
         self.kv_quant = kv_quant
-        self.cache = registry.make_cache(params, cfg, batch, max_len,
-                                         frames=frames, policy=policy,
-                                         kv_quant=kv_quant)
+        if kv_layout not in ("ring", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if kv_layout == "paged" and not registry.supports_paged_kv(cfg):
+            raise ValueError("kv_layout='paged' requires an attention-only "
+                             f"decoder; {cfg.name!r} is not one")
+        self.kv_layout = kv_layout
+
+        if kv_layout == "paged":
+            from repro.kernels import autotune as _autotune
+            from repro.kernels import dispatch as _dispatch
+
+            if block_size is None:
+                nkv = max(1, cfg.n_kv_heads)
+                shape = (batch, max_len, nkv,
+                         max(1, cfg.n_heads // nkv), cfg.hd())
+                dtype = "int8" if kv_quant else "bfloat16"
+                block_size = _autotune.best_block(
+                    "paged_attention", shape, dtype, 8 if kv_quant else 16,
+                    "flash", _dispatch.resolve_backend(None).name)[0]
+            self.block_size = bs = int(block_size)
+            self.nbmax = -(-max_len // bs)
+            # default capacity matches the dense ring's token count; callers
+            # under-provision it to exercise continuous batching / eviction
+            self.num_blocks = (int(num_blocks) if num_blocks is not None
+                               else batch * self.nbmax)
+            # prefix reuse requires prefill numerics that depend only on
+            # token identity + absolute position: policy off, or the
+            # counter-independent deterministic rounding scheme.  (The int8
+            # KV quantiser is always position-keyed; its per-request offset
+            # seeds the prefix-hash chain instead.)
+            self._prefix_enabled = bool(prefix_cache) and (
+                policy is None or policy.scheme == "deterministic")
+            self.pool = KVPool(self.num_blocks, bs,
+                               prefix_cache=self._prefix_enabled)
+            self.cache = registry.make_cache(
+                params, cfg, batch, max_len, frames=frames, policy=policy,
+                kv_quant=kv_quant, kv_layout="paged", block_size=bs,
+                num_blocks=self.num_blocks)
+            self._bt = np.full((batch, self.nbmax), self.pool.trash, np.int32)
+            self._bt_dirty = True
+            self._prefill_paged = jax.jit(
+                make_paged_prefill(cfg, policy, kv_quant=kv_quant),
+                static_argnames=("prefix_blocks",), donate_argnums=(5,))
+        else:
+            self.pool = None
+            self.cache = registry.make_cache(params, cfg, batch, max_len,
+                                             frames=frames, policy=policy,
+                                             kv_quant=kv_quant)
         prefill_step, decode_step = make_serve_fns(
             cfg, policy, max_len=max_len, kv_quant=kv_quant, frames=frames)
         self._prefill = jax.jit(prefill_step)
         self._sample = jax.jit(sample_tokens)
         # one fused device dispatch per decode tick; the cache argument is
-        # donated so the ring buffer updates in place (no double-buffered
-        # B×cap×layers KV copy per token)
+        # donated so the ring buffer / block pool updates in place (no
+        # double-buffered KV copy per token)
         self._decode_and_sample = jax.jit(
             make_decode_and_sample(cfg, policy), donate_argnums=(2,))
         self._merge = jax.jit(
@@ -228,7 +309,8 @@ class Engine:
         self._dev = {}
         self._dev_dirty = True
         self.stats = {"prefill_s": 0.0, "prefill_tokens": 0, "prefill_calls": 0,
-                      "decode_s": 0.0, "decode_tokens": 0, "decode_calls": 0}
+                      "decode_s": 0.0, "decode_tokens": 0, "decode_calls": 0,
+                      "prefix_hit_tokens": 0, "preemptions": 0}
 
     # ------------------------------------------------------------------ API
 
@@ -279,6 +361,8 @@ class Engine:
             self._dev_dirty = False
 
     def _admit_and_prefill(self):
+        if self.kv_layout == "paged":
+            return self._admit_and_prefill_paged()
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free:
             return
@@ -337,8 +421,308 @@ class Engine:
         # re-sync the device copies before the first decode tick reads them
         self._dev_dirty = True
 
+    # ----------------------------------------------------- paged internals
+
+    def _tokens_written(self, req: Request) -> List[int]:
+        """Every token with (or about to get) a cache position: the prompt
+        (BOS-substituted if empty) followed by the generated stream —
+        position p holds ``seq[p]``, which is what block sealing and
+        resume-by-reprefill both rely on."""
+        return (list(req.prompt) or [1]) + list(req.out)
+
+    def _set_bt_row(self, i: int, table: List[int]):
+        self._bt[i, :] = self.pool.trash
+        if table:
+            self._bt[i, : len(table)] = table
+        self._bt_dirty = True
+
+    def _sync_block_tables(self):
+        if self._bt_dirty:
+            self.cache["block_tables"] = jnp.asarray(self._bt)
+            self._bt_dirty = False
+
+    def _set_slot_sampling(self, i: int, req: Request):
+        sp = req.sampling
+        self._temps[i] = sp.temperature
+        self._topks[i] = sp.top_k
+        self._seeds[i] = sp.seed
+        self._offsets[i] = sp.counter_offset
+        self._counters[i] = sp.counter_offset + len(req.out)
+
+    def _release_slot_blocks(self, i: int, req: Request):
+        self.pool.release(req.rid)
+        self._set_bt_row(i, [])
+        self.cache["pos"] = self.cache["pos"].at[i].set(0)
+        self._slot_pos[i] = 0
+
+    def _preempt_requeue(self, i: int, req: Request):
+        """Out-of-blocks preemption: freeze the slot's host state and send
+        the request back through the scheduler *with its blocks intact* —
+        re-admission resumes decode from the frozen position instead of
+        re-prefilling (the PR-4 replacement for the ring engine's hard
+        'preempted' finish)."""
+        req._resume = {"pos": int(self._slot_pos[i]),
+                       "last_token": int(self._last_token[i]),
+                       "t": time.time(), "reprefill": False}
+        req.state = "queued"
+        self.slots[i] = None
+        self._set_bt_row(i, [])
+        self.cache["pos"] = self.cache["pos"].at[i].set(0)
+        self.scheduler.requeue(req)
+        self.stats["preemptions"] += 1
+
+    def _release_for_reprefill(self, req: Request):
+        """Deadlock breaker (last resort): a *queued* preempted request
+        gives its blocks back to the pool; on re-admission it re-prefills
+        its full history (prompt + generated so far).  Counters replay
+        exactly — KV quantiser = absolute position + offset, sampling =
+        offset + emitted count — so the first layer's int8 codes are
+        bit-identical; deeper layers re-enter through the batched prefill
+        and agree with the decode-written cache to rounding only (the same
+        prefill≡decode divergence tests/test_serve.py has always pinned),
+        so a greedy near-tie after resume may break differently.  The
+        primary preemption path (blocks intact) has no such divergence."""
+        self.pool.forget(req.rid)
+        req._sealed = 0
+        if req._resume is None:
+            req._resume = {"pos": 0, "last_token": 0, "t": time.time()}
+        req._resume["reprefill"] = True
+        # 'preemptions' counts preemption *events* — a requeue-with-blocks
+        # and a later block reclamation are two events for one request
+        self.stats["preemptions"] += 1
+
+    def _resume_slot(self, i: int, req: Request):
+        st = req._resume
+        req._resume = None
+        self.slots[i] = req
+        req.state = "active"
+        self._set_slot_sampling(i, req)
+        self._last_token[i] = st["last_token"]
+        self._slot_pos[i] = st["pos"]
+        self._set_bt_row(i, self.pool.table(req.rid))
+        self.cache["pos"] = self.cache["pos"].at[i].set(st["pos"])
+        self._dev_dirty = True
+
+    def _seal_full_blocks(self, req: Request, n_tokens: int):
+        """Publish every full block below ``n_tokens`` into the prefix
+        cache (chained-hash order).  Callers only invoke this after the
+        device writes for those blocks were dispatched — a same-wave hit
+        would race the scatter."""
+        if not self._prefix_enabled:
+            return
+        bs = self.block_size
+        seq = self._tokens_written(req)
+        while req._sealed < n_tokens // bs:
+            j = req._sealed
+            self.pool.seal_block(req.rid, j, seq[j * bs:(j + 1) * bs])
+            req._sealed += 1
+
+    def _admit_and_prefill_paged(self):
+        """Continuous-batching admission (DESIGN.md §6): admit while a slot
+        *and* the pool's blocks allow — prefix-hit requests only need
+        blocks (and prefill compute) for their unshared suffix; preempted
+        requests resume in place.  Head-of-line order is preserved: the
+        first request the pool cannot serve stops admission (after the
+        deadlock breaker below has had its chance)."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return
+        bs = self.block_size
+        admitted = []                       # (slot, req, suffix, start)
+        while free:
+            req = self.scheduler.peek()
+            if req is None:
+                break
+            if req._resume is not None and not req._resume.get("reprefill"):
+                # resume with blocks intact; may need one block to continue
+                pos = req._resume["pos"]
+                needs_block = (pos % bs == 0
+                               and pos // bs >= len(self.pool.table(req.rid)))
+                if needs_block and self.pool.free_blocks < 1:
+                    if self._break_deadlock(req, 1):
+                        continue
+                    break
+                self.scheduler.pop(req)
+                if needs_block:
+                    phys = self.pool.append_block(req.rid)
+                    assert phys is not None
+                self._resume_slot(free.pop(0), req)
+                continue
+
+            seq = self._tokens_written(req)      # prompt (+ out on reprefill)
+            if len(req.prompt) > self.max_len or \
+                    self.pool.blocks_needed(min(len(seq) + 1, self.max_len)) \
+                    > self.num_blocks:
+                self.scheduler.pop(req)
+                # a reprefill-resumed request whose grown history no longer
+                # fits was *served* up to the pool's capacity — that is a
+                # 'length' stop, not a rejection of an unserved request
+                reason = "length" if req.out else "rejected"
+                req.done, req.finish_reason, req.state = True, reason, "done"
+                self.finished.append(req)
+                continue
+            seed = req.sampling.counter_offset if self.kv_quant else 0
+            shared, chain = self.pool.match_prefix(seq, seed)
+            table = self.pool.allocate(req.rid, len(seq), shared, chain)
+            if table is None:
+                if self._break_deadlock(
+                        req, self.pool.blocks_needed(len(seq)) - len(shared)):
+                    continue
+                break
+            self.scheduler.pop(req)
+            req._sealed = len(shared)
+            req._resume = None
+            start = len(shared) * bs
+            i = free.pop(0)
+            admitted.append((i, req, seq[start:], start))
+
+        if not admitted:
+            return
+
+        now = time.time()
+        lens = np.zeros((self.batch,), np.int32)
+        starts = np.zeros((self.batch,), np.int32)
+        prompts = {}
+        any_prefix = False
+        for i, req, suffix, start in admitted:
+            self.slots[i] = req
+            req.state = "active"
+            if req.t_admit is None:
+                req.t_admit = now
+            self._set_slot_sampling(i, req)
+            prompts[i] = suffix
+            lens[i] = len(suffix)
+            starts[i] = start
+            self._slot_pos[i] = start + len(suffix)
+            self._set_bt_row(i, self.pool.table(req.rid))
+            any_prefix = any_prefix or start > 0
+            self.stats["prefix_hit_tokens"] += start
+
+        s_bucket = _bucket(int(lens.max()))
+        toks = np.zeros((self.batch, s_bucket), np.int32)
+        for i, p in prompts.items():
+            toks[i, : len(p)] = p
+
+        self._dev_dirty = True
+        self._refresh_device_state()
+        bt_dev = jnp.asarray(self._bt)
+        self._bt_dirty = False
+        t0 = time.time()
+        last_logits, self.cache = self._prefill_paged(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(starts), bt_dev, self.cache,
+            self._dev["offsets"], self.tick,
+            prefix_blocks=self.nbmax if any_prefix else 0)
+        first = np.asarray(self._sample(
+            last_logits, self._dev["temps"], self._dev["topks"],
+            self._dev["seeds"], self._dev["counters"]))
+        dt = time.time() - t0
+        self.stats["prefill_s"] += dt
+        self.stats["prefill_tokens"] += int(lens.sum())
+        self.stats["prefill_calls"] += 1
+
+        # the prefill dispatch is ordered before any later gather, so the
+        # prompt's full blocks are now safely publishable for prefix hits
+        now = time.time()
+        for i, req, suffix, start in admitted:
+            self._seal_full_blocks(req, start + len(suffix))
+            self._emit(i, req, int(first[i]), now)
+        self._dev_dirty = True
+
+    def _break_deadlock(self, head: Request, blocks_short: int) -> bool:
+        """Admission stalled on the queue head with every slot idle: make
+        room by taking blocks back from *queued* preempted requests
+        (youngest preemption first — the least progress to re-prefill),
+        or, if the head itself holds everything, flip it to reprefill mode
+        so its own blocks free up.  Returns True when the caller should
+        retry admission."""
+        if any(s is not None for s in self.slots):
+            return False     # active slots will finish/preempt and free blocks
+        holders = [r for r in self.scheduler.queued()
+                   if r is not head and r._resume is not None
+                   and self.pool.table(r.rid)]
+        holders.sort(key=lambda r: -r._resume["t"])
+        made_room = False
+        for victim in holders:
+            self._release_for_reprefill(victim)
+            made_room = True
+            if self.pool.free_blocks >= blocks_short:
+                return True
+        if (not made_room and head._resume is not None
+                and self.pool.table(head.rid)):
+            self._release_for_reprefill(head)
+            return True
+        return made_room
+
+    def _pre_decode_paged(self):
+        """Before each decode tick: the token written this tick lands at
+        ``_slot_pos``; a slot crossing a block boundary needs a fresh block
+        *now*.  Sealing of the just-filled block happens here (its device
+        writes are complete), allocation failures preempt-and-requeue, and
+        ``max_len`` is a hard stop ('length' — the paged pool has no ring
+        wrap to overwrite)."""
+        bs = self.block_size
+        for i, req in [(i, s) for i, s in enumerate(self.slots)
+                       if s is not None]:
+            p = int(self._slot_pos[i])
+            if p >= self.max_len:
+                self._finish(i, req, "length")
+                continue
+            if p % bs != 0:
+                self._ensure_tail_writable(i, req, p // bs)
+                continue
+            self._seal_full_blocks(req, p)
+            if p // bs < len(self.pool.table(req.rid)):
+                self._ensure_tail_writable(i, req, p // bs)
+                continue                     # resumed into an allocated block
+            phys = self.pool.append_block(req.rid)
+            if phys is None:
+                if self.pool.holders == 1:
+                    # nothing to evict or preempt — the pool itself is the
+                    # capacity limit for this lone request
+                    self._finish(i, req, "length")
+                else:
+                    self._preempt_requeue(i, req)
+                continue
+            self._bt[i, p // bs] = phys
+            self._bt_dirty = True
+
+    def _ensure_tail_writable(self, i: int, req: Request, logical: int):
+        """Copy-on-write guard before this tick's decode write: the tail
+        block is uniquely owned by construction (only full blocks are ever
+        sealed/shared), so this is normally a refcount check and nothing
+        more — but if a future sharing path ever hands out a partial
+        block, the write copies it private instead of corrupting every
+        other holder.  Pool exhaustion during the copy preempts like any
+        other allocation failure."""
+        old = int(self._bt[i, logical])
+        try:
+            phys, copied = self.pool.ensure_writable(req.rid, logical)
+        except MemoryError:
+            self._preempt_requeue(i, req)
+            return
+        if copied:
+            self._copy_pool_block(old, int(phys))
+            self._bt[i, logical] = phys
+            self._bt_dirty = True
+
+    def _copy_pool_block(self, src: int, dst: int):
+        """Duplicate one physical block's contents across every layer's
+        pool arrays (stacked pattern entries carry a leading repeat axis)."""
+        self.cache["layers"] = [
+            jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), e)
+            for e in self.cache["layers"]]
+        self.cache["remainder"] = [
+            jax.tree.map(lambda a: a.at[dst].set(a[src]), e)
+            for e in self.cache["remainder"]]
+
     def _decode_tick(self):
+        if self.kv_layout == "paged":
+            self._pre_decode_paged()
+            self._sync_block_tables()
         active = [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
         self._refresh_device_state()
         t0 = time.time()
         toks_dev, counters_dev, self.cache = self._decode_and_sample(
@@ -381,12 +765,21 @@ class Engine:
             self._finish(i, req, "stop")
         elif len(req.out) >= req.effective_max_new():
             self._finish(i, req, "length")
-        elif self._slot_pos[i] >= self.max_len:
+        elif self.kv_layout == "ring" and self._slot_pos[i] >= self.max_len:
             # the slot's ring cache is full: preempt so the next admission
-            # wave can recycle it (the request keeps what it generated)
+            # wave can recycle it (the request keeps what it generated).
+            # The paged engine has no ring wrap — it requeues-with-blocks on
+            # pool pressure instead (_preempt_requeue) and treats max_len as
+            # a hard 'length' stop in _pre_decode_paged.
             self._finish(i, req, "preempted")
 
     def _finish(self, i: int, req: Request, reason: str):
         req.done, req.finish_reason, req.state = True, reason, "done"
         self.finished.append(req)
         self.slots[i] = None
+        if self.kv_layout == "paged":
+            # seal what the prompt + generation filled (future prefix hits),
+            # then drop the references — sealed blocks linger in the pool's
+            # LRU prefix cache until allocation pressure evicts them
+            self._seal_full_blocks(req, int(self._slot_pos[i]))
+            self._release_slot_blocks(i, req)

@@ -2,7 +2,11 @@
 
 The scheduler owns the QUEUED stage of the request lifecycle; the engine
 asks it for up to ``n`` requests whenever decode slots free up and routes
-the admitted batch through the prefill step.
+the admitted batch through the prefill step.  Under the paged KV pool the
+engine admits *conditionally* — it peeks the head, checks the pool can
+supply the blocks, and either pops or stops — and preempted requests
+re-enter through :meth:`requeue` with their original arrival order, so a
+victim resumes ahead of traffic that arrived after it.
 
 * ``fcfs``     — strict submission order.
 * ``priority`` — highest ``Request.priority`` first; submission order
@@ -11,7 +15,7 @@ the admitted batch through the prefill step.
 
 from __future__ import annotations
 
-from typing import Any, List
+from typing import Any, List, Optional
 
 __all__ = ["Scheduler"]
 
@@ -26,21 +30,59 @@ class Scheduler:
         self.policy = policy
         self._queue: List[Any] = []
         self._arrivals = 0
+        self._unsorted = False
 
     def submit(self, req) -> None:
         req._arrival = self._arrivals
         self._arrivals += 1
         self._queue.append(req)
+        self._unsorted = True
+
+    def requeue(self, req) -> None:
+        """Put a preempted request back, keeping its original ``_arrival``
+        stamp: within its priority class it sorts *before* anything
+        submitted after it, so preemption never costs a request its place
+        in line (resume-ordering contract, tests/test_kvpool.py)."""
+        assert hasattr(req, "_arrival"), "requeue is for admitted requests"
+        self._queue.append(req)
+        self._unsorted = True
 
     def __len__(self) -> int:
         return len(self._queue)
+
+    def _sort(self) -> None:
+        # FCFS keeps arrival order too — requeued victims must slot back in
+        # front of later arrivals, not at the tail.  Sorting is deferred to
+        # the next read and skipped while nothing was inserted, so the
+        # admission loop's peek-per-request stays O(1) in steady state.
+        if self._unsorted:
+            self._queue.sort(
+                key=lambda r: (-getattr(r, "priority", 0), r._arrival)
+                if self.policy == "priority" else r._arrival)
+            self._unsorted = False
+
+    def queued(self) -> List[Any]:
+        """Snapshot of the queue in policy order (read-only view — the
+        engine's deadlock breaker scans it for preempted block-holders)."""
+        self._sort()
+        return list(self._queue)
+
+    def peek(self) -> Optional[Any]:
+        """The request :meth:`admit` would hand out next (None if empty) —
+        the paged engine's token-budget gate inspects it before popping."""
+        if not self._queue:
+            return None
+        self._sort()
+        return self._queue[0]
+
+    def pop(self, req) -> None:
+        """Remove a specific request (the engine admits what it peeked)."""
+        self._queue.remove(req)
 
     def admit(self, n: int) -> List[Any]:
         """Pop up to ``n`` requests in policy order."""
         if n <= 0 or not self._queue:
             return []
-        if self.policy == "priority":
-            self._queue.sort(
-                key=lambda r: (-getattr(r, "priority", 0), r._arrival))
+        self._sort()
         picked, self._queue = self._queue[:n], self._queue[n:]
         return picked

@@ -164,6 +164,48 @@ def test_measured_sweep_caches_winner(tmp_path, monkeypatch):
     autotune.clear_cache()
 
 
+def test_paged_attention_candidates_and_model_pick():
+    """(bs,) pool-block candidates stay under the VMEM budget; the model
+    pick balances granularity — a full-length request spans ≥ 4 blocks
+    whenever a candidate allows it, and tiny caps stay servable."""
+    cands = autotune.paged_attention_candidates(4096, hd=64, group=4,
+                                                quantized=True)
+    assert cands
+    for (bs,) in cands:
+        assert autotune.decode_attention_vmem_bytes(
+            (bs,), hd=64, group=4, quantized=True) \
+            <= autotune.VMEM_BUDGET_BYTES
+    pick = autotune.best_block("paged_attention", (8, 4096, 8, 4, 64),
+                               "int8", 8, "flash", "pallas-tpu")
+    assert pick in cands and pick[0] * 4 <= 4096
+    tiny = autotune.best_block("paged_attention", (2, 8, 2, 2, 32),
+                               "bfloat16", 16, "flash", "pallas-interpret")
+    assert 1 <= tiny[0] <= 8
+
+
+def test_save_cache_atomic_merge_survives_concurrent_writers(tmp_path,
+                                                             monkeypatch):
+    """The winner-cache write is merge + atomic rename: entries persisted
+    by another process survive, ours win on conflicts, no temp files are
+    left behind, and the file is never observable half-written (satellite:
+    parallel bench/CI runs must not truncate each other)."""
+    cache_file = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache_file))
+    autotune.clear_cache()
+    # "another process" wrote first
+    cache_file.write_text(json.dumps({"matmul|1x1x1|f32|8|dither|x": [4, 4, 4],
+                                      "shared|key": [1]}))
+    autotune._CACHE["shared|key"] = (2,)
+    autotune._CACHE["quantize|8x8|f32|8|dither|x"] = (8, 8)
+    autotune.save_cache()
+    merged = json.loads(cache_file.read_text())
+    assert merged["matmul|1x1x1|f32|8|dither|x"] == [4, 4, 4]  # theirs kept
+    assert merged["shared|key"] == [2]                         # ours wins
+    assert merged["quantize|8x8|f32|8|dither|x"] == [8, 8]
+    assert not list(tmp_path.glob("*.tmp.*"))                  # swap cleaned up
+    autotune.clear_cache()
+
+
 # ---------------------------------------------------------------------------
 # call-site wiring
 # ---------------------------------------------------------------------------

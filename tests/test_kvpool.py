@@ -1,0 +1,212 @@
+"""Host-side paged-pool allocator + scheduler edge cases (DESIGN.md §6).
+
+KVPool: free-list accounting, chained-hash prefix matching, refcounted
+sharing with LRU eviction of cached blocks, copy-on-write, and the
+release/forget split.  Scheduler: priority ties stay FCFS, requeued
+(preempted) requests keep their place in line, and admission succeeds with
+exactly one free block (satellite coverage for PR 4)."""
+
+import pytest
+
+from repro.serve import Engine, Request, Scheduler
+from repro.serve.kvpool import KVPool
+
+# ---------------------------------------------------------------------------
+# KVPool
+# ---------------------------------------------------------------------------
+
+
+def test_pool_allocate_and_release_accounting():
+    pool = KVPool(num_blocks=8, block_size=4)
+    assert pool.free_blocks == 8 and pool.trash == 8
+    table = pool.allocate(rid=1, n_tokens=9)          # 3 blocks
+    assert len(table) == 3 and pool.free_blocks == 5
+    assert pool.live_blocks == 3 and pool.holders == 1
+    grown = pool.append_block(1)
+    assert grown is not None and pool.table(1) == table + [grown]
+    pool.release(1)
+    # nothing sealed → everything back on the free list, nothing cached
+    assert pool.free_blocks == 8 and pool.cached_blocks == 0
+
+
+def test_pool_allocation_failure_leaves_state_unchanged():
+    pool = KVPool(num_blocks=2, block_size=4)
+    assert pool.allocate(rid=1, n_tokens=12) is None   # needs 3 > 2
+    assert pool.free_blocks == 2 and pool.holders == 0
+    assert pool.allocate(rid=1, n_tokens=8) is not None
+    assert pool.append_block(1) is None                # exhausted
+
+
+def test_pool_prefix_match_caps_below_full_prompt():
+    """A full-prompt hit is capped: at least one token must remain to
+    prefill (its logits seed sampling), so the match walks at most
+    (len-1)//bs blocks even when every block is cached."""
+    pool = KVPool(num_blocks=8, block_size=4)
+    toks = list(range(8))
+    pool.allocate(1, len(toks))
+    pool.seal_block(1, 0, toks[:4])
+    pool.seal_block(1, 1, toks[4:])
+    pool.release(1)
+    assert pool.cached_blocks == 2
+    hits, _ = pool.match_prefix(toks)                 # exactly the cached seq
+    assert len(hits) == 1                             # capped at (8-1)//4
+    hits, _ = pool.match_prefix(toks + [99])
+    assert len(hits) == 2                             # proper prefix → both
+    # a different offset seed namespaces the chain (int8 code streams)
+    hits, _ = pool.match_prefix(toks + [99], seed=1000)
+    assert hits == []
+
+
+def test_pool_shared_refcounts_and_lru_eviction():
+    pool = KVPool(num_blocks=3, block_size=2)
+    pool.allocate(1, 4)
+    seq = [5, 6, 7, 8]
+    pool.seal_block(1, 0, seq[:2])
+    pool.seal_block(1, 1, seq[2:])
+    pool.release(1)
+    assert pool.cached_blocks == 2 and pool.free_blocks == 3
+    # a second request hits the chain and shares the physical blocks
+    hits, chain = pool.match_prefix(seq + [9, 10])
+    assert len(hits) == 2
+    t2 = pool.allocate(2, 6, shared=hits, chain=chain)
+    assert t2[:2] == hits and pool.live_blocks == 3
+    assert pool.cached_blocks == 0                    # shared ≠ evictable
+    # pool is full; a cold request must fail, not evict referenced blocks
+    assert pool.allocate(3, 4) is None
+    pool.release(2)
+    # now eviction can reclaim the LRU cached block for a cold allocation
+    t3 = pool.allocate(3, 6)
+    assert t3 is not None and pool.stats["evicted"] >= 1
+    # the evicted block's hash is gone from the lookup
+    hits2, _ = pool.match_prefix(seq + [9])
+    assert len(hits2) < 2
+
+
+def test_pool_shared_cached_blocks_are_not_fresh_capacity():
+    """Regression: the allocation guard must not count the matched prefix
+    blocks themselves as capacity for the fresh blocks — acquiring them
+    removes them from the evictable set, so a hit whose shared blocks are
+    the only 'free' space must fail cleanly (state unchanged), not trip an
+    assert mid-allocation and leak the acquired references."""
+    pool = KVPool(num_blocks=3, block_size=4)
+    toks = list(range(8))
+    pool.allocate(1, len(toks))
+    pool.seal_block(1, 0, toks[:4])
+    pool.seal_block(1, 1, toks[4:])
+    pool.release(1)                              # 2 cached, 1 free
+    assert pool.allocate(2, 4) is not None       # 3rd block now held
+    hits, chain = pool.match_prefix(toks + [9])
+    assert len(hits) == 2                        # both hits are cached-only
+    # needs 1 fresh block; free_blocks == 2 but both ARE the shared blocks
+    assert pool.allocate(3, 9, shared=hits, chain=chain) is None
+    # state intact: nothing leaked, the cached chain still matches
+    assert pool.free_blocks == 2 and pool.holders == 1
+    assert len(pool.match_prefix(toks + [9])[0]) == 2
+    pool.release(2)
+    # with the holder gone the same request fits (eviction supplies fresh)
+    assert pool.allocate(3, 9, shared=hits, chain=chain) is not None
+
+
+def test_pool_copy_on_write():
+    pool = KVPool(num_blocks=4, block_size=2)
+    pool.allocate(1, 4)
+    pool.seal_block(1, 0, [1, 2])
+    hits, chain = pool.match_prefix([1, 2, 3])
+    pool.allocate(2, 3, shared=hits, chain=chain)
+    # request 2's logical block 0 is shared → a write must copy it first
+    phys, copied = pool.ensure_writable(2, 0)
+    assert copied and phys != hits[0]
+    assert pool.table(2)[0] == phys
+    assert pool.stats["cow_copies"] == 1
+    # request 1 still owns the original; its own write needs no copy
+    p1, c1 = pool.ensure_writable(1, 0)
+    assert p1 == hits[0] and not c1
+
+
+def test_pool_forget_drops_prefix_cache_entries():
+    pool = KVPool(num_blocks=4, block_size=2)
+    pool.allocate(1, 4)
+    pool.seal_block(1, 0, [1, 2])
+    pool.forget(1)
+    assert pool.free_blocks == 4 and pool.cached_blocks == 0
+    hits, _ = pool.match_prefix([1, 2, 3])
+    assert hits == []
+
+
+# ---------------------------------------------------------------------------
+# Scheduler edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_priority_ties_admit_fcfs_within_class():
+    sched = Scheduler("priority")
+    reqs = [Request(rid=r, prompt=[1], priority=p)
+            for r, p in enumerate([3, 5, 3, 5, 5])]
+    for r in reqs:
+        sched.submit(r)
+    assert [r.rid for r in sched.admit(5)] == [1, 3, 4, 0, 2]
+
+
+@pytest.mark.parametrize("policy", ["fcfs", "priority"])
+def test_requeue_preserves_arrival_order(policy):
+    """A preempted request re-enters *ahead* of later arrivals in its
+    priority class — preemption must not cost it its place in line."""
+    sched = Scheduler(policy)
+    reqs = [Request(rid=r, prompt=[1]) for r in range(4)]
+    for r in reqs[:3]:
+        sched.submit(r)
+    victim = sched.admit(1)[0]
+    assert victim.rid == 0
+    sched.submit(reqs[3])                  # arrives after the preemption
+    sched.requeue(victim)
+    assert [r.rid for r in sched.admit(4)] == [0, 1, 2, 3]
+
+
+def test_requeue_respects_priority_classes():
+    sched = Scheduler("priority")
+    lo = Request(rid=0, prompt=[1], priority=0)
+    sched.submit(lo)
+    victim = sched.admit(1)[0]
+    hi = Request(rid=1, prompt=[1], priority=9)
+    sched.submit(hi)
+    sched.requeue(victim)
+    # the requeued low-priority victim still yields to higher priority
+    assert [r.rid for r in sched.admit(2)] == [1, 0]
+
+
+def test_peek_then_pop_matches_admit_order():
+    sched = Scheduler("priority")
+    for r, p in enumerate([1, 7, 7]):
+        sched.submit(Request(rid=r, prompt=[1], priority=p))
+    head = sched.peek()
+    assert head.rid == 1
+    sched.pop(head)
+    assert sched.peek().rid == 2 and len(sched) == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine admission at exactly one free block (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_admission_with_exactly_one_free_block():
+    """Token-budget admission boundary: with one free block, a one-block
+    request admits and a two-block request must wait (head-of-line), then
+    admit once the first finishes and releases."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import registry
+
+    cfg = get_config("smollm_135m").reduced()
+    params = registry.init_model(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, batch=2, max_len=8, kv_layout="paged",
+                 block_size=8, num_blocks=1, prefix_cache=False)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4))   # 1 block
+    eng.submit(Request(rid=1, prompt=[4, 5, 6], max_new=4))   # must wait
+    eng.step()       # rid 0 admitted (sole block); rid 1 head-of-line waits
+    assert eng.slots[0] is not None and eng.slots[0].rid == 0
+    assert eng.slots[1] is None and len(eng.scheduler) == 1
+    done = sorted(eng.run(40), key=lambda r: r.rid)
+    assert [r.rid for r in done] == [0, 1]
+    assert all(len(r.out) == 4 for r in done)
