@@ -1,4 +1,6 @@
-"""Render the dry-run JSON into the EXPERIMENTS.md §Roofline markdown table."""
+"""Render the dry-run JSON into the roofline markdown table (the DESIGN.md
+§5 scaling cells; rows = arch × cell, columns = compute/memory/collective
+roofline terms)."""
 
 from __future__ import annotations
 

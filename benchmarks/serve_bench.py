@@ -56,9 +56,30 @@ from repro.serve import Engine, Request, SamplingParams
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "artifacts", "serve_bench.json")
 
-ARTIFACT_VERSION = 3
+ARTIFACT_VERSION = 4
 
 POLICIES = ("none", "dither", "stochastic", "deterministic")
+
+
+def _mesh_profile(cfg, engine=None) -> dict:
+    """Schema-v4 mesh dimensions, read from the *engine's resolved layout*
+    (never re-derived — the artifact must describe what actually ran),
+    plus the analytic decode-time collective bytes per generated token per
+    slot.  The serve layout's only decode collective is the all-gather of
+    attention-head activations before the replicated W_O (DESIGN.md §9):
+    each model shard receives the other shards' (n_heads/tp)·hd bf16 slices
+    once per attention layer per token; 0 when tp == 1, under the GQA
+    replicated fallback, or off-mesh (``engine`` None = single-device
+    workload rows)."""
+    if engine is None or engine.mesh is None:
+        return {"mesh": None, "data_shards": 1, "model_shards": 1,
+                "heads_sharded": False, "collective_bytes_per_token": 0}
+    dp, tp, heads_sharded = engine.dp, engine.tp, engine.heads_sharded
+    per_layer = ((tp - 1) * (cfg.n_heads // tp) * cfg.hd() * 2
+                 if heads_sharded else 0)
+    return {"mesh": [dp, tp], "data_shards": dp, "model_shards": tp,
+            "heads_sharded": heads_sharded,
+            "collective_bytes_per_token": int(_n_attn(cfg) * per_layer)}
 
 
 def _pct(xs, q):
@@ -135,7 +156,8 @@ def _attn_profile(cfg, max_len: int, kv_quant: bool, batch: int,
 def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
                  backend: str, batch: int, max_len: int, prompt_len: int,
                  max_new: int, requests: int, temperature: float = 0.0,
-                 waves: int = 3, kv_layout: str = "ring", block_size=None):
+                 waves: int = 3, kv_layout: str = "ring", block_size=None,
+                 mesh=None):
     """Measure one (policy × kv_quant) serving configuration.
 
     Builds a fresh engine, runs one warm-up request through the same prompt
@@ -155,7 +177,7 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
         kw = dict(kv_layout="paged", block_size=block_size,
                   prefix_cache=False)           # the grid measures cold rates
     engine = Engine(params, cfg, batch, max_len, policy=policy, frames=frames,
-                    kv_quant=kv_quant, **kw)
+                    kv_quant=kv_quant, mesh=mesh, **kw)
     if kv_layout == "paged":
         block_size = engine.block_size
 
@@ -190,10 +212,13 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
         reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
     attn_profile = _attn_profile(cfg, max_len, kv_quant, batch,
                                  kv_layout=kv_layout, block_size=block_size)
+    mesh_profile = _mesh_profile(cfg, engine)
     return {
         "arch": cfg.name, "policy": policy_name,
         "kernel_backend": backend if policy_name != "none" else None,
         **attn_profile,
+        **mesh_profile,
+        "per_shard_decode_tok_s": dc / mesh_profile["data_shards"],
         "kv_layout": kv_layout,
         "block_size": int(block_size) if kv_layout == "paged" else None,
         "kv_quant": bool(kv_quant), "batch": batch, "max_len": max_len,
@@ -258,6 +283,7 @@ def bench_prefix_reuse(cfg, params, *, batch: int, max_len: int,
     dense_bytes = _kv_bytes_dense_ring(cfg, batch, max_len, kv_quant)
     return {
         "workload": "prefix_reuse", "arch": cfg.name,
+        **_mesh_profile(cfg),          # prefix workload runs single-device
         "kv_layout": "paged", "block_size": int(block_size),
         "kv_quant": bool(kv_quant),
         "batch": batch, "max_len": max_len, "prefix_len": prefix_len,
@@ -277,11 +303,13 @@ def bench_prefix_reuse(cfg, params, *, batch: int, max_len: int,
 
 def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
           full: bool = False, backend: str = "jnp", policies=POLICIES,
-          reduced: bool = True, kv_layout: str = "ring", block_size=None):
+          reduced: bool = True, kv_layout: str = "ring", block_size=None,
+          mesh_shape=None):
     """Run the policy × kv_quant grid; returns (rows, artifact).  The paged
     layout additionally runs the prefix-reuse workload on attention-only
     archs (others fall back to the ring grid — the paged pool requires
-    per-position KV)."""
+    per-position KV).  ``mesh_shape`` = (data, model) serves the grid on a
+    sharded engine (DESIGN.md §9; needs data×model jax devices)."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -290,6 +318,10 @@ def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
         print(f"arch {cfg.name} has no per-position KV to page; "
               f"falling back to kv_layout=ring", file=sys.stderr)
         kv_layout = "ring"
+    mesh = None
+    if mesh_shape is not None:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(*mesh_shape)
 
     if smoke:
         shape = dict(batch=2, max_len=32, prompt_len=8, max_new=4, requests=3)
@@ -309,18 +341,20 @@ def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
     if kv_layout == "paged" and block_size is None:
         block_size = max(4, min(16, shape["max_len"] // 4))
 
+    mesh_tag = (f"|mesh{mesh_shape[0]}x{mesh_shape[1]}"
+                if mesh_shape is not None else "")
     rows, results = [], []
     for policy_name in policies:
         for kv_quant in (False, True):
             res = bench_config(cfg, params, policy_name, kv_quant,
                                backend=backend, kv_layout=kv_layout,
-                               block_size=block_size, **shape)
+                               block_size=block_size, mesh=mesh, **shape)
             results.append(res)
             us_per_tok = (1e6 / res["decode_tok_s"]
                           if res["decode_tok_s"] else 0.0)
             rows.append((
                 f"serve[{policy_name}|kv_quant={int(kv_quant)}"
-                f"|{kv_layout}]", us_per_tok,
+                f"|{kv_layout}{mesh_tag}]", us_per_tok,
                 f"prefill/decode={res['prefill_to_decode_ratio']:.1f}x "
                 f"ttft_p50={res['ttft_ms']['p50']:.0f}ms"))
 
@@ -346,6 +380,8 @@ def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
         "unix_time": time.time(),
         "smoke": smoke, "full": full, "arch": cfg.name, "shape": shape,
         "kv_layout": kv_layout,
+        "mesh": list(mesh_shape) if mesh_shape is not None else None,
+        "device_count": jax.device_count(),
         "attn_backend": dispatch.resolve_backend(None).name,
         "results": results,
     }
@@ -368,8 +404,11 @@ def main(argv=None) -> None:
                     help="larger batch/prompt/max_new grid")
     ap.add_argument("--no-reduced", action="store_true",
                     help="use the full-size architecture config (slow off-TPU)")
-    ap.add_argument("--policies", default=",".join(POLICIES),
-                    help="comma list from {none,dither,stochastic,deterministic}")
+    ap.add_argument("--policies", default=None,
+                    help="comma list from {none,dither,stochastic,"
+                         "deterministic} (default: all four; under --mesh "
+                         "the default narrows to 'none' — pass the list "
+                         "explicitly to override)")
     ap.add_argument("--kernel-backend", default=None,
                     help="policy matmul backend for quantised rows "
                          "(default: pallas-interpret under --smoke, else jnp)")
@@ -382,6 +421,14 @@ def main(argv=None) -> None:
                          "block pool (adds the prefix-reuse workload)")
     ap.add_argument("--block-size", type=int, default=None,
                     help="paged pool block size in tokens")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve the grid on a (data, model)-sharded engine, "
+                         "e.g. '2,2' (DESIGN.md §9; needs data×model "
+                         "devices — on CPU force them with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N).  "
+                         "Defaults the policy list to 'none': mesh rows "
+                         "measure the sharded serve path, and only the "
+                         "policy-free stream is pinned shard-invariant")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="JSON artifact path ('' to skip writing)")
     args = ap.parse_args(argv)
@@ -390,12 +437,25 @@ def main(argv=None) -> None:
         os.environ[dispatch.ENV_VAR] = args.attn_backend
     backend = args.kernel_backend or ("pallas-interpret" if args.smoke
                                       else "jnp")
+    mesh_shape = None
+    policies = (tuple(args.policies.split(",")) if args.policies
+                else POLICIES)
+    if args.mesh:
+        from repro.launch.mesh import parse_serve_mesh
+        try:
+            parsed = parse_serve_mesh(args.mesh)    # one shared parser
+        except ValueError as e:
+            ap.error(str(e))
+        mesh_shape = tuple(int(parsed.shape[a]) for a in ("data", "model"))
+        if args.policies is None:       # explicit --policies always wins
+            policies = ("none",)
     rows, artifact = sweep(args.arch, smoke=args.smoke, full=args.full,
                            backend=backend,
-                           policies=tuple(args.policies.split(",")),
+                           policies=policies,
                            reduced=not args.no_reduced,
                            kv_layout=args.kv_layout,
-                           block_size=args.block_size)
+                           block_size=args.block_size,
+                           mesh_shape=mesh_shape)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")

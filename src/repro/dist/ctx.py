@@ -24,6 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 __all__ = [
     "mesh_context", "current_mesh", "axis_size", "tp_size", "dp_axes",
     "dp_shards", "seq_shard_attention", "constrain",
+    "serve_shard_scope", "kv_shard_info", "gather_heads",
 ]
 
 _MESH_STACK: list = []
@@ -91,6 +92,69 @@ def seq_shard_attention(n_heads: int) -> bool:
     replicated specs)."""
     tp = tp_size()
     return tp > 1 and n_heads % tp != 0
+
+
+# ---------------------------------------------------------------------------
+# serve-time shard scope (inside shard_map, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# The sharded serving engine runs its jitted steps under ``shard_map``: model
+# code sees *local* shapes (batch rows of this data shard, KV heads of this
+# model shard), but two things must stay functions of the GLOBAL coordinates
+# for sharded and single-device streams to be bitwise-equal:
+#
+# 1. the int8 KV quantiser's element indices (its dither hash is keyed on the
+#    global (row, head, element) index — DESIGN.md §6's bit-reusability
+#    contract), and
+# 2. the all-gather of attention heads before the (replicated) W_O matmul —
+#    the serve TP layout keeps every f32 contraction un-split, so sharding
+#    never reassociates a reduction (DESIGN.md §9).
+#
+# The engine installs this scope around the shard_map body; outside it (no
+# mesh, or code paths like training that shard via GSPMD instead) both
+# helpers degrade to identity / None.
+
+_SERVE_SHARD: list = []
+
+
+@contextlib.contextmanager
+def serve_shard_scope(*, head0, heads_sharded: bool,
+                      model_axis: str = "model"):
+    """Install the per-shard → global coordinate map for one traced serve
+    step.  ``head0`` is the shard's global KV-head offset (a traced scalar,
+    ``lax.axis_index`` times the local head count; 0 under the fallback);
+    ``heads_sharded`` records whether the 'model' axis actually splits the
+    heads (False = GQA replicated fallback, DESIGN.md §9).  Batch rows need
+    no offset on purpose: everything the model hashes is row-independent
+    (see ``transformer._kv_elem_idx``)."""
+    _SERVE_SHARD.append({
+        "head0": head0, "heads_sharded": bool(heads_sharded),
+        "model_axis": model_axis,
+    })
+    try:
+        yield
+    finally:
+        _SERVE_SHARD.pop()
+
+
+def kv_shard_info() -> Optional[dict]:
+    """The active serve shard scope (None outside sharded serving) — the KV
+    quantiser reads global element-index offsets from it."""
+    return _SERVE_SHARD[-1] if _SERVE_SHARD else None
+
+
+def gather_heads(x: jax.Array) -> jax.Array:
+    """All-gather the (sharded) attention-head dim of ``x`` (last axis)
+    across the 'model' axis — identity outside sharded serving or under the
+    GQA replicated fallback.  Concatenation order equals the global head
+    order, so the gathered activation is bitwise the single-device one; the
+    consuming W_O matmul then contracts the full head dim on every shard
+    instead of psum-ing partial products (DESIGN.md §9)."""
+    info = kv_shard_info()
+    if info is None or not info["heads_sharded"]:
+        return x
+    return jax.lax.all_gather(x, info["model_axis"], axis=x.ndim - 1,
+                              tiled=True)
 
 
 def _validated_entry(entry, dim: int, sizes: dict):

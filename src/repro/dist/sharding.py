@@ -29,7 +29,8 @@ from typing import Any
 import jax
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["param_specs", "cache_specs", "batch_specs", "data_axes"]
+__all__ = ["param_specs", "cache_specs", "batch_specs", "data_axes",
+           "serve_param_specs", "serve_heads_shardable"]
 
 _DP_AXIS_NAMES = ("pod", "data")
 
@@ -125,33 +126,103 @@ def param_specs(params: Any, cfg, mesh) -> Any:
     return jax.tree_util.tree_map_with_path(rule, params)
 
 
-def cache_specs(cache: Any, cfg, mesh) -> Any:
-    """Spec tree for decode caches: batch dim → DP axes, KV/SSM head dim →
-    'model' (both divisibility-guarded)."""
-    sizes = _mesh_sizes(mesh)
-    dp = data_axes(mesh)
-    dp_axes_tuple = dp if isinstance(dp, tuple) else ((dp,) if dp else ())
-    dp_size = math.prod(int(sizes[a]) for a in dp_axes_tuple) if dp_axes_tuple else 1
-    tp = int(sizes.get("model", 1))
+def serve_heads_shardable(cfg, tp: int) -> bool:
+    """Can the serving engine split attention heads across a ``tp``-way
+    'model' axis?  Requires the *KV* head count to divide (GQA head counts
+    often don't — the engine then falls back to fully replicated TP compute,
+    mirroring ``_TP_RULES``'s head-count guards; DESIGN.md §9).  ``n_heads``
+    divides whenever ``n_kv_heads`` does (``n_heads = group · n_kv_heads``)."""
+    return tp > 1 and cfg.n_kv_heads > 0 and cfg.n_kv_heads % tp == 0 \
+        and cfg.n_heads % tp == 0
 
-    # cache leaves whose dim 2 is a (KV or state) head dim: (B, S, H, hd) KV,
-    # quantised KV scales, and cross-attention caches; SSM state "h" carries
-    # heads at dim 1: (B, nh, hd, n).
-    heads_at_2 = {"k", "v", "k_scale", "v_scale", "cross_k", "cross_v"}
-    heads_at_1 = {"h"}
+
+def serve_param_specs(params: Any, cfg, mesh) -> Any:
+    """Spec tree for the *serving* path (DESIGN.md §9): only the QKV
+    projections shard (column-parallel on 'model', head-count guarded);
+    everything else — W_O, MLP, embeddings, norms — stays replicated.
+
+    This is deliberately a subset of :func:`param_specs`: the training
+    layout's row-parallel W_O / W_down produce partial products that a psum
+    reassociates, which breaks the engine's bitwise sharded ≡ single-device
+    stream contract (the same fixed-reduction-layout argument as the scaled
+    unary dot-products of arXiv:2307.03204).  The serve layout instead
+    all-gathers the (small) attention-head activations before a replicated
+    W_O — every f32 contraction stays whole, and the KV cache (the serving
+    memory bottleneck) still shards ``tp``-way on its head dim.
+    """
+    tp = int(_mesh_sizes(mesh).get("model", 1))
+    shardable = serve_heads_shardable(cfg, tp)
+    qkv = {"wq", "bq", "wk", "wv", "bk", "bv"}
 
     def rule(path, leaf):
         shape = leaf.shape
         if len(shape) == 0:
             return P()
         name = _leaf_name(path)
+        if shardable and name in qkv and shape[-1] % tp == 0:
+            spec = [None] * len(shape)
+            spec[-1] = "model"
+            return P(*spec)
+        return _replicated(len(shape))
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+# cache leaves whose *entry-local* dim 2 is a (KV) head dim: (B, S, H, hd)
+# ring KV, quantised KV scales, cross-attention caches — and, in the paged
+# layout, (n_blocks+1, bs, H, hd) pool arrays; SSM state "h" carries heads at
+# entry-local dim 1: (B, nh, hd, n).
+_HEADS_AT_2 = {"k", "v", "k_scale", "v_scale", "cross_k", "cross_v"}
+_HEADS_AT_1 = {"h"}
+# tree keys under which cache entries carry a leading stack axis (scanned
+# layer repeats / the enc-dec per-layer stacks); "remainder" entries do not
+_STACKED_KEYS = {"layers", "self", "cross_k", "cross_v"}
+
+
+def cache_specs(cache: Any, cfg, mesh) -> Any:
+    """Spec tree for decode caches (ring and paged): the per-slot batch dim
+    (and the paged layout's pool-block axis) → DP axes, KV/SSM head dims →
+    'model'; every entry divisibility-guarded (DESIGN.md §9).
+
+    Stacked entries (under ``layers`` / the enc-dec per-layer stacks) carry
+    a leading repeat axis which is *never* sharded — the batch/head rules
+    shift right by one.  A cache carrying ``block_tables`` is the paged
+    layout: per-layer pool arrays are ``(n_shards·(n_blocks+1), bs, ...)``
+    and shard on their leading block axis (each data shard owns its blocks
+    plus its own trash block); ``block_tables`` / ``pos`` shard on the slot
+    dim.
+    """
+    sizes = _mesh_sizes(mesh)
+    dp = data_axes(mesh)
+    dp_axes_tuple = dp if isinstance(dp, tuple) else ((dp,) if dp else ())
+    dp_size = math.prod(int(sizes[a]) for a in dp_axes_tuple) if dp_axes_tuple else 1
+    tp = int(sizes.get("model", 1))
+    # paged caches (identified by a "block_tables" key) need no special
+    # branch: dim 0 of an entry is the batch dim on ring layouts and the
+    # pool-block axis on paged ones, and both shard on the DP axes; the
+    # entry-local head dim is 2 in both layouts.
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        name = _leaf_name(path)
+        stacked = any(isinstance(k, jax.tree_util.DictKey)
+                      and str(k.key) in _STACKED_KEYS for k in path)
+        off = 1 if stacked else 0
         spec = [None] * len(shape)
-        if dp and dp_size > 1 and shape[0] % dp_size == 0:
-            spec[0] = dp
-        head_dim = (2 if name in heads_at_2 else 1 if name in heads_at_1 else None)
-        if (head_dim is not None and head_dim < len(shape) and tp > 1
-                and shape[head_dim] % tp == 0):
-            spec[head_dim] = "model"
+        # dim 0 of every entry (after the stack axis): per-slot batch rows on
+        # the ring layouts, the pool-block axis on paged k/v/scale leaves
+        if (dp and dp_size > 1 and off < len(shape)
+                and shape[off] % dp_size == 0):
+            spec[off] = dp
+        head_dim = (2 if name in _HEADS_AT_2 else
+                    1 if name in _HEADS_AT_1 else None)
+        if head_dim is not None:
+            head_dim += off
+            if (head_dim < len(shape) and tp > 1
+                    and shape[head_dim] % tp == 0):
+                spec[head_dim] = "model"
         return P(*spec)
 
     return jax.tree_util.tree_map_with_path(rule, cache)

@@ -25,6 +25,13 @@ never changes results, only speed.
 When no ``block`` is given, Pallas backends ask the autotuner: a cached
 measured winner if one exists for (shape, dtype, bits, scheme, backend),
 else the VMEM-budget model pick (kernels/autotune.py).
+
+Sharded serving (DESIGN.md §9) calls every entry point *inside*
+``shard_map``: the kernels see shard-local shapes — B/dp batch rows,
+n_kv_heads/tp heads, the data shard's local block pool — and need no
+mesh awareness of their own; per-shard results are bitwise the
+single-device ones because batch rows and KV heads are embarrassingly
+parallel dims of every kernel here.
 """
 
 from __future__ import annotations

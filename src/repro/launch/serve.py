@@ -52,6 +52,11 @@ def serve_main(argv=None):
                          "the dense ring, batch × ceil(max_len/bs))")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable cross-request prefix-block reuse")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve sharded on a (data, model) mesh, e.g. "
+                         "'2,2' (DESIGN.md §9; needs data×model devices — "
+                         "on CPU force them with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 = softmax sampling")
     ap.add_argument("--top-k", type=int, default=0)
@@ -68,6 +73,14 @@ def serve_main(argv=None):
     policy = (None if args.policy == "none"
               else QuantPolicy(scheme=args.policy, backend=args.kernel_backend))
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import parse_serve_mesh
+        try:
+            mesh = parse_serve_mesh(args.mesh)
+        except ValueError as e:
+            ap.error(str(e))
+
     params = registry.init_model(jax.random.PRNGKey(0), cfg)
     frames = (jnp.zeros((args.batch, cfg.n_enc_tokens, cfg.d_model), jnp.bfloat16)
               if cfg.is_encdec else None)
@@ -75,7 +88,7 @@ def serve_main(argv=None):
                     frames=frames, kv_quant=args.kv_quant and not cfg.is_encdec,
                     scheduler=args.sched, kv_layout=args.kv_layout,
                     block_size=args.block_size, num_blocks=args.num_blocks,
-                    prefix_cache=not args.no_prefix_cache)
+                    prefix_cache=not args.no_prefix_cache, mesh=mesh)
     for r in range(args.requests):
         prompt = [(7 * r + i) % (cfg.vocab_size - 1) + 1
                   for i in range(args.prompt_len)]
@@ -98,13 +111,17 @@ def serve_main(argv=None):
           f"(prefill {pf:.0f} tok/s over {st['prefill_calls']} calls, "
           f"decode {dc:.0f} tok/s over {st['decode_calls']} ticks)")
     if args.kv_layout == "paged":
-        ps = engine.pool.stats
+        ps = engine.pool_stats()            # summed across data-shard pools
         print(f"paged pool: block_size={engine.block_size} "
               f"blocks={engine.num_blocks} allocs={ps['allocated']} "
               f"evictions={ps['evicted']} "
               f"prefix_hit_tokens={st['prefix_hit_tokens']} "
               f"preemptions={st['preemptions']} "
-              f"cached_now={engine.pool.cached_blocks}")
+              f"cached_now={ps['cached']}")
+    if mesh is not None:
+        print(f"mesh: data={engine.dp} model={engine.tp} "
+              f"heads_sharded={engine.heads_sharded} "
+              f"slots/shard={args.batch // engine.dp}")
 
 
 if __name__ == "__main__":

@@ -55,7 +55,7 @@ class ModelConfig:
     def vocab_padded(self) -> int:
         """Vocab padded to a multiple of 16 so the logits dim shards on the
         TP axis — the loss then runs on vocab-sharded logits instead of
-        all-reducing a full f32 (B,S,V) tensor (EXPERIMENTS.md §Perf it.8).
+        all-reducing a full f32 (B,S,V) tensor (DESIGN.md §5).
         Pad columns have zero weights; the loss and decode mask them."""
         return ((self.vocab_size + 15) // 16) * 16
 

@@ -180,7 +180,8 @@ def attention(
     # tensor alone exceeds HBM (granite-3-8b: 38 GB/device).  Scanning query
     # chunks keeps the working set at (b, h, C, s) — the TPU-native analogue
     # of flash attention's tiling (a Pallas flash kernel would fuse further;
-    # the scan gives the same asymptotic memory).  §Perf it.9.
+    # the scan gives the same asymptotic memory).  DESIGN.md §5's
+    # prefill_32k cell is what forces this path to exist.
     chunk = 4096
     if (cache is None and kv_src is None and not seq_par and causal
             and mask is None and s > chunk and s % chunk == 0):
@@ -222,6 +223,7 @@ def attention(
 
         _, outs = jax.lax.scan(body, None, (qs, offsets))
         out = jnp.swapaxes(outs, 0, 1).reshape(b, s, nh * hd)
+        out = ctx.gather_heads(out)   # sharded serving (DESIGN.md §9)
         out = dense(out, params["wo"], policy, counter, seed=4)
         return out, (kv_out if return_kv else new_cache)
 
@@ -229,8 +231,8 @@ def attention(
         # Head-parallel TP: the score einsum must expose a single head dim
         # divisible by the model axis.  The 5-D grouped layout (nkv, g) has
         # two small dims GSPMD cannot shard 16-way → per-layer reshuffles
-        # (EXPERIMENTS.md §Perf it.6: +11 GB/layer of all-gathers on
-        # granite-3-8b).  Repeat the (small, replicated) KV heads instead —
+        # (+11 GB/layer of all-gathers on granite-3-8b, DESIGN.md §5).
+        # Repeat the (small, replicated) KV heads instead —
         # group× HBM reads of KV are ~1% of the collective bytes saved.
         k = jnp.repeat(k, group, axis=2)
         v = jnp.repeat(v, group, axis=2)
@@ -247,6 +249,11 @@ def attention(
             logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
         out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v).reshape(b, s, nh * hd)
+    # sharded serving runs this inside shard_map on local heads: all-gather
+    # them before the replicated W_O so the contraction stays whole and the
+    # stream stays bitwise shard-count-invariant (DESIGN.md §9); identity
+    # outside a serve shard scope (training shards via GSPMD instead).
+    out = ctx.gather_heads(out)
     out = dense(out, params["wo"], policy, counter, seed=4)
     if seq_par:  # hand tokens back to the TP regions replicated over 'model'
         out = ctx.constrain(out, ctx.dp_axes(), None, None)

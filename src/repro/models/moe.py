@@ -69,7 +69,7 @@ def moe_ffn(
 ) -> jax.Array:
     """x: (B, S, d) → (B, S, d).  Static capacity, drop on overflow.
 
-    Data-parallel-local dispatch (EXPERIMENTS.md §Perf it.4): capacity is
+    Data-parallel-local dispatch (DESIGN.md §5): capacity is
     allocated PER data shard and the scatter/gather run as a vmap over the
     shard axis, so GSPMD keeps dispatch local to each DP rank instead of
     all-reducing a global (e·cap, d) buffer every layer (the baseline's 299 s
@@ -116,7 +116,7 @@ def moe_ffn(
     # dim shards on 'model' even when tp ∤ e (qwen2-moe: 60 → 64, 6% padded
     # compute).  Slicing the DP-replicated buffer onto expert shards is
     # free; all three expert einsums then run fully local per EP rank and
-    # only the combine gather crosses the axis (EXPERIMENTS.md §Perf it.5).
+    # only the combine gather crosses the axis (DESIGN.md §5).
     tp = ctx.tp_size()
     e_pad = ((e + tp - 1) // tp) * tp if tp > 1 else e
 

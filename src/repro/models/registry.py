@@ -60,7 +60,13 @@ def make_cache(params: Params, cfg: ModelConfig, batch_size: int, max_len: int,
                frames: Optional[jax.Array] = None, *, policy=None,
                kv_quant: bool = False, kv_layout: str = "ring",
                block_size: Optional[int] = None,
-               num_blocks: Optional[int] = None) -> Params:
+               num_blocks: Optional[int] = None,
+               data_shards: int = 1) -> Params:
+    """Decode-cache constructor.  ``data_shards`` > 1 lays the paged block
+    pool out as shard-local sub-pools (one trash block each) for the sharded
+    serving engine — ``num_blocks`` then counts blocks per shard
+    (DESIGN.md §9); ring caches need no layout change (the slot dim shards
+    directly)."""
     if cfg.is_encdec:
         assert frames is not None
         if kv_layout != "ring":
@@ -73,7 +79,8 @@ def make_cache(params: Params, cfg: ModelConfig, batch_size: int, max_len: int,
                          f"(arch {cfg.name!r} has recurrent state)")
     return transformer.init_cache(cfg, batch_size, max_len, kv_quant=kv_quant,
                                   kv_layout=kv_layout, block_size=block_size,
-                                  num_blocks=num_blocks)
+                                  num_blocks=num_blocks,
+                                  data_shards=data_shards)
 
 
 def apply_decode(params: Params, cfg: ModelConfig, token: jax.Array, cache: Params,

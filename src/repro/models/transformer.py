@@ -25,6 +25,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.dist import ctx as dist_ctx
 from repro.models import hybrid, layers, moe, ssm
 from repro.models.config import ModelConfig
 from repro.numerics.policy import QuantPolicy, dense
@@ -38,7 +39,7 @@ __all__ = [
 
 
 def _kv_q8(t, ctr, idx, seed):
-    """Dither-round K/V to int8 codes + per-position scales (§Perf it.10).
+    """Dither-round K/V to int8 codes + per-position scales (DESIGN.md §2/§6).
 
     One quantiser for every cache write path — decode step, ring prefill
     scatter and paged prefill scatter — so the codes a position holds are a
@@ -60,6 +61,31 @@ def _kv_q8(t, ctr, idx, seed):
     codes = jnp.floor(scaled) + _rnd.dither_bit(
         scaled - jnp.floor(scaled), slot_d, u, 16)
     return (jnp.clip(codes, 0.0, 255.0) - 128.0).astype(jnp.int8), scale
+
+
+def _kv_elem_idx(nkv: int, hd: int) -> jax.Array:
+    """The (1, 1, nkv, hd) element-index pattern every KV-quantiser call
+    site hashes with: global index head·hd + lane, broadcasting over batch
+    rows and sequence positions.
+
+    Deliberately *independent of the batch row*: a position's int8 codes
+    must be a pure function of (value, absolute position + request offset,
+    head, lane) — the bit-reusability contract behind paged prefix sharing
+    (a shared block must not remember which slot wrote it, DESIGN.md §6)
+    and behind sharded serving (continuous-batching slot placement shifts
+    when slots partition across data shards, and the stream must not shift
+    with it, DESIGN.md §9).  Distinct requests decorrelate through the
+    counter term instead (position + per-request ``counter_offset``).
+    Under tensor-parallel head sharding the model sees local heads; the
+    shard's global head offset comes from ``dist.ctx.serve_shard_scope``.
+    """
+    info = dist_ctx.kv_shard_info()
+    head0 = (info["head0"] if info is not None and info["heads_sharded"]
+             else 0)
+    head = jnp.asarray(head0, jnp.uint32) + jnp.arange(nkv, dtype=jnp.uint32)
+    lane = jnp.arange(hd, dtype=jnp.uint32)
+    return (head[:, None] * jnp.uint32(hd)
+            + lane[None, :]).reshape(1, 1, nkv, hd)
 
 
 # ---------------------------------------------------------------------------
@@ -133,7 +159,7 @@ def _cache_entry(cfg: ModelConfig, kind: str, batch: int, max_len: int,
     if kind == "attn":
         cap = min(cfg.window, max_len) if cfg.window else max_len
         if kv_quant:
-            # Dither-quantised int8 cache (§Perf it.10 — the paper's
+            # Dither-quantised int8 cache (DESIGN.md §6 — the paper's
             # unbiased rounding applied to KV compression): codes + one
             # per-position, per-head scale; written with counter = pos (plus
             # an optional per-request offset, DESIGN.md §6), so re-decodes
@@ -158,15 +184,22 @@ def _cache_entry(cfg: ModelConfig, kind: str, batch: int, max_len: int,
 
 
 def _paged_cache_entry(cfg: ModelConfig, kind: str, num_blocks: int,
-                       block_size: int, kv_quant: bool):
+                       block_size: int, kv_quant: bool,
+                       data_shards: int = 1):
     """One attention layer's share of the paged block pool (DESIGN.md §6):
     ``num_blocks`` usable blocks of ``block_size`` token slots each, plus a
     trailing *trash* block (physical id ``num_blocks``) that absorbs writes
     routed through unallocated block-table entries — scatters never need a
-    validity branch, and reads of the trash block are always masked."""
+    validity branch, and reads of the trash block are always masked.
+
+    Sharded serving (DESIGN.md §9) partitions the pool on the 'data' axis:
+    the leading block axis holds ``data_shards`` shard-local pools of
+    ``num_blocks + 1`` blocks back to back, each with its *own* trash block,
+    so block-table entries stay shard-local physical ids and every shard's
+    scatter/gather runs on its local (num_blocks+1, ...) slice."""
     if kind != "attn":
         raise ValueError("paged KV layout requires attention-only layers")
-    nbp = num_blocks + 1
+    nbp = data_shards * (num_blocks + 1)
     nkv, hd = cfg.n_kv_heads, cfg.hd()
     if kv_quant:
         return {
@@ -184,15 +217,25 @@ def _paged_cache_entry(cfg: ModelConfig, kind: str, num_blocks: int,
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                kv_quant: bool = False, kv_layout: str = "ring",
                block_size: Optional[int] = None,
-               num_blocks: Optional[int] = None) -> Params:
+               num_blocks: Optional[int] = None,
+               data_shards: int = 1) -> Params:
+    """Build the decode cache.  For the paged layout ``num_blocks`` counts
+    usable blocks *per data shard* (``data_shards`` = 1 outside sharded
+    serving, so it is simply the pool capacity) and ``block_tables`` entries
+    are shard-local physical ids whose unset value is the shard-local trash
+    block ``num_blocks`` (DESIGN.md §6/§9)."""
     paged = kv_layout == "paged"
     if kv_layout not in ("ring", "paged"):
         raise ValueError(f"unknown kv_layout {kv_layout!r}")
+    if data_shards < 1 or batch % data_shards:
+        raise ValueError(f"batch {batch} must divide into {data_shards} "
+                         "data shards")
     if paged:
         if not block_size or block_size <= 0:
             raise ValueError("paged kv_layout requires a positive block_size")
         nbmax = -(-max_len // block_size)          # blocks per full request
-        num_blocks = num_blocks if num_blocks is not None else batch * nbmax
+        num_blocks = (num_blocks if num_blocks is not None
+                      else (batch // data_shards) * nbmax)
     p_ = _period(cfg)
     rep, rem = divmod(cfg.n_layers, p_)
     stacked = []
@@ -200,14 +243,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         for pos in range(p_):
             kind = cfg.layer_kind(pos)
             one = (_paged_cache_entry(cfg, kind, num_blocks, block_size,
-                                      kv_quant) if paged
+                                      kv_quant, data_shards) if paged
                    else _cache_entry(cfg, kind, batch, max_len, kv_quant))
             stacked.append(
                 jax.tree.map(lambda x: jnp.broadcast_to(x, (rep,) + x.shape), one)
             )
     remainder = [
         (_paged_cache_entry(cfg, cfg.layer_kind(rep * p_ + i), num_blocks,
-                            block_size, kv_quant) if paged
+                            block_size, kv_quant, data_shards) if paged
          else _cache_entry(cfg, cfg.layer_kind(rep * p_ + i), batch, max_len,
                            kv_quant))
         for i in range(rem)
@@ -279,7 +322,7 @@ def _attention_decode(params, cfg: ModelConfig, x, cache, pos, policy, counter,
         ctr = pos if kv_offset is None else pos + jnp.broadcast_to(
             jnp.asarray(kv_offset, jnp.int32), (b,))
         ctr4 = ctr.reshape(b, 1, 1, 1)
-        idx4 = jnp.arange(b * nkv * hd, dtype=jnp.uint32).reshape(b, 1, nkv, hd)
+        idx4 = _kv_elem_idx(nkv, hd)
         kq, ks = _kv_q8(k, ctr4, idx4, 101)
         vq, vs = _kv_q8(v, ctr4, idx4, 102)
         if paged:
@@ -332,7 +375,10 @@ def _attention_decode(params, cfg: ModelConfig, x, cache, pos, policy, counter,
             v_scale=new_cache.get("v_scale"),
             window=cfg.window or 0,
         )
-    out = attn.astype(x.dtype).reshape(b, 1, nh * hd)
+    # sharded serving: heads all-gather before the replicated W_O so the
+    # output contraction stays whole (bitwise contract, DESIGN.md §9);
+    # identity outside a serve shard scope / under the GQA fallback
+    out = dist_ctx.gather_heads(attn.astype(x.dtype).reshape(b, 1, nh * hd))
     return dense(out, params["wo"], policy, counter, seed=4), new_cache
 
 
@@ -490,8 +536,9 @@ def _prefill_entry(cfg: ModelConfig, kv, lengths, cap: int, kv_quant: bool,
            else jnp.broadcast_to(jnp.asarray(kv_offset, jnp.int32), (b,)))
     ctr = (pj + off[:, None])[:, :, None, None]                # (B, cap, 1, 1)
     nkv, hd = k_full.shape[2], k_full.shape[3]
-    # same element indices as the decode-step quantiser's (B, 1, nkv, hd) token
-    idx4 = jnp.arange(b * nkv * hd, dtype=jnp.uint32).reshape(b, 1, nkv, hd)
+    # same (row-independent) element indices as the decode-step quantiser —
+    # see _kv_elem_idx for why the batch row must not enter the hash
+    idx4 = _kv_elem_idx(nkv, hd)
 
     def q8(t, seed):
         q, scale = _kv_q8(t, ctr, idx4, seed)
@@ -635,7 +682,7 @@ def _paged_scatter_entry(entry, k, v, positions, lengths, starts,
     off = (jnp.zeros((b,), jnp.int32) if kv_offset is None
            else jnp.broadcast_to(jnp.asarray(kv_offset, jnp.int32), (b,)))
     ctr = (pos_pad + off[:, None])[:, :, None, None]     # (B, S_pad, 1, 1)
-    idx4 = jnp.arange(b * nkv * hd, dtype=jnp.uint32).reshape(b, 1, nkv, hd)
+    idx4 = _kv_elem_idx(nkv, hd)
     kq, ks = _kv_q8(k, ctr, idx4, 101)
     vq, vs = _kv_q8(v, ctr, idx4, 102)
     return {"k": entry["k"].at[phys].set(blocks(kq)),
@@ -702,7 +749,7 @@ def _paged_prefill_attention(params, cfg: ModelConfig, x, positions, lengths,
     else:
         probs = jax.nn.softmax(logits_s, axis=-1).astype(x.dtype)
         out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
-    out = out.reshape(b, s, nh * hd)
+    out = dist_ctx.gather_heads(out.reshape(b, s, nh * hd))
     out = dense(out, params["wo"], policy, counter, seed=4)
 
     new_entry = _paged_scatter_entry(entry, k, v, positions, lengths, starts,

@@ -11,7 +11,7 @@ sequence so quantisation error time-averages at O(1/N) instead of Ω(1/√N)).
 Under pjit the DP all-reduce is implicit, so this module exposes the
 transform applied at the gradient boundary: grads → fake-quantised grads.
 On a bf16 wire this halves (8-bit) or quarters (4-bit) DP collective bytes —
-the dry-run's collective-term measurements quantify it (EXPERIMENTS.md §Perf).
+the dry-run's collective-term measurements quantify it (DESIGN.md §4).
 """
 
 from __future__ import annotations

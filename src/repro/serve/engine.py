@@ -15,18 +15,31 @@ recycled; streaming callbacks fire per emitted token.
 The numerics policy — and therefore the fused kernel backend — applies to
 prefill and decode alike, so weight-quantised serving exercises the same
 dispatcher path as training.
+
+``Engine(..., mesh=...)`` runs the same loop sharded over a
+('data', 'model') mesh (DESIGN.md §9): decode slots and the paged block
+pools partition on 'data' (one shard-local ``KVPool`` per data shard), KV
+heads on 'model' (replicated fallback when the GQA head count does not
+divide), and every jitted step executes per-shard under ``shard_map``.
+The layout is reduction-preserving — QKV column-parallel, heads
+all-gathered before a replicated W_O, no psums — so for policy-free bf16
+and int8-KV serving the sharded token stream is *bitwise* the
+single-device stream (tests/test_sharded_serve.py).
 """
 
 from __future__ import annotations
 
+import functools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Callable, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import ctx as dist_ctx
+from repro.dist import sharding as dist_sharding
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.numerics.policy import QuantPolicy
@@ -225,7 +238,8 @@ class Engine:
                  kv_layout: str = "ring",
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 mesh=None):
         self.params, self.cfg, self.batch, self.max_len = params, cfg, batch, max_len
         policy = policy.resolved() if policy is not None else None
         self.policy = policy
@@ -236,6 +250,35 @@ class Engine:
             raise ValueError("kv_layout='paged' requires an attention-only "
                              f"decoder; {cfg.name!r} is not one")
         self.kv_layout = kv_layout
+
+        # ---- mesh layout (DESIGN.md §9): decode slots partition on 'data',
+        # KV heads on 'model' (replicated fallback when the GQA head count
+        # does not divide — mirroring dist.sharding._TP_RULES' guards)
+        self.mesh = mesh
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names,
+                             (int(mesh.shape[a]) for a in mesh.axis_names)))
+            self.dp = int(sizes.get("data", 1))
+            self.tp = int(sizes.get("model", 1))
+            if not registry.supports_batched_prefill(cfg):
+                raise ValueError(
+                    "mesh serving requires an attention-only decoder "
+                    f"(arch {cfg.name!r} has recurrent state / an encoder)")
+            if batch % self.dp:
+                raise ValueError(f"batch {batch} must be a multiple of the "
+                                 f"mesh's data axis ({self.dp})")
+        else:
+            self.dp = self.tp = 1
+        self.heads_sharded = (mesh is not None
+                               and dist_sharding.serve_heads_shardable(
+                                   cfg, self.tp))
+        # inside shard_map the model code sees local shapes: scale the head
+        # counts down (head_dim pinned so cfg.hd() is unchanged)
+        self._cfg_local = (_dc_replace(cfg,
+                                       n_heads=cfg.n_heads // self.tp,
+                                       n_kv_heads=cfg.n_kv_heads // self.tp,
+                                       head_dim=cfg.hd())
+                           if self.heads_sharded else cfg)
 
         if kv_layout == "paged":
             from repro.kernels import autotune as _autotune
@@ -252,9 +295,15 @@ class Engine:
             self.block_size = bs = int(block_size)
             self.nbmax = -(-max_len // bs)
             # default capacity matches the dense ring's token count; callers
-            # under-provision it to exercise continuous batching / eviction
-            self.num_blocks = (int(num_blocks) if num_blocks is not None
-                               else batch * self.nbmax)
+            # under-provision it to exercise continuous batching / eviction.
+            # Under a mesh the pool partitions on 'data': each data shard
+            # owns num_blocks/dp blocks (its admission budget) plus its own
+            # trash block, and block tables carry shard-local physical ids.
+            total = (int(num_blocks) if num_blocks is not None
+                     else batch * self.nbmax)
+            total = -(-total // self.dp) * self.dp     # round up to dp
+            self.num_blocks = total
+            self._nb_local = total // self.dp
             # prefix reuse requires prefill numerics that depend only on
             # token identity + absolute position: policy off, or the
             # counter-independent deterministic rounding scheme.  (The int8
@@ -262,34 +311,66 @@ class Engine:
             # seeds the prefix-hash chain instead.)
             self._prefix_enabled = bool(prefix_cache) and (
                 policy is None or policy.scheme == "deterministic")
-            self.pool = KVPool(self.num_blocks, bs,
-                               prefix_cache=self._prefix_enabled)
+            self.pools = [KVPool(self._nb_local, bs,
+                                 prefix_cache=self._prefix_enabled)
+                          for _ in range(self.dp)]
+            self._trash = self._nb_local          # shard-local trash id
+            self._rid_shard: dict = {}            # rid → data shard holding it
             self.cache = registry.make_cache(
                 params, cfg, batch, max_len, frames=frames, policy=policy,
                 kv_quant=kv_quant, kv_layout="paged", block_size=bs,
-                num_blocks=self.num_blocks)
-            self._bt = np.full((batch, self.nbmax), self.pool.trash, np.int32)
+                num_blocks=self._nb_local, data_shards=self.dp)
+            self._bt = np.full((batch, self.nbmax), self._trash, np.int32)
             self._bt_dirty = True
-            self._prefill_paged = jax.jit(
-                make_paged_prefill(cfg, policy, kv_quant=kv_quant),
-                static_argnames=("prefix_blocks",), donate_argnums=(5,))
         else:
-            self.pool = None
+            self.pools = []
             self.cache = registry.make_cache(params, cfg, batch, max_len,
                                              frames=frames, policy=policy,
                                              kv_quant=kv_quant)
+
+        cfg_l = self._cfg_local
         prefill_step, decode_step = make_serve_fns(
-            cfg, policy, max_len=max_len, kv_quant=kv_quant, frames=frames)
-        self._prefill = jax.jit(prefill_step)
+            cfg_l, policy, max_len=max_len, kv_quant=kv_quant, frames=frames)
         self._sample = jax.jit(sample_tokens)
-        # one fused device dispatch per decode tick; the cache argument is
-        # donated so the ring buffer / block pool updates in place (no
-        # double-buffered KV copy per token)
-        self._decode_and_sample = jax.jit(
-            make_decode_and_sample(cfg, policy), donate_argnums=(2,))
         self._merge = jax.jit(
             lambda old, new, act: registry.merge_prefill(cfg, old, new, act),
             donate_argnums=(0,))
+        self._paged_variants: dict = {}
+        if mesh is None:
+            self._prefill = jax.jit(prefill_step)
+            # one fused device dispatch per decode tick; the cache argument
+            # is donated so the ring buffer / block pool updates in place
+            # (no double-buffered KV copy per token)
+            self._decode_and_sample = jax.jit(
+                make_decode_and_sample(cfg_l, policy), donate_argnums=(2,))
+            if kv_layout == "paged":
+                self._prefill_paged = jax.jit(
+                    make_paged_prefill(cfg_l, policy, kv_quant=kv_quant),
+                    static_argnames=("prefix_blocks",), donate_argnums=(5,))
+        else:
+            # the same jitted steps, run per-shard under shard_map: every
+            # in/out leaf carries an explicit PartitionSpec, and the body is
+            # wrapped in a serve shard scope so the KV quantiser hashes
+            # global element indices and attention heads all-gather before
+            # the replicated W_O (the bitwise-parity contract, DESIGN.md §9)
+            P = jax.sharding.PartitionSpec
+            row, tok2, sc = P("data"), P("data", None), P()
+            self._pspec = dist_sharding.serve_param_specs(params, cfg, mesh)
+            self._cspec = dist_sharding.cache_specs(self.cache, cfg, mesh)
+            # the ring prefill's output cache mirrors the ring engine cache;
+            # the paged engine prefills through _paged_prefill_call instead
+            self._prefill = (jax.jit(self._mesh_wrap(
+                prefill_step,
+                (self._pspec, tok2, row, row, sc),
+                (tok2, self._cspec))) if kv_layout == "ring" else None)
+            self._decode_and_sample = jax.jit(self._mesh_wrap(
+                make_decode_and_sample(cfg_l, policy),
+                (self._pspec, row, self._cspec, row, sc, row, row, row, row),
+                (row, row, self._cspec)), donate_argnums=(2,))
+            if kv_layout == "paged":
+                self._in_specs_paged = (self._pspec, tok2, row, row, tok2,
+                                        self._cspec, row, sc)
+                self._out_specs_paged = (tok2, self._cspec)
 
         self.scheduler = (Scheduler(scheduler) if isinstance(scheduler, str)
                           else scheduler)
@@ -311,6 +392,72 @@ class Engine:
         self.stats = {"prefill_s": 0.0, "prefill_tokens": 0, "prefill_calls": 0,
                       "decode_s": 0.0, "decode_tokens": 0, "decode_calls": 0,
                       "prefix_hit_tokens": 0, "preemptions": 0}
+
+    # ------------------------------------------------------------- mesh glue
+
+    def _mesh_wrap(self, fn, in_specs, out_specs):
+        """Run ``fn`` per-shard under ``shard_map`` on the engine mesh, with
+        the serve shard scope installed so model code maps its local batch
+        rows / KV heads back to global coordinates (DESIGN.md §9)."""
+        from jax.experimental.shard_map import shard_map
+
+        nkv_local = self._cfg_local.n_kv_heads
+        heads_sharded = self.heads_sharded
+
+        def body(*args):
+            head0 = (jax.lax.axis_index("model") * nkv_local
+                     if heads_sharded else 0)
+            with dist_ctx.serve_shard_scope(head0=head0,
+                                            heads_sharded=heads_sharded):
+                return fn(*args)
+
+        return shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+    def _paged_prefill_call(self, *args, prefix_blocks: int):
+        """Dispatch the paged prefill: the single-device engine keeps one
+        jitted fn with a static ``prefix_blocks``; the mesh engine builds
+        (at most two — 0 and nbmax) shard_map variants instead, since
+        shard_map bodies take positional args only."""
+        if self.mesh is None:
+            return self._prefill_paged(*args, prefix_blocks=prefix_blocks)
+        fn = self._paged_variants.get(prefix_blocks)
+        if fn is None:
+            base = make_paged_prefill(self._cfg_local, self.policy,
+                                      kv_quant=self.kv_quant)
+            fn = jax.jit(self._mesh_wrap(
+                functools.partial(base, prefix_blocks=prefix_blocks),
+                self._in_specs_paged, self._out_specs_paged),
+                donate_argnums=(5,))
+            self._paged_variants[prefix_blocks] = fn
+        return fn(*args)
+
+    # ------------------------------------------------------ pool aggregates
+
+    @property
+    def pool(self) -> Optional[KVPool]:
+        """The shard-local block pool (data shard 0) — the *whole* pool on a
+        single-shard engine, which is what pre-mesh callers expect; use
+        :attr:`pools` / :meth:`pool_stats` for per-shard views under a mesh
+        (DESIGN.md §9)."""
+        return self.pools[0] if self.pools else None
+
+    def pool_stats(self) -> dict:
+        """Allocator stats summed across the per-data-shard pools, plus the
+        aggregate ``live``/``cached`` block counts."""
+        agg = {"live": 0, "cached": 0}
+        for p in self.pools:
+            for k, v in p.stats.items():
+                agg[k] = agg.get(k, 0) + v
+            agg["live"] += p.live_blocks
+            agg["cached"] += p.cached_blocks
+        return agg
+
+    def _slot_shard(self, i: int) -> int:
+        return i // (self.batch // self.dp)
+
+    def _pool_of(self, rid: int) -> KVPool:
+        return self.pools[self._rid_shard[rid]]
 
     # ------------------------------------------------------------------ API
 
@@ -431,7 +578,7 @@ class Engine:
         return (list(req.prompt) or [1]) + list(req.out)
 
     def _set_bt_row(self, i: int, table: List[int]):
-        self._bt[i, :] = self.pool.trash
+        self._bt[i, :] = self._trash
         if table:
             self._bt[i, : len(table)] = table
         self._bt_dirty = True
@@ -450,7 +597,8 @@ class Engine:
         self._counters[i] = sp.counter_offset + len(req.out)
 
     def _release_slot_blocks(self, i: int, req: Request):
-        self.pool.release(req.rid)
+        self._pool_of(req.rid).release(req.rid)
+        self._rid_shard.pop(req.rid, None)
         self._set_bt_row(i, [])
         self.cache["pos"] = self.cache["pos"].at[i].set(0)
         self._slot_pos[i] = 0
@@ -482,7 +630,8 @@ class Engine:
         prefill≡decode divergence tests/test_serve.py has always pinned),
         so a greedy near-tie after resume may break differently.  The
         primary preemption path (blocks intact) has no such divergence."""
-        self.pool.forget(req.rid)
+        self._pool_of(req.rid).forget(req.rid)
+        self._rid_shard.pop(req.rid, None)
         req._sealed = 0
         if req._resume is None:
             req._resume = {"pos": 0, "last_token": 0, "t": time.time()}
@@ -492,6 +641,8 @@ class Engine:
         self.stats["preemptions"] += 1
 
     def _resume_slot(self, i: int, req: Request):
+        # invariant: slot i is on the data shard holding req's blocks
+        # (admission only resumes onto the home shard, DESIGN.md §9)
         st = req._resume
         req._resume = None
         self.slots[i] = req
@@ -499,7 +650,7 @@ class Engine:
         self._set_slot_sampling(i, req)
         self._last_token[i] = st["last_token"]
         self._slot_pos[i] = st["pos"]
-        self._set_bt_row(i, self.pool.table(req.rid))
+        self._set_bt_row(i, self._pool_of(req.rid).table(req.rid))
         self.cache["pos"] = self.cache["pos"].at[i].set(st["pos"])
         self._dev_dirty = True
 
@@ -511,48 +662,68 @@ class Engine:
         if not self._prefix_enabled:
             return
         bs = self.block_size
+        pool = self._pool_of(req.rid)
         seq = self._tokens_written(req)
         while req._sealed < n_tokens // bs:
             j = req._sealed
-            self.pool.seal_block(req.rid, j, seq[j * bs:(j + 1) * bs])
+            pool.seal_block(req.rid, j, seq[j * bs:(j + 1) * bs])
             req._sealed += 1
 
     def _admit_and_prefill_paged(self):
-        """Continuous-batching admission (DESIGN.md §6): admit while a slot
-        *and* the pool's blocks allow — prefix-hit requests only need
-        blocks (and prefill compute) for their unshared suffix; preempted
-        requests resume in place.  Head-of-line order is preserved: the
-        first request the pool cannot serve stops admission (after the
-        deadlock breaker below has had its chance)."""
+        """Continuous-batching admission (DESIGN.md §6/§9): admit while a
+        slot *and* that slot's data-shard pool allow — prefix-hit requests
+        only need blocks (and prefill compute) for their unshared suffix;
+        preempted requests resume in place *on their home shard* (their
+        blocks live in that shard's pool).  New requests pick the shard
+        with the longest cached prefix, then the most free blocks.
+        Head-of-line order is preserved: the first request no eligible
+        shard can serve stops admission (after the deadlock breaker below
+        has had its chance)."""
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free:
             return
         bs = self.block_size
+        free_by_shard: dict = {}
+        for i in free:                       # slot order ⇒ shard-local order
+            free_by_shard.setdefault(self._slot_shard(i), []).append(i)
+
+        def take_slot(shard: int) -> int:
+            slots_d = free_by_shard[shard]
+            i = slots_d.pop(0)
+            if not slots_d:
+                del free_by_shard[shard]
+            return i
+
         admitted = []                       # (slot, req, suffix, start)
-        while free:
+        while free_by_shard:
             req = self.scheduler.peek()
             if req is None:
                 break
             if req._resume is not None and not req._resume.get("reprefill"):
                 # resume with blocks intact; may need one block to continue
+                shard = self._rid_shard[req.rid]
+                if shard not in free_by_shard:
+                    break        # HOL: the home shard has no free slot yet
+                pool = self.pools[shard]
                 pos = req._resume["pos"]
                 needs_block = (pos % bs == 0
-                               and pos // bs >= len(self.pool.table(req.rid)))
-                if needs_block and self.pool.free_blocks < 1:
-                    if self._break_deadlock(req, 1):
+                               and pos // bs >= len(pool.table(req.rid)))
+                if needs_block and pool.free_blocks < 1:
+                    if self._break_deadlock(req, 1, shard):
                         continue
                     break
                 self.scheduler.pop(req)
                 if needs_block:
-                    phys = self.pool.append_block(req.rid)
+                    phys = pool.append_block(req.rid)
                     assert phys is not None
-                self._resume_slot(free.pop(0), req)
+                self._resume_slot(take_slot(shard), req)
                 continue
 
             seq = self._tokens_written(req)      # prompt (+ out on reprefill)
             if len(req.prompt) > self.max_len or \
-                    self.pool.blocks_needed(min(len(seq) + 1, self.max_len)) \
-                    > self.num_blocks:
+                    self.pools[0].blocks_needed(min(len(seq) + 1,
+                                                    self.max_len)) \
+                    > self._nb_local:
                 self.scheduler.pop(req)
                 # a reprefill-resumed request whose grown history no longer
                 # fits was *served* up to the pool's capacity — that is a
@@ -562,18 +733,35 @@ class Engine:
                 self.finished.append(req)
                 continue
             seed = req.sampling.counter_offset if self.kv_quant else 0
-            shared, chain = self.pool.match_prefix(seq, seed)
-            table = self.pool.allocate(req.rid, len(seq), shared, chain)
+            # rank eligible shards: longest cached prefix first, then most
+            # free blocks (ties keep the lowest shard — deterministic)
+            ranked = sorted(
+                ((pool.match_prefix(seq, seed), shard)
+                 for shard, pool in ((s, self.pools[s])
+                                     for s in free_by_shard)),
+                key=lambda t: (-len(t[0][0]),
+                               -self.pools[t[1]].free_blocks, t[1]))
+            table = shard = None
+            for (shared, chain), cand in ranked:
+                table = self.pools[cand].allocate(req.rid, len(seq),
+                                                  shared, chain)
+                if table is not None:
+                    shard = cand
+                    break
             if table is None:
+                (shared, _), cand = ranked[0]
                 if self._break_deadlock(
-                        req, self.pool.blocks_needed(len(seq)) - len(shared)):
+                        req,
+                        self.pools[cand].blocks_needed(len(seq))
+                        - len(shared), cand):
                     continue
                 break
+            self._rid_shard[req.rid] = shard
             self.scheduler.pop(req)
             req._sealed = len(shared)
             req._resume = None
             start = len(shared) * bs
-            i = free.pop(0)
+            i = take_slot(shard)
             admitted.append((i, req, seq[start:], start))
 
         if not admitted:
@@ -594,7 +782,7 @@ class Engine:
             lens[i] = len(suffix)
             starts[i] = start
             self._slot_pos[i] = start + len(suffix)
-            self._set_bt_row(i, self.pool.table(req.rid))
+            self._set_bt_row(i, self._pool_of(req.rid).table(req.rid))
             any_prefix = any_prefix or start > 0
             self.stats["prefix_hit_tokens"] += start
 
@@ -608,7 +796,7 @@ class Engine:
         bt_dev = jnp.asarray(self._bt)
         self._bt_dirty = False
         t0 = time.time()
-        last_logits, self.cache = self._prefill_paged(
+        last_logits, self.cache = self._paged_prefill_call(
             self.params, jnp.asarray(toks), jnp.asarray(lens),
             jnp.asarray(starts), bt_dev, self.cache,
             self._dev["offsets"], self.tick,
@@ -629,27 +817,34 @@ class Engine:
             self._emit(i, req, int(first[i]), now)
         self._dev_dirty = True
 
-    def _break_deadlock(self, head: Request, blocks_short: int) -> bool:
-        """Admission stalled on the queue head with every slot idle: make
-        room by taking blocks back from *queued* preempted requests
-        (youngest preemption first — the least progress to re-prefill),
-        or, if the head itself holds everything, flip it to reprefill mode
-        so its own blocks free up.  Returns True when the caller should
-        retry admission."""
-        if any(s is not None for s in self.slots):
+    def _break_deadlock(self, head: Request, blocks_short: int,
+                        shard: int = 0) -> bool:
+        """Admission stalled on the queue head with every slot of ``shard``
+        idle: make room in that shard's pool by taking blocks back from
+        *queued* preempted requests holding blocks there (youngest
+        preemption first — the least progress to re-prefill), or, if the
+        head itself holds everything, flip it to reprefill mode so its own
+        blocks free up.  Returns True when the caller should retry
+        admission."""
+        per = self.batch // self.dp
+        if any(self.slots[i] is not None
+               for i in range(shard * per, (shard + 1) * per)):
             return False     # active slots will finish/preempt and free blocks
+        pool = self.pools[shard]
         holders = [r for r in self.scheduler.queued()
                    if r is not head and r._resume is not None
-                   and self.pool.table(r.rid)]
+                   and self._rid_shard.get(r.rid) == shard
+                   and pool.table(r.rid)]
         holders.sort(key=lambda r: -r._resume["t"])
         made_room = False
         for victim in holders:
             self._release_for_reprefill(victim)
             made_room = True
-            if self.pool.free_blocks >= blocks_short:
+            if pool.free_blocks >= blocks_short:
                 return True
         if (not made_room and head._resume is not None
-                and self.pool.table(head.rid)):
+                and self._rid_shard.get(head.rid) == shard
+                and pool.table(head.rid)):
             self._release_for_reprefill(head)
             return True
         return made_room
@@ -664,6 +859,7 @@ class Engine:
         bs = self.block_size
         for i, req in [(i, s) for i, s in enumerate(self.slots)
                        if s is not None]:
+            pool = self.pools[self._slot_shard(i)]
             p = int(self._slot_pos[i])
             if p >= self.max_len:
                 self._finish(i, req, "length")
@@ -672,14 +868,14 @@ class Engine:
                 self._ensure_tail_writable(i, req, p // bs)
                 continue
             self._seal_full_blocks(req, p)
-            if p // bs < len(self.pool.table(req.rid)):
+            if p // bs < len(pool.table(req.rid)):
                 self._ensure_tail_writable(i, req, p // bs)
                 continue                     # resumed into an allocated block
-            phys = self.pool.append_block(req.rid)
+            phys = pool.append_block(req.rid)
             if phys is None:
-                if self.pool.holders == 1:
-                    # nothing to evict or preempt — the pool itself is the
-                    # capacity limit for this lone request
+                if pool.holders == 1:
+                    # nothing to evict or preempt — this shard's pool itself
+                    # is the capacity limit for its lone request
                     self._finish(i, req, "length")
                 else:
                     self._preempt_requeue(i, req)
@@ -695,20 +891,26 @@ class Engine:
         block, the write copies it private instead of corrupting every
         other holder.  Pool exhaustion during the copy preempts like any
         other allocation failure."""
+        shard = self._slot_shard(i)
         old = int(self._bt[i, logical])
         try:
-            phys, copied = self.pool.ensure_writable(req.rid, logical)
+            phys, copied = self.pools[shard].ensure_writable(req.rid, logical)
         except MemoryError:
             self._preempt_requeue(i, req)
             return
         if copied:
-            self._copy_pool_block(old, int(phys))
+            self._copy_pool_block(shard, old, int(phys))
             self._bt[i, logical] = phys
             self._bt_dirty = True
 
-    def _copy_pool_block(self, src: int, dst: int):
+    def _copy_pool_block(self, shard: int, src: int, dst: int):
         """Duplicate one physical block's contents across every layer's
-        pool arrays (stacked pattern entries carry a leading repeat axis)."""
+        pool arrays (stacked pattern entries carry a leading repeat axis).
+        ``src``/``dst`` are shard-local ids; the device pool lays the
+        shards' sub-pools back to back (DESIGN.md §9), so the global index
+        offsets by shard·(blocks-per-shard + 1)."""
+        off = shard * (self._nb_local + 1)
+        src, dst = off + src, off + dst
         self.cache["layers"] = [
             jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), e)
             for e in self.cache["layers"]]

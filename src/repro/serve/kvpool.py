@@ -34,6 +34,15 @@ device ``block_tables`` array when they change.  Physical ids run
 0..num_blocks-1; id ``num_blocks`` is the device-side *trash block* that
 absorbs writes through unallocated table entries — the pool never hands it
 out.
+
+The pool also knows nothing about meshes: under sharded serving
+(DESIGN.md §9) the engine instantiates one ``KVPool`` *per data shard*
+(capacity = admission budget of that shard) and keeps every request's
+blocks, prefix hits, copy-on-write copies and deadlock-breaking inside its
+home shard's pool.  Physical ids are then shard-local — the device lays
+the shards' sub-pools (each with its own trash block) back to back, and
+each shard's kernels see only their local slice, so the id space above
+never changes shape.  Prefix sharing is consequently per data shard.
 """
 
 from __future__ import annotations

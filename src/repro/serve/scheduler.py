@@ -8,6 +8,12 @@ supply the blocks, and either pops or stops — and preempted requests
 re-enter through :meth:`requeue` with their original arrival order, so a
 victim resumes ahead of traffic that arrived after it.
 
+Sharded serving (DESIGN.md §9) keeps this queue *global*: one head-of-line
+order across every data shard.  The engine, not the scheduler, picks which
+shard serves the head (longest cached prefix, then most free blocks), and
+a preempted request can only resume on the shard holding its blocks — the
+head then waits for a slot there rather than losing its place in line.
+
 * ``fcfs``     — strict submission order.
 * ``priority`` — highest ``Request.priority`` first; submission order
   breaks ties (stable), so equal-priority traffic degrades to FCFS.

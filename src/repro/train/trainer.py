@@ -24,7 +24,7 @@ __all__ = ["init_train_state", "make_train_step", "loss_fn"]
 def loss_fn(params, cfg: ModelConfig, batch, policy, counter, remat=True):
     """Next-token cross entropy over the token region (frontend tokens
     skipped).  Logits stay vocab-padded (and vocab-SHARDED on TP meshes —
-    §Perf it.8): the pad columns are masked to -∞, the softmax reductions
+    DESIGN.md §5): the pad columns are masked to -∞, the softmax reductions
     over the sharded vocab axis are tiny (B,S) collectives, and the label
     gather never materialises a replicated (B,S,V) tensor."""
     logits = registry.apply_model(params, cfg, batch, policy=policy,
@@ -83,7 +83,7 @@ def make_train_step(
                 # batch-major reshape + swap: the DP sharding stays on the
                 # batch dim (reshaping (mb, b/mb) directly would land the
                 # sharded axis on the SCAN dim → every device recomputes the
-                # full µbatch; EXPERIMENTS.md §Perf it.7).
+                # full µbatch).
                 b = x.shape[0]
                 return x.reshape(b // microbatch, microbatch,
                                  *x.shape[1:]).swapaxes(0, 1)

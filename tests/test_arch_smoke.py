@@ -120,7 +120,7 @@ def test_windowed_ring_decode_matches_forward():
 
 
 def test_kv_quant_decode_close_to_full_precision():
-    """Dither-quantised int8 KV cache (beyond-paper, §Perf it.10): decode
+    """Dither-quantised int8 KV cache (beyond-paper, DESIGN.md §6): decode
     logits stay close to the bf16-cache decode."""
     cfg = get_config("smollm_135m").reduced()
     params = registry.init_model(jax.random.PRNGKey(0), cfg)

@@ -1,0 +1,89 @@
+"""Docs-consistency gate (ISSUE 5 satellite): documentation references must
+point at things that exist.
+
+Three failure classes this pins, all of which have actually happened here:
+
+1. **stale section cites** — a docstring says "DESIGN.md §N" but DESIGN.md
+   has no §N header (PRs renumber sections; module docstrings fossilise);
+2. **dangling doc files** — code cites an ALL-CAPS markdown file (e.g. the
+   pre-PR-5 ``EXPERIMENTS.md §Perf it.N`` cites) that is not in the repo;
+3. **dead relative links** — README/DESIGN/docs markdown links to paths
+   that moved or never landed.
+
+Pure text checks — no jax import — so this file is cheap enough for every
+tier-1 run, and CI runs it as an explicit docs-consistency step.
+"""
+
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# documentation trees whose markdown links must resolve
+DOC_FILES = [ROOT / "README.md", ROOT / "DESIGN.md",
+             ROOT / "benchmarks" / "README.md",
+             *sorted((ROOT / "docs").glob("*.md"))]
+
+# code trees audited for doc references
+CODE_DIRS = ["src", "tests", "benchmarks", "examples"]
+
+
+def _code_files():
+    for d in CODE_DIRS:
+        for p in sorted((ROOT / d).rglob("*.py")):
+            if p.name != "test_docs.py":    # this file cites rot as examples
+                yield p
+
+
+def _design_sections():
+    text = (ROOT / "DESIGN.md").read_text()
+    return {m.group(1) for m in re.finditer(r"^##\s+§(\d+)\b", text,
+                                            re.MULTILINE)}
+
+
+def test_design_section_references_exist():
+    """Every `DESIGN.md §N` mention in code or docs names a real section."""
+    sections = _design_sections()
+    assert sections, "DESIGN.md has no '## §N' headers?"
+    bad = []
+    for path in [*_code_files(), *DOC_FILES]:
+        for m in re.finditer(r"DESIGN\.md\s+§(\d+)", path.read_text()):
+            if m.group(1) not in sections:
+                bad.append(f"{path.relative_to(ROOT)}: DESIGN.md §{m.group(1)}")
+    assert not bad, ("stale DESIGN.md section references "
+                     f"(have §{sorted(sections)}):\n" + "\n".join(bad))
+
+
+def test_referenced_doc_files_exist():
+    """ALL-CAPS markdown files cited from code must exist in the repo —
+    the check that catches EXPERIMENTS.md-style rot."""
+    bad = []
+    for path in _code_files():
+        for m in re.finditer(r"\b([A-Z][A-Z_]+\.md)\b", path.read_text()):
+            name = m.group(1)
+            if not ((ROOT / name).exists()
+                    or (path.parent / name).exists()):
+                bad.append(f"{path.relative_to(ROOT)}: {name}")
+    assert not bad, "dangling doc-file references:\n" + "\n".join(bad)
+
+
+def test_relative_markdown_links_resolve():
+    """Relative links in the documentation tree point at real files."""
+    bad = []
+    for doc in DOC_FILES:
+        assert doc.exists(), f"missing doc file {doc}"
+        for m in re.finditer(r"\]\(([^)\s]+)\)", doc.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            target = target.split("#")[0]
+            if target and not (doc.parent / target).exists():
+                bad.append(f"{doc.relative_to(ROOT)}: ({m.group(1)})")
+    assert not bad, "dead relative markdown links:\n" + "\n".join(bad)
+
+
+def test_design_sections_are_contiguous():
+    """§ numbering has no gaps — a gap means a renumbering sweep missed
+    DESIGN.md itself."""
+    sections = sorted(int(s) for s in _design_sections())
+    assert sections == list(range(1, len(sections) + 1)), sections

@@ -76,3 +76,98 @@ def test_attention_sharding_respects_head_counts():
     assert blk["wq"] == P(None, None, "model")
     assert blk["wk"] == P(None, None, None)   # 8 kv heads can't split 16 ways
     assert blk["wo"] == P(None, "model", None)
+
+
+# ---------------------------------------------------------------------------
+# sharded serving (DESIGN.md §9): paged cache specs + the serve param subset
+# ---------------------------------------------------------------------------
+
+SERVE_MESHES = {
+    (1, 1): _abstract_mesh((1, 1), ("data", "model")),
+    (2, 1): _abstract_mesh((2, 1), ("data", "model")),
+    (1, 2): _abstract_mesh((1, 2), ("data", "model")),
+}
+
+
+def _paged_cache_shapes(cfg, batch=4, max_len=64, bs=8, dp=1, kv_quant=True):
+    params = jax.eval_shape(lambda k: registry.init_model(k, cfg),
+                            jax.random.PRNGKey(0))
+    return jax.eval_shape(
+        lambda p: registry.make_cache(p, cfg, batch, max_len,
+                                      kv_quant=kv_quant, kv_layout="paged",
+                                      block_size=bs, data_shards=dp),
+        params)
+
+
+@pytest.mark.parametrize("mesh_shape", sorted(SERVE_MESHES), ids=str)
+def test_cache_specs_paged_divide(mesh_shape):
+    """Paged cache specs (pools, block tables, pos) stay legal on every
+    serve mesh — block axis on 'data', KV heads on 'model'."""
+    cfg = get_config("smollm_135m").reduced()     # 2 KV heads
+    dp, tp = mesh_shape
+    mesh = SERVE_MESHES[mesh_shape]
+    cache = _paged_cache_shapes(cfg, dp=dp)
+    specs = shd.cache_specs(cache, cfg, mesh)
+    _check(cache, specs, mesh)
+    ent = specs["layers"][0]          # stacked entry: leading repeat axis
+    assert specs["pos"] == (P("data") if dp > 1 else P(None))
+    assert specs["block_tables"] == P("data" if dp > 1 else None, None)
+    # repeat axis never shards; the pool-block axis carries 'data'
+    assert ent["k"][0] is None
+    assert ent["k"][1] == ("data" if dp > 1 else None)
+    assert ent["k"][3] == ("model" if tp > 1 else None)
+    assert ent["k_scale"][3] == ("model" if tp > 1 else None)
+
+
+def test_cache_specs_paged_gqa_fallback():
+    """n_kv_heads % tp != 0 → the head dim stays replicated (the same
+    guard the engine's replicated-TP fallback mirrors)."""
+    cfg = get_config("smollm_135m").reduced()
+    from dataclasses import replace
+    cfg = replace(cfg, n_kv_heads=1)              # MQA: 1 % 2 != 0
+    mesh = SERVE_MESHES[(1, 2)]
+    cache = _paged_cache_shapes(cfg)
+    specs = shd.cache_specs(cache, cfg, mesh)
+    _check(cache, specs, mesh)
+    ent = specs["layers"][0]
+    assert ent["k"][3] is None
+    assert ent["v"][3] is None
+    assert ent["k_scale"][3] is None
+    assert not shd.serve_heads_shardable(cfg, 2)
+
+
+def test_cache_specs_ring_stack_axis_not_data_sharded():
+    """Stacked ring entries carry the scan repeat axis first: the batch
+    rule must target axis 1, never the repeat axis (regression — the
+    pre-§9 rule sharded axis 0 of stacked entries on 'data')."""
+    cfg = get_config("smollm_135m").reduced()
+    params = jax.eval_shape(lambda k: registry.init_model(k, cfg),
+                            jax.random.PRNGKey(0))
+    cache = jax.eval_shape(
+        lambda p: registry.make_cache(p, cfg, 4, 64, kv_quant=True), params)
+    specs = shd.cache_specs(cache, cfg, SERVE_MESHES[(2, 1)])
+    ent = specs["layers"][0]
+    assert ent["k"][0] is None and ent["k"][1] == "data"
+    assert ent["k_pos"][0] is None and ent["k_pos"][1] == "data"
+
+
+def test_serve_param_specs_reduction_preserving():
+    """Serve params shard only the QKV projections (column-parallel,
+    head-guarded); W_O / MLP / embeddings stay replicated so no f32
+    contraction is ever split (the bitwise stream-parity contract)."""
+    cfg = get_config("smollm_135m").reduced()     # 4 heads / 2 KV heads
+    params = jax.eval_shape(lambda k: registry.init_model(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = shd.serve_param_specs(params, cfg, SERVE_MESHES[(1, 2)])
+    blk = specs["blocks"][0]["attn"]
+    assert blk["wq"] == P(None, None, "model")
+    assert blk["wk"] == P(None, None, "model")
+    assert blk["wo"] == P(None, None, None)       # replicated, all-gathered in
+    mlp = specs["blocks"][0]["mlp"]
+    assert all(e is None for leaf in mlp.values() for e in leaf)
+    assert all(e is None for e in specs["embed"])
+    # GQA fallback: nothing shards
+    from dataclasses import replace
+    mqa = replace(cfg, n_kv_heads=1)
+    specs = shd.serve_param_specs(params, mqa, SERVE_MESHES[(1, 2)])
+    assert specs["blocks"][0]["attn"]["wq"] == P(None, None, None)
