@@ -28,3 +28,27 @@ def sample_xy(n_pairs: int, seed: int = 0):
     x = jax.random.uniform(kx, (n_pairs,))
     y = jax.random.uniform(ky, (n_pairs,))
     return x, y
+
+
+def machine_calibration(repeats: int = 5) -> dict:
+    """The artifact *calibration row* (DESIGN.md §10): best-of-N wall time
+    of one fixed jitted f32 256×256 matmul on this machine.
+
+    Every perf artifact embeds this measurement at generation time;
+    ``benchmarks/perf_gate.py`` divides the reference and candidate rows to
+    get a machine-speed ratio and normalises wall-clock metrics (tok/s, µs,
+    latency percentiles) by it — so a slower CI runner doesn't read as a
+    perf regression, and a faster one doesn't mask a real one.  The probe
+    is deliberately dumb: fixed shape, fixed dtype, no Pallas, no dispatch
+    — it tracks raw machine speed, not any code path this repo owns."""
+    a = jnp.asarray(np.linspace(-1.0, 1.0, 256 * 256, dtype=np.float32)
+                    .reshape(256, 256))
+    f = jax.jit(lambda x: x @ x)
+    f(a).block_until_ready()                     # compile outside the timing
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        f(a).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return {"probe": "matmul_f32_256", "repeats": repeats,
+            "best_us": best * 1e6}

@@ -41,12 +41,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import machine_calibration
 from repro.kernels import autotune, dispatch, ref
 
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "artifacts", "kernel_bench.json")
 
-ARTIFACT_VERSION = 2
+ARTIFACT_VERSION = 3
 
 
 def _cpu_backends():
@@ -294,6 +295,7 @@ def sweep(full: bool = False, backends=None, do_autotune: bool = False,
         "jax_version": jax.__version__,
         "platform": jax.default_backend(),
         "unix_time": time.time(),
+        "calibration": machine_calibration(),
         "results": results,
         "autotune_winners": winners,
     }

@@ -1,0 +1,329 @@
+"""CI perf-regression gate: diff fresh bench artifacts against committed ones.
+
+Loads the committed reference artifacts under ``benchmarks/artifacts/``
+(kernel_bench schema v3, serve_bench schema v5) and a candidate directory of
+freshly generated artifacts from the same commands, matches result rows on
+their identity keys (kernel × backend × shape × block; workload × policy ×
+kv_quant × layout × mesh × shape), and checks every shared metric against a
+per-metric tolerance band:
+
+  * **higher/lower** — wall-clock rates and times, normalised by the machine
+    calibration row first (see ``benchmarks.common.machine_calibration``):
+    the candidate rate is scaled by ``cand_calib_us / ref_calib_us`` so a
+    slower CI runner doesn't read as a regression.  ``decode_tok_s`` /
+    ``prefill_tok_s`` carry a 25 % band — a 30 % throughput regression
+    fails the gate.
+  * **exact** — analytic byte counts, completion/preemption counts,
+    histogram counts, prefix-hit rates: bit-deterministic host-side
+    quantities; any drift is a behaviour change, not noise.
+  * **bool** — correctness flags (``codes_exact_vs_ref``) must not flip.
+  * **advisory** — latency percentiles and single-call µs timings: reported
+    in the gate output but never fail it (CPU smoke runs are too noisy for
+    hard latency bands; the *rates* are best-of-waves and stable).
+
+A schema-version mismatch, a reference row with no candidate match, or a
+missing candidate file is a hard failure — silent coverage loss is itself a
+regression.  Exits non-zero on any failure (DESIGN.md §10):
+
+  PYTHONPATH=src python benchmarks/perf_gate.py \
+      --reference benchmarks/artifacts --candidate /tmp/fresh_artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+EXPECTED_VERSIONS = {"kernel": 3, "serve": 5}
+
+# Identity keys: the fields that *name* a row.  Everything else is a metric.
+KERNEL_KEYS = ("kernel", "backend", "shape", "block", "cap", "bits", "scheme")
+SERVE_KEYS = ("workload", "arch", "policy", "kernel_backend", "kv_layout",
+              "kv_quant", "mesh", "batch", "max_len", "prompt_len",
+              "prefix_len", "tail_len", "max_new", "requests", "waves",
+              "block_size")
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """One gated metric: a dotted path into a result row plus its band.
+
+    ``mode`` — 'higher' (regression = candidate below ref), 'lower'
+    (regression = candidate above ref), 'exact' (must match to abs_floor),
+    'bool' (must equal ref).  ``normalize`` scales the candidate by the
+    machine-speed ratio before comparing.  ``advisory`` reports but never
+    fails.  The tolerance is ``max(rel_tol * |ref|, abs_floor)``."""
+    path: str
+    mode: str
+    rel_tol: float = 0.0
+    abs_floor: float = 0.0
+    normalize: bool = False
+    advisory: bool = False
+
+
+@dataclasses.dataclass
+class Finding:
+    severity: str          # "fail" | "advisory" | "info"
+    file: str
+    row: str
+    metric: str
+    message: str
+
+    def __str__(self):
+        return (f"[{self.severity.upper():8s}] {self.file} :: {self.row} :: "
+                f"{self.metric}: {self.message}")
+
+
+KERNEL_METRICS = (
+    # interpret-mode µs are relative numbers (DESIGN.md §3) — advisory; the
+    # decode-attention tok/s trend is gated, with a wide band for interpret
+    # overhead variance on shared CI hosts.
+    Metric("tok_s", "higher", rel_tol=0.60, normalize=True),
+    Metric("us", "lower", rel_tol=0.60, normalize=True, advisory=True),
+    Metric("us_einsum_baseline", "lower", rel_tol=0.60, normalize=True,
+           advisory=True),
+    # analytic HBM models and oracle checks: deterministic, no band.
+    Metric("bytes_per_token", "exact"),
+    Metric("bytes_per_token_einsum", "exact"),
+    Metric("max_abs_err_vs_ref", "lower", rel_tol=1.0, abs_floor=1e-3),
+    Metric("codes_exact_vs_ref", "bool"),
+)
+
+SERVE_METRICS = (
+    # headline rates: best-of-waves, machine-normalised, 25 % band — the
+    # gate's contract is that a 30 % tok/s regression fails.
+    Metric("decode_tok_s", "higher", rel_tol=0.25, normalize=True),
+    Metric("prefill_tok_s", "higher", rel_tol=0.25, normalize=True),
+    Metric("prefill_to_decode_ratio", "higher", rel_tol=0.5, advisory=True),
+    Metric("per_shard_decode_tok_s", "higher", rel_tol=0.25, normalize=True,
+           advisory=True),
+    # deterministic host-side behaviour: exact.
+    Metric("completed", "exact"),
+    Metric("preemptions", "exact"),
+    Metric("prefix_hit_rate", "exact", abs_floor=1e-9),
+    Metric("prefix_hit_tokens", "exact"),
+    Metric("attn_bytes_per_token", "exact"),
+    Metric("collective_bytes_per_token", "exact"),
+    Metric("kv_hbm_bytes_peak_live", "exact"),
+    Metric("kv_hbm_bytes_dense_ring", "exact"),
+    Metric("ttft_hist_ms.count", "exact"),
+    Metric("itl_hist_ms.count", "exact"),
+    Metric("attn_full_cap_fp32_upcast", "bool"),
+    Metric("heads_sharded", "bool"),
+    # latency percentiles: CPU-noise-dominated at smoke shapes — advisory.
+    Metric("ttft_ms.p50", "lower", rel_tol=1.0, normalize=True,
+           advisory=True),
+    Metric("ttft_ms.p95", "lower", rel_tol=1.0, normalize=True,
+           advisory=True),
+    Metric("itl_ms.p50", "lower", rel_tol=1.0, normalize=True,
+           advisory=True),
+    Metric("itl_ms.p95", "lower", rel_tol=1.0, normalize=True,
+           advisory=True),
+    Metric("ttft_hist_ms.p95", "lower", rel_tol=1.0, normalize=True,
+           advisory=True),
+    Metric("itl_hist_ms.p95", "lower", rel_tol=1.0, normalize=True,
+           advisory=True),
+    Metric("ttft_ms_hit.p50", "lower", rel_tol=1.0, normalize=True,
+           advisory=True),
+    Metric("ttft_ms_cold.p50", "lower", rel_tol=1.0, normalize=True,
+           advisory=True),
+    Metric("queue_depth_mean", "lower", rel_tol=1.0, advisory=True),
+    Metric("batch_occupancy_mean", "higher", rel_tol=0.5, advisory=True),
+    Metric("kv_hbm_live_to_dense", "lower", rel_tol=0.25, advisory=True),
+)
+
+_MISSING = object()
+
+
+def artifact_kind(filename: str) -> str:
+    base = os.path.basename(filename)
+    if base.startswith("kernel_bench"):
+        return "kernel"
+    if base.startswith("serve_bench"):
+        return "serve"
+    raise ValueError(f"unknown artifact kind for {filename!r}")
+
+
+def load_artifact(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def row_key(kind: str, row: dict) -> str:
+    keys = KERNEL_KEYS if kind == "kernel" else SERVE_KEYS
+    ident = {k: row.get(k, "grid" if k == "workload" else None) for k in keys}
+    return json.dumps(ident, sort_keys=True)
+
+
+def lookup(row: dict, path: str):
+    cur = row
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return _MISSING
+        cur = cur[part]
+    return cur
+
+
+def speed_ratio(ref_art: dict, cand_art: dict) -> float:
+    """cand/ref machine-speed ratio from the calibration rows (> 1 = the
+    candidate machine is slower, so its rates get scaled up and its wall
+    times scaled down before band checks)."""
+    ref_us = float(ref_art["calibration"]["best_us"])
+    cand_us = float(cand_art["calibration"]["best_us"])
+    return cand_us / ref_us
+
+
+def check_metric(m: Metric, ref_row: dict, cand_row: dict,
+                 ratio: float, file: str, key: str):
+    ref_v = lookup(ref_row, m.path)
+    cand_v = lookup(cand_row, m.path)
+    if ref_v is _MISSING and cand_v is _MISSING:
+        return None                     # metric not applicable to this row
+    sev = "advisory" if m.advisory else "fail"
+    if ref_v is _MISSING or cand_v is _MISSING:
+        side = "reference" if ref_v is _MISSING else "candidate"
+        return Finding("fail", file, key, m.path,
+                       f"missing from {side} row (schema drift)")
+    if m.mode == "bool":
+        if bool(cand_v) != bool(ref_v):
+            return Finding(sev, file, key, m.path,
+                           f"flipped {ref_v} -> {cand_v}")
+        return None
+    ref_v, cand_v = float(ref_v), float(cand_v)
+    if m.mode == "exact":
+        tol = max(m.abs_floor, m.rel_tol * abs(ref_v))
+        if abs(cand_v - ref_v) > tol:
+            return Finding(sev, file, key, m.path,
+                           f"{cand_v:g} != {ref_v:g} (exact metric)")
+        return None
+    norm = cand_v
+    if m.normalize and ratio != 1.0:
+        norm = cand_v * ratio if m.mode == "higher" else cand_v / ratio
+    tol = max(m.abs_floor, m.rel_tol * abs(ref_v))
+    if m.mode == "higher" and norm < ref_v - tol:
+        return Finding(sev, file, key, m.path,
+                       f"{norm:g} (raw {cand_v:g}) < {ref_v:g} "
+                       f"- {100 * m.rel_tol:.0f}% band")
+    if m.mode == "lower" and norm > ref_v + tol:
+        return Finding(sev, file, key, m.path,
+                       f"{norm:g} (raw {cand_v:g}) > {ref_v:g} "
+                       f"+ {100 * m.rel_tol:.0f}% band")
+    return None
+
+
+def compare_artifacts(filename: str, ref_art: dict,
+                      cand_art: dict) -> list:
+    """All findings from diffing one candidate artifact against its
+    reference.  Schema mismatch short-circuits — rows aren't comparable
+    across schema versions."""
+    kind = artifact_kind(filename)
+    want = EXPECTED_VERSIONS[kind]
+    findings = []
+    for side, art in (("reference", ref_art), ("candidate", cand_art)):
+        if art.get("version") != want:
+            findings.append(Finding(
+                "fail", filename, "-", "version",
+                f"{side} schema v{art.get('version')} != expected v{want}"))
+    if findings:
+        return findings
+    for side, art in (("reference", ref_art), ("candidate", cand_art)):
+        if "calibration" not in art:
+            findings.append(Finding("fail", filename, "-", "calibration",
+                                    f"{side} artifact has no calibration row"))
+    if findings:
+        return findings
+    ratio = speed_ratio(ref_art, cand_art)
+    if not 0.01 < ratio < 100.0:
+        findings.append(Finding(
+            "fail", filename, "-", "calibration",
+            f"implausible machine-speed ratio {ratio:g}"))
+        return findings
+    findings.append(Finding(
+        "info", filename, "-", "calibration",
+        f"machine-speed ratio cand/ref = {ratio:.2f}"))
+
+    metrics = KERNEL_METRICS if kind == "kernel" else SERVE_METRICS
+    cand_rows = {row_key(kind, r): r for r in cand_art["results"]}
+    matched = set()
+    for ref_row in ref_art["results"]:
+        key = row_key(kind, ref_row)
+        cand_row = cand_rows.get(key)
+        if cand_row is None:
+            findings.append(Finding(
+                "fail", filename, key, "-",
+                "reference row has no candidate match (coverage lost)"))
+            continue
+        matched.add(key)
+        for m in metrics:
+            f = check_metric(m, ref_row, cand_row, ratio, filename, key)
+            if f is not None:
+                findings.append(f)
+    for key in cand_rows:
+        if key not in matched:
+            findings.append(Finding(
+                "info", filename, key, "-",
+                "new candidate row (not in reference — commit a refreshed "
+                "artifact to start gating it)"))
+    return findings
+
+
+def gate_directories(ref_dir: str, cand_dir: str, files=None) -> list:
+    """Diff every gated artifact in ``ref_dir`` against ``cand_dir``."""
+    if files is None:
+        files = sorted(f for f in os.listdir(ref_dir)
+                       if f.endswith(".json"))
+        files = [f for f in files
+                 if f.startswith(("kernel_bench", "serve_bench"))]
+    findings = []
+    if not files:
+        findings.append(Finding("fail", ref_dir, "-", "-",
+                                "no reference artifacts to gate against"))
+    for name in files:
+        ref_path = os.path.join(ref_dir, name)
+        cand_path = os.path.join(cand_dir, name)
+        if not os.path.exists(ref_path):
+            findings.append(Finding("fail", name, "-", "-",
+                                    f"reference artifact missing: {ref_path}"))
+            continue
+        if not os.path.exists(cand_path):
+            findings.append(Finding("fail", name, "-", "-",
+                                    f"candidate artifact missing: {cand_path}"))
+            continue
+        findings += compare_artifacts(name, load_artifact(ref_path),
+                                      load_artifact(cand_path))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reference",
+                    default=os.path.join(os.path.dirname(
+                        os.path.abspath(__file__)), "artifacts"),
+                    help="committed reference artifact directory")
+    ap.add_argument("--candidate", required=True,
+                    help="directory of freshly generated artifacts")
+    ap.add_argument("--files", nargs="*", default=None,
+                    help="artifact filenames to gate (default: every "
+                         "kernel_bench*/serve_bench* JSON in --reference)")
+    args = ap.parse_args(argv)
+
+    findings = gate_directories(args.reference, args.candidate,
+                                files=args.files)
+    fails = [f for f in findings if f.severity == "fail"]
+    advisories = [f for f in findings if f.severity == "advisory"]
+    for f in findings:
+        print(f)
+    print(f"perf gate: {len(fails)} failure(s), {len(advisories)} "
+          f"advisory, {len(findings) - len(fails) - len(advisories)} info")
+    if fails:
+        print("PERF GATE: FAIL")
+        return 1
+    print("PERF GATE: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

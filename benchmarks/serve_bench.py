@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import machine_calibration
 from repro.configs import get_config
 from repro.kernels import autotune, dispatch
 from repro.models import registry
@@ -56,7 +57,7 @@ from repro.serve import Engine, Request, SamplingParams
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "artifacts", "serve_bench.json")
 
-ARTIFACT_VERSION = 4
+ARTIFACT_VERSION = 5
 
 POLICIES = ("none", "dither", "stochastic", "deterministic")
 
@@ -84,6 +85,29 @@ def _mesh_profile(cfg, engine=None) -> dict:
 
 def _pct(xs, q):
     return float(np.percentile(np.asarray(xs, float), q)) if xs else 0.0
+
+
+def _metrics_fields(engine) -> dict:
+    """Schema-v5 engine-metrics fields, read from the engine's metrics
+    surface (DESIGN.md §10) after the *last measured wave* (``reset_stats``
+    re-zeros the histograms per wave, so these describe one steady wave,
+    not warm-up).  ``*_hist_ms`` percentiles come from the log-bucket
+    histograms — ≈20% bucket resolution, and their ``count`` fields are
+    exact (the perf gate checks them against the request count)."""
+    ms = engine.metrics.summary()
+    g = ms["gauges"]
+
+    def hist_ms(h):
+        return {"count": h["count"], "p50": 1e3 * h["p50"],
+                "p95": 1e3 * h["p95"], "p99": 1e3 * h["p99"],
+                "max": 1e3 * h["max"]}
+
+    return {
+        "queue_depth_mean": g.get("queue_depth", {}).get("mean", 0.0),
+        "batch_occupancy_mean": g.get("batch_occupancy", {}).get("mean", 0.0),
+        "ttft_hist_ms": hist_ms(ms["ttft_s"]),
+        "itl_hist_ms": hist_ms(ms["itl_s"]),
+    }
 
 
 def _n_attn(cfg) -> int:
@@ -187,6 +211,7 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
 
     pf = dc = 0.0
     done = []
+    preempt_total = hit_total = prefill_total = 0
     for wave in range(waves):
         engine.reset_stats()
         for r in range(requests):
@@ -200,6 +225,9 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
         done += list(engine.run(ticks=requests * (max_new + 4) + 20))
         engine.finished = []
         st = engine.stats
+        preempt_total += st["preemptions"]
+        hit_total += st["prefix_hit_tokens"]
+        prefill_total += st["prefill_tokens"]
         if st["prefill_s"]:
             pf = max(pf, st["prefill_tokens"] / st["prefill_s"])
         if st["decode_s"]:
@@ -231,6 +259,14 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
                     "p50": 1e3 * _pct(ttfts, 50), "p95": 1e3 * _pct(ttfts, 95)},
         "itl_ms": {"p50": 1e3 * _pct(itls, 50), "p95": 1e3 * _pct(itls, 95),
                    "max": 1e3 * max(itls) if itls else 0.0},
+        # schema v5: engine-metrics fields (DESIGN.md §10).  The grid
+        # measures cold rates (prefix cache off), so prefix_hit_rate is the
+        # hit share of *submitted* prompt tokens — 0.0 here by construction,
+        # gated exactly so an accidentally-warm grid row can't land.
+        "preemptions": int(preempt_total),
+        "prefix_hit_rate": (hit_total / (hit_total + prefill_total)
+                            if hit_total + prefill_total else 0.0),
+        **_metrics_fields(engine),
     }
 
 
@@ -298,6 +334,9 @@ def bench_prefix_reuse(cfg, params, *, batch: int, max_len: int,
         "kv_hbm_bytes_peak_live": int(live_bytes),
         "kv_hbm_bytes_dense_ring": int(dense_bytes),
         "kv_hbm_live_to_dense": live_bytes / dense_bytes if dense_bytes else 0.0,
+        # schema v5 (measured wave of the caching-on engine)
+        "preemptions": int(eng_hit.stats["preemptions"]),
+        **_metrics_fields(eng_hit),
     }
 
 
@@ -383,6 +422,7 @@ def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
         "mesh": list(mesh_shape) if mesh_shape is not None else None,
         "device_count": jax.device_count(),
         "attn_backend": dispatch.resolve_backend(None).name,
+        "calibration": machine_calibration(),
         "results": results,
     }
     return rows, artifact

@@ -65,6 +65,11 @@ def serve_main(argv=None):
     ap.add_argument("--sched", default="fcfs", choices=["fcfs", "priority"],
                     help="admission policy ('priority' favours high "
                          "Request.priority; the demo gives odd rids +1)")
+    ap.add_argument("--metrics", default=None, metavar="SINK",
+                    help="stream per-tick engine metrics (DESIGN.md §10): "
+                         "'stdout', or 'jsonl:<path>' / a *.jsonl path.  "
+                         "Unset = collect but don't stream; the summary "
+                         "prints either way")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -88,7 +93,8 @@ def serve_main(argv=None):
                     frames=frames, kv_quant=args.kv_quant and not cfg.is_encdec,
                     scheduler=args.sched, kv_layout=args.kv_layout,
                     block_size=args.block_size, num_blocks=args.num_blocks,
-                    prefix_cache=not args.no_prefix_cache, mesh=mesh)
+                    prefix_cache=not args.no_prefix_cache, mesh=mesh,
+                    metrics=args.metrics)
     for r in range(args.requests):
         prompt = [(7 * r + i) % (cfg.vocab_size - 1) + 1
                   for i in range(args.prompt_len)]
@@ -122,6 +128,14 @@ def serve_main(argv=None):
         print(f"mesh: data={engine.dp} model={engine.tp} "
               f"heads_sharded={engine.heads_sharded} "
               f"slots/shard={args.batch // engine.dp}")
+    ms = engine.metrics.summary()
+    print(f"metrics: ticks={ms['ticks']} "
+          f"queue_depth_mean={ms['gauges'].get('queue_depth', {}).get('mean', 0):.2f} "
+          f"occupancy_mean={ms['gauges'].get('batch_occupancy', {}).get('mean', 0):.2f} "
+          f"ttft_p95={1e3 * ms['ttft_s']['p95']:.1f}ms "
+          f"itl_p95={1e3 * ms['itl_s']['p95']:.1f}ms "
+          f"sink_errors={ms['sink_errors']}")
+    engine.metrics.close()
 
 
 if __name__ == "__main__":

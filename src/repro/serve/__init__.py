@@ -4,9 +4,12 @@ paged-block-pool KV cache (DESIGN.md §6)."""
 from repro.serve.engine import (Engine, Request, make_decode_and_sample,
                                 make_paged_prefill, make_serve_fns)
 from repro.serve.kvpool import KVPool
+from repro.serve.metrics import (Histogram, JsonlSink, Metrics, NullSink,
+                                 StdoutSink, make_sink)
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
 
 __all__ = ["Engine", "Request", "make_serve_fns", "make_decode_and_sample",
            "make_paged_prefill", "KVPool", "SamplingParams", "sample_tokens",
-           "Scheduler"]
+           "Scheduler", "Metrics", "Histogram", "NullSink", "StdoutSink",
+           "JsonlSink", "make_sink"]

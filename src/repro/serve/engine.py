@@ -44,11 +44,13 @@ from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.numerics.policy import QuantPolicy
 from repro.serve.kvpool import KVPool
+from repro.serve.metrics import Metrics
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
 
 __all__ = ["make_serve_fns", "make_decode_and_sample", "make_paged_prefill",
-           "Engine", "Request", "SamplingParams", "Scheduler", "KVPool"]
+           "Engine", "Request", "SamplingParams", "Scheduler", "KVPool",
+           "Metrics"]
 
 
 def make_serve_fns(cfg: ModelConfig, policy: Optional[QuantPolicy] = None, *,
@@ -239,7 +241,8 @@ class Engine:
                  block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
-                 mesh=None):
+                 mesh=None,
+                 metrics: Union[None, str, Metrics] = None):
         self.params, self.cfg, self.batch, self.max_len = params, cfg, batch, max_len
         policy = policy.resolved() if policy is not None else None
         self.policy = policy
@@ -392,6 +395,12 @@ class Engine:
         self.stats = {"prefill_s": 0.0, "prefill_tokens": 0, "prefill_calls": 0,
                       "decode_s": 0.0, "decode_tokens": 0, "decode_calls": 0,
                       "prefix_hit_tokens": 0, "preemptions": 0}
+        # observability surface (DESIGN.md §10): host-side counters, per-tick
+        # gauges and TTFT/ITL histograms behind a buffered crash-isolated
+        # sink.  Accepts a Metrics instance, a sink spec ('stdout',
+        # 'jsonl:<path>', a sink object) or None (collect, don't stream).
+        self.metrics = (metrics if isinstance(metrics, Metrics)
+                        else Metrics(sink=metrics))
 
     # ------------------------------------------------------------- mesh glue
 
@@ -462,9 +471,11 @@ class Engine:
     # ------------------------------------------------------------------ API
 
     def reset_stats(self):
-        """Zero the throughput counters (benchmarks call this after a
-        warm-up wave so compile time stays out of the measured rates)."""
+        """Zero the throughput counters *and* the metrics surface
+        (benchmarks call this after a warm-up wave so compile time stays
+        out of the measured rates and histograms)."""
         self.stats = {k: type(v)() for k, v in self.stats.items()}
+        self.metrics.reset()
 
     def submit(self, req: Request):
         req.state = "queued"
@@ -478,6 +489,7 @@ class Engine:
         self._admit_and_prefill()
         if any(s is not None for s in self.slots):
             self._decode_tick()
+        self._record_tick_metrics()
         return [s for s in self.slots if s is not None]
 
     def run(self, ticks: int) -> List[Request]:
@@ -487,9 +499,34 @@ class Engine:
             self.step()
             if not len(self.scheduler) and all(s is None for s in self.slots):
                 break
+        self.metrics.flush()          # drain the tail of the gauge buffer
         return self.finished
 
     # ------------------------------------------------------------ internals
+
+    def _record_tick_metrics(self):
+        """One per-tick gauge snapshot (DESIGN.md §10).  Every value is a
+        host-side int/float the engine already tracks — scheduler depth,
+        slot occupancy, the cumulative ``stats`` counters and the pool
+        allocator's host bookkeeping — so this adds **no device dispatch**
+        (and no device→host sync) to the tick."""
+        active = sum(1 for s in self.slots if s is not None)
+        gauges = dict(
+            queue_depth=len(self.scheduler),
+            active_slots=active,
+            batch_occupancy=active / self.batch,
+            finished_total=len(self.finished),
+            prefill_tokens=self.stats["prefill_tokens"],
+            decode_tokens=self.stats["decode_tokens"],
+            prefix_hit_tokens=self.stats["prefix_hit_tokens"],
+            preemptions=self.stats["preemptions"],
+        )
+        if self.pools:
+            ps = self.pool_stats()
+            gauges.update(
+                live_blocks=ps["live"], cached_blocks=ps["cached"],
+                free_blocks=sum(p.free_blocks for p in self.pools))
+        self.metrics.tick(**gauges)
 
     def _refresh_device_state(self):
         """Re-upload the per-slot sampling state and last tokens if any slot
@@ -518,6 +555,8 @@ class Engine:
             if len(req.prompt) > self.max_len:
                 req.done, req.finish_reason, req.state = True, "rejected", "done"
                 self.finished.append(req)
+                self.metrics.inc("finished_requests")
+                self.metrics.inc("finish_rejected")
                 continue
             admitted.append(req)
         if not admitted:
@@ -731,6 +770,8 @@ class Engine:
                 reason = "length" if req.out else "rejected"
                 req.done, req.finish_reason, req.state = True, reason, "done"
                 self.finished.append(req)
+                self.metrics.inc("finished_requests")
+                self.metrics.inc(f"finish_{reason}")
                 continue
             seed = req.sampling.counter_offset if self.kv_quant else 0
             # rank eligible shards: longest cached prefix first, then most
@@ -952,8 +993,11 @@ class Engine:
         req.out.append(tok)
         if req.t_first is None:
             req.t_first = now
+            if req.ttft is not None:
+                self.metrics.observe_ttft(req.ttft)
         else:
             req.itl.append(now - req.t_last)
+            self.metrics.observe_itl(now - req.t_last)
         req.t_last = now
         self._counters[i] += 1
         self._last_token[i] = tok
@@ -978,6 +1022,8 @@ class Engine:
     def _finish(self, i: int, req: Request, reason: str):
         req.done, req.finish_reason, req.state = True, reason, "done"
         self.finished.append(req)
+        self.metrics.inc("finished_requests")
+        self.metrics.inc(f"finish_{reason}")
         self.slots[i] = None
         if self.kv_layout == "paged":
             # seal what the prompt + generation filled (future prefix hits),

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_argmax_margin
 
 from repro.configs import get_config
 from repro.kernels import dispatch, ref
@@ -203,6 +204,10 @@ def test_decode_and_sample_matches_two_call_path():
         token_a, ctr_a, cache_a = fused(PARAMS, token_a, cache_a, offsets,
                                         tick, temps, topks, seeds, ctr_a)
         logits, cache_b = decode(PARAMS, token_b, cache_b, offsets, tick)
+        # slot 0 decodes greedily: its fused ≡ two-call parity assumes the
+        # argmax isn't a float coin-flip between the two logit paths
+        assert_argmax_margin(logits[0], min_margin=1e-3,
+                             context=f"greedy slot 0, tick {tick}")
         token_b = sample(logits, temps, topks, seeds, ctr_b)
         ctr_b = ctr_b + 1
         assert jnp.array_equal(token_a, token_b), tick
@@ -240,11 +245,15 @@ def test_engine_stream_matches_manual_two_call_loop():
 
     last_logits, cache = prefill(PARAMS, toks, lengths, offsets, 0)
     counters = offsets
+    assert_argmax_margin(last_logits[0], min_margin=1e-3,
+                         context="greedy slot 0, prefill logits")
     token = sample(last_logits, temps, topks, seeds, counters)
     counters = counters + 1
     want = [[int(token[i])] for i in range(batch)]
     for tick in range(max_new - 1):
         logits, cache = decode(PARAMS, token, cache, offsets, tick)
+        assert_argmax_margin(logits[0], min_margin=1e-3,
+                             context=f"greedy slot 0, tick {tick}")
         token = sample(logits, temps, topks, seeds, counters)
         counters = counters + 1
         for i in range(batch):

@@ -1,0 +1,194 @@
+"""Engine metrics surface (DESIGN.md §10): histogram counts equal finished
+counts, per-tick gauges agree with ``Engine.stats`` / ``pool_stats`` across
+ring/paged layouts and the (1,1) mesh, sink crashes never reach serving, and
+``reset_stats`` round-trips the metrics surface."""
+
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_serve_mesh
+from repro.models import registry
+from repro.serve import (Engine, Histogram, JsonlSink, Metrics, NullSink,
+                         Request, SamplingParams, StdoutSink, make_sink)
+
+CFG = get_config("smollm_135m").reduced()
+PARAMS = registry.init_model(jax.random.PRNGKey(0), CFG)
+
+
+def _run_engine(n_requests=4, max_new=4, metrics=None, **eng_kw):
+    eng = Engine(PARAMS, CFG, batch=2, max_len=32, metrics=metrics, **eng_kw)
+    for r in range(n_requests):
+        eng.submit(Request(
+            rid=r, prompt=[1 + r, 2, 3],
+            sampling=SamplingParams(max_new=max_new, seed=r,
+                                    counter_offset=100 * r)))
+    done = eng.run(ticks=n_requests * (max_new + 4) + 20)
+    return eng, done
+
+
+# ---------------------------------------------------------------------------
+# Histogram
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_counts_exact_percentiles_approximate():
+    h = Histogram()
+    vals = [0.001 * (i + 1) for i in range(100)]        # 1ms .. 100ms
+    for v in vals:
+        h.record(v)
+    s = h.summary()
+    assert s["count"] == 100                            # counts are exact
+    assert s["max"] == pytest.approx(0.1)
+    assert s["mean"] == pytest.approx(sum(vals) / 100)
+    # log-bucket percentiles: ≈21% bucket ratio → generous relative band
+    assert s["p50"] == pytest.approx(0.0505, rel=0.25)
+    assert s["p99"] == pytest.approx(0.099, rel=0.25)
+
+
+def test_histogram_underflow_overflow_and_empty():
+    h = Histogram(lo=1e-3, hi=1.0, n_buckets=8)
+    assert h.summary()["p50"] == 0.0                    # empty histogram
+    h.record(1e-9)                                      # underflow
+    h.record(100.0)                                     # overflow
+    assert h.count == 2
+    assert h.max == 100.0
+    assert h.percentile(1) <= h.lo                      # lands in underflow
+    # overflow bucket interpolates between hi and the recorded max
+    assert h.hi <= h.percentile(99) <= h.max
+
+
+# ---------------------------------------------------------------------------
+# sinks
+# ---------------------------------------------------------------------------
+
+
+def test_make_sink_specs(tmp_path):
+    assert isinstance(make_sink(None), NullSink)
+    assert isinstance(make_sink("null"), NullSink)
+    assert isinstance(make_sink("stdout"), StdoutSink)
+    assert isinstance(make_sink(f"jsonl:{tmp_path}/m.jsonl"), JsonlSink)
+    assert isinstance(make_sink(str(tmp_path / "m.jsonl")), JsonlSink)
+    sink = NullSink()
+    assert make_sink(sink) is sink                      # objects pass through
+    with pytest.raises(ValueError):
+        make_sink("csv:/tmp/x")
+    with pytest.raises(TypeError):
+        make_sink(42)
+
+
+def test_jsonl_sink_streams_every_tick(tmp_path):
+    path = tmp_path / "ticks.jsonl"
+    eng, done = _run_engine(metrics=f"jsonl:{path}")
+    eng.metrics.close()
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert len(lines) == eng.metrics.ticks              # one record per tick
+    assert [l["tick"] for l in lines] == list(range(len(lines)))
+    assert all("queue_depth" in l and "batch_occupancy" in l for l in lines)
+    assert lines[-1]["finished_total"] == len(done)
+
+
+def test_sink_crash_isolation():
+    """A sink that raises on every write must not disturb serving: the run
+    completes, the error is counted once, and the sink degrades to a
+    NullSink (the wandblog idiom — observability is best-effort)."""
+
+    class BoomSink:
+        def write(self, records):
+            raise IOError("disk full")
+
+        def close(self):
+            pass
+
+    m = Metrics(sink=BoomSink(), flush_every=1)
+    eng, done = _run_engine(metrics=m)
+    assert len(done) == 4
+    assert all(r.finish_reason == "length" for r in done)
+    assert eng.metrics.sink_errors == 1                 # first flush only
+    assert isinstance(eng.metrics.sink, NullSink)
+    # token stream is unchanged vs a clean engine
+    _, done_clean = _run_engine()
+    assert ([r.out for r in sorted(done, key=lambda r: r.rid)]
+            == [r.out for r in sorted(done_clean, key=lambda r: r.rid)])
+
+
+# ---------------------------------------------------------------------------
+# engine consistency: metrics ≡ stats/pool_stats, layouts × (1,1) mesh
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("eng_kw", [
+    {},                                                  # dense ring
+    {"kv_layout": "paged", "block_size": 8},             # paged pool
+    {"mesh": "1x1"},                                     # (1,1) mesh, ring
+    {"kv_layout": "paged", "block_size": 8, "mesh": "1x1"},
+], ids=["ring", "paged", "ring-mesh11", "paged-mesh11"])
+def test_metrics_consistent_with_engine_stats(eng_kw):
+    eng_kw = dict(eng_kw)
+    if eng_kw.get("mesh") == "1x1":
+        eng_kw["mesh"] = make_serve_mesh(1, 1)
+    eng, done = _run_engine(**eng_kw)
+    assert len(done) == 4
+    ms = eng.metrics.summary()
+
+    # histogram counts == finished-request accounting (exact, no bucketing)
+    n_first = sum(1 for r in done if r.ttft is not None)
+    assert ms["ttft_s"]["count"] == n_first == len(done)
+    assert ms["itl_s"]["count"] == sum(len(r.itl) for r in done)
+    assert ms["counters"]["finished_requests"] == len(done)
+    assert ms["counters"]["finish_length"] == len(done)
+
+    # last-tick gauges == the engine's own cumulative stats
+    g = ms["gauges"]
+    assert g["finished_total"]["last"] == len(done)
+    assert g["prefill_tokens"]["last"] == eng.stats["prefill_tokens"]
+    assert g["decode_tokens"]["last"] == eng.stats["decode_tokens"]
+    assert g["prefix_hit_tokens"]["last"] == eng.stats["prefix_hit_tokens"]
+    assert g["preemptions"]["last"] == eng.stats["preemptions"]
+    assert 0.0 <= g["batch_occupancy"]["mean"] <= 1.0
+    assert ms["ticks"] > 0
+
+    if eng.pools:                                        # paged-only gauges
+        ps = eng.pool_stats()
+        assert g["live_blocks"]["last"] == ps["live"]
+        assert g["cached_blocks"]["last"] == ps["cached"]
+        assert (g["free_blocks"]["last"]
+                == sum(p.free_blocks for p in eng.pools))
+    else:
+        assert "live_blocks" not in g
+
+
+def test_rejected_requests_are_counted():
+    eng = Engine(PARAMS, CFG, batch=1, max_len=8)
+    eng.submit(Request(rid=0, prompt=list(range(1, 20)), max_new=4))
+    done = eng.run(10)
+    assert done[0].finish_reason == "rejected"
+    ms = eng.metrics.summary()
+    assert ms["counters"]["finished_requests"] == 1
+    assert ms["counters"]["finish_rejected"] == 1
+    assert ms["ttft_s"]["count"] == 0                   # never emitted
+
+
+def test_reset_stats_roundtrips_metrics():
+    """benchmarks reset between waves: the histograms and counters must
+    describe only the post-reset wave (serve_bench's v5 fields ride on
+    this), while the sink plumbing stays alive."""
+    eng, done = _run_engine()
+    assert eng.metrics.ticks > 0
+    eng.reset_stats()
+    ms = eng.metrics.summary()
+    assert ms["ticks"] == 0 and ms["counters"] == {}
+    assert ms["ttft_s"]["count"] == 0 and ms["itl_s"]["count"] == 0
+    assert ms["gauges"] == {}
+
+    eng.finished = []
+    for r in range(2):
+        eng.submit(Request(rid=100 + r, prompt=[1 + r, 2, 3],
+                           sampling=SamplingParams(max_new=3, seed=r)))
+    done2 = eng.run(60)
+    ms = eng.metrics.summary()
+    assert ms["ttft_s"]["count"] == len(done2) == 2     # second wave only
+    assert ms["counters"]["finished_requests"] == 2
+    assert ms["gauges"]["finished_total"]["last"] == 2

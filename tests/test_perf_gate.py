@@ -1,0 +1,209 @@
+"""Perf gate (benchmarks/perf_gate.py): passes against itself, fails on a
+synthetic 30% tok/s regression and on schema mismatch, normalises by the
+machine calibration row, and never fails on advisory (latency) metrics."""
+
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks.perf_gate import (artifact_kind, compare_artifacts,
+                                  gate_directories, main, row_key)
+
+ARTIFACTS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                             "artifacts")
+
+
+def _serve_artifact(decode_tok_s=1000.0, calib_us=100.0, version=5):
+    return {
+        "version": version,
+        "calibration": {"probe": "matmul_f32_256", "repeats": 5,
+                        "best_us": calib_us},
+        "results": [{
+            "arch": "smollm_135m", "policy": "none", "kernel_backend": None,
+            "kv_layout": "ring", "kv_quant": False, "mesh": None,
+            "batch": 2, "max_len": 32, "prompt_len": 8, "max_new": 4,
+            "requests": 3, "waves": 3, "block_size": None,
+            "decode_tok_s": decode_tok_s, "prefill_tok_s": 4 * decode_tok_s,
+            "completed": 9, "preemptions": 0, "prefix_hit_rate": 0.0,
+            "attn_bytes_per_token": 123456,
+            "collective_bytes_per_token": 0,
+            "ttft_ms": {"p50": 10.0, "p95": 20.0},
+            "itl_ms": {"p50": 5.0, "p95": 9.0},
+            "ttft_hist_ms": {"count": 3, "p50": 10.0, "p95": 20.0,
+                             "p99": 21.0, "max": 22.0},
+            "itl_hist_ms": {"count": 9, "p50": 5.0, "p95": 9.0,
+                            "p99": 9.5, "max": 10.0},
+        }],
+    }
+
+
+def _kernel_artifact(tok_s=5000.0, calib_us=100.0, version=3):
+    return {
+        "version": version,
+        "calibration": {"probe": "matmul_f32_256", "repeats": 5,
+                        "best_us": calib_us},
+        "results": [
+            {"kernel": "decode_attention", "backend": "pallas-interpret",
+             "shape": [2, 256, 2, 2, 64], "cap": 256, "block": [64],
+             "us": 2 * 1e6 / tok_s, "tok_s": tok_s,
+             "bytes_per_token": 99000, "bytes_per_token_einsum": 400000,
+             "max_abs_err_vs_ref": 1e-6},
+            {"kernel": "quantize", "backend": "pallas-interpret",
+             "shape": [256, 256], "bits": 8, "scheme": "dither",
+             "block": None, "us": 100.0, "codes_exact_vs_ref": True},
+        ],
+    }
+
+
+def _write(dirpath, name, artifact):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, name), "w") as f:
+        json.dump(artifact, f)
+
+
+def _fails(findings):
+    return [f for f in findings if f.severity == "fail"]
+
+
+def _dirs(tmp_path, ref_serve, cand_serve):
+    ref, cand = str(tmp_path / "ref"), str(tmp_path / "cand")
+    _write(ref, "serve_bench.json", ref_serve)
+    _write(cand, "serve_bench.json", cand_serve)
+    return ref, cand
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_gate_passes_vs_self(tmp_path):
+    ref, cand = _dirs(tmp_path, _serve_artifact(), _serve_artifact())
+    _write(ref, "kernel_bench.json", _kernel_artifact())
+    _write(cand, "kernel_bench.json", _kernel_artifact())
+    findings = gate_directories(ref, cand)
+    assert not _fails(findings)
+    assert main(["--reference", ref, "--candidate", cand]) == 0
+
+
+def test_gate_fails_on_30pct_tok_s_regression(tmp_path):
+    """The gate's contract: decode_tok_s carries a 25% band, so a 30%
+    regression on the same machine (same calibration) must fail."""
+    ref, cand = _dirs(tmp_path, _serve_artifact(decode_tok_s=1000.0),
+                      _serve_artifact(decode_tok_s=700.0))
+    findings = gate_directories(ref, cand)
+    bad = _fails(findings)
+    assert any(f.metric == "decode_tok_s" for f in bad)
+    assert main(["--reference", ref, "--candidate", cand]) == 1
+
+
+def test_gate_passes_inside_tolerance_band(tmp_path):
+    ref, cand = _dirs(tmp_path, _serve_artifact(decode_tok_s=1000.0),
+                      _serve_artifact(decode_tok_s=900.0))   # -10%: noise
+    assert not _fails(gate_directories(ref, cand))
+
+
+def test_calibration_normalizes_slower_machine(tmp_path):
+    """Half the throughput on a machine the calibration probe shows to be
+    half as fast is *not* a regression — the same raw 500 tok/s without the
+    calibration excuse is."""
+    ref, cand = _dirs(
+        tmp_path, _serve_artifact(decode_tok_s=1000.0, calib_us=100.0),
+        _serve_artifact(decode_tok_s=500.0, calib_us=200.0))
+    assert not _fails(gate_directories(ref, cand))
+
+    ref, cand = _dirs(
+        tmp_path, _serve_artifact(decode_tok_s=1000.0, calib_us=100.0),
+        _serve_artifact(decode_tok_s=500.0, calib_us=100.0))
+    assert any(f.metric == "decode_tok_s"
+               for f in _fails(gate_directories(ref, cand)))
+
+
+def test_gate_fails_on_schema_mismatch(tmp_path):
+    ref, cand = _dirs(tmp_path, _serve_artifact(),
+                      _serve_artifact(version=4))
+    bad = _fails(gate_directories(ref, cand))
+    assert any(f.metric == "version" for f in bad)
+    # a v4 *reference* (stale committed artifact) is equally fatal
+    ref, cand = _dirs(tmp_path, _serve_artifact(version=4),
+                      _serve_artifact())
+    assert any(f.metric == "version"
+               for f in _fails(gate_directories(ref, cand)))
+
+
+def test_advisory_metrics_never_fail(tmp_path):
+    """Latency percentiles are advisory: a 10× TTFT blow-up is reported but
+    does not gate (CPU smoke percentiles are noise-dominated)."""
+    cand = _serve_artifact()
+    row = cand["results"][0]
+    row["ttft_ms"] = {"p50": 100.0, "p95": 200.0}
+    row["itl_ms"] = {"p50": 50.0, "p95": 90.0}
+    row["ttft_hist_ms"]["p95"] = 200.0
+    ref, cand_dir = _dirs(tmp_path, _serve_artifact(), cand)
+    findings = gate_directories(ref, cand_dir)
+    assert not _fails(findings)
+    assert any(f.severity == "advisory" and f.metric == "ttft_ms.p50"
+               for f in findings)
+
+
+def test_exact_and_bool_metrics_have_no_band(tmp_path):
+    cand = _serve_artifact()
+    cand["results"][0]["attn_bytes_per_token"] += 8      # analytic drift
+    cand["results"][0]["ttft_hist_ms"]["count"] = 2      # lost a request
+    ref, cand_dir = _dirs(tmp_path, _serve_artifact(), cand)
+    bad = {f.metric for f in _fails(gate_directories(ref, cand_dir))}
+    assert {"attn_bytes_per_token", "ttft_hist_ms.count"} <= bad
+
+    k_cand = _kernel_artifact()
+    k_cand["results"][1]["codes_exact_vs_ref"] = False   # correctness flip
+    ref_d, cand_d = str(tmp_path / "kref"), str(tmp_path / "kcand")
+    _write(ref_d, "kernel_bench.json", _kernel_artifact())
+    _write(cand_d, "kernel_bench.json", k_cand)
+    assert any(f.metric == "codes_exact_vs_ref"
+               for f in _fails(gate_directories(ref_d, cand_d)))
+
+
+def test_lost_row_and_missing_file_fail(tmp_path):
+    cand = _serve_artifact()
+    cand["results"] = []                                 # coverage lost
+    ref, cand_dir = _dirs(tmp_path, _serve_artifact(), cand)
+    assert any("coverage" in f.message
+               for f in _fails(gate_directories(ref, cand_dir)))
+
+    os.remove(os.path.join(cand_dir, "serve_bench.json"))
+    assert any("candidate artifact missing" in f.message
+               for f in _fails(gate_directories(ref, cand_dir)))
+
+
+def test_new_candidate_rows_are_info_not_fail(tmp_path):
+    cand = _serve_artifact()
+    extra = copy.deepcopy(cand["results"][0])
+    extra["policy"] = "dither"
+    cand["results"].append(extra)
+    ref, cand_dir = _dirs(tmp_path, _serve_artifact(), cand)
+    findings = gate_directories(ref, cand_dir)
+    assert not _fails(findings)
+    assert any("new candidate row" in f.message for f in findings)
+
+
+def test_row_key_and_kind_mapping():
+    assert artifact_kind("kernel_bench.json") == "kernel"
+    assert artifact_kind("serve_bench_paged.json") == "serve"
+    with pytest.raises(ValueError):
+        artifact_kind("roofline.json")
+    a = _serve_artifact()["results"][0]
+    b = dict(a, decode_tok_s=1.0)                        # metrics ≠ identity
+    assert row_key("serve", a) == row_key("serve", b)
+    assert row_key("serve", a) != row_key("serve", dict(a, policy="dither"))
+
+
+def test_committed_artifacts_gate_green_vs_themselves():
+    """The acceptance criterion 'gate green against the committed
+    artifacts': every committed artifact must parse at the expected schema
+    version and pass the gate when compared with itself."""
+    names = sorted(f for f in os.listdir(ARTIFACTS_DIR)
+                   if f.startswith(("kernel_bench", "serve_bench")))
+    assert {"kernel_bench.json", "serve_bench.json", "serve_bench_paged.json",
+            "serve_bench_mesh.json"} <= set(names)
+    findings = gate_directories(ARTIFACTS_DIR, ARTIFACTS_DIR, files=names)
+    assert not _fails(findings)

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import assert_argmax_margin
 
 from repro.configs import get_config
 from repro.models import registry
@@ -25,9 +26,13 @@ def _prompts(seed, n, length):
 
 
 def _ref_generate(params, cfg, prompts, max_new, policy=None, kv_quant=False,
-                  max_len=32):
+                  max_len=32, margin_floor=None):
     """The pre-rebuild engine's path: equal-length prompts admitted together
-    and fed token-by-token through ``decode_step``, then greedy decode."""
+    and fed token-by-token through ``decode_step``, then greedy decode.
+    ``margin_floor`` additionally asserts every greedy pick is decided by at
+    least that top-1/top-2 logit gap — the parity tests below pin exact
+    token equality, which is only a meaningful check when no step's argmax
+    sits on a float coin-flip (see conftest.assert_argmax_margin)."""
     toks = jnp.asarray(prompts, jnp.int32)
     b, s = toks.shape
     cache = registry.make_cache(params, cfg, b, max_len, kv_quant=kv_quant)
@@ -36,7 +41,10 @@ def _ref_generate(params, cfg, prompts, max_new, policy=None, kv_quant=False,
                                               policy=policy)
     outs = [[] for _ in range(b)]
     cur = jnp.argmax(logits, -1).astype(jnp.int32)
-    for _ in range(max_new):
+    for step in range(max_new):
+        if margin_floor is not None:
+            assert_argmax_margin(logits, min_margin=margin_floor,
+                                 context=f"greedy step {step}")
         for i in range(b):
             outs[i].append(int(cur[i]))
         logits, cache = registry.apply_decode(params, cfg, cur, cache,
@@ -60,12 +68,17 @@ def _engine_generate(prompts, max_new, policy=None, kv_quant=False,
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("seed", [1, 2])
 def test_engine_prefill_matches_token_by_token_policy_off(seed):
     """Acceptance: the batched-prefill engine emits exactly the tokens the
-    old per-token prompt feeding produced (greedy, full precision)."""
+    old per-token prompt feeding produced (greedy, full precision).
+    (Re-pinned from [0, 1]: the margin assertion below surfaced that seed
+    0's chain contains an *exact* top-2 logit tie — the bf16 logit grid
+    makes every margin either 0 or ≥ 2⁻⁸ — so its token parity only held
+    because both paths broke the tie identically, which no numerics
+    guarantee protects.)"""
     prompts = _prompts(seed, 2, 5)
-    ref = _ref_generate(PARAMS, CFG, prompts, 6)
+    ref = _ref_generate(PARAMS, CFG, prompts, 6, margin_floor=1e-3)
     assert _engine_generate(prompts, 6) == ref
 
 
@@ -81,7 +94,8 @@ def test_engine_prefill_matches_token_by_token_policy_dither(seed):
     0's chain included exact logit ties that only survived by luck.)"""
     pol = QuantPolicy(scheme="dither", bits=8)
     prompts = _prompts(seed, 2, 5)
-    ref = _ref_generate(PARAMS, CFG, prompts, 6, policy=pol)
+    ref = _ref_generate(PARAMS, CFG, prompts, 6, policy=pol,
+                        margin_floor=1e-3)
     assert _engine_generate(prompts, 6, policy=pol) == ref
 
 
