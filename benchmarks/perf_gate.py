@@ -1,7 +1,7 @@
 """CI perf-regression gate: diff fresh bench artifacts against committed ones.
 
 Loads the committed reference artifacts under ``benchmarks/artifacts/``
-(kernel_bench schema v3, serve_bench schema v5) and a candidate directory of
+(kernel_bench schema v3, serve_bench schema v6) and a candidate directory of
 freshly generated artifacts from the same commands, matches result rows on
 their identity keys (kernel × backend × shape × block; workload × policy ×
 kv_quant × layout × mesh × shape), and checks every shared metric against a
@@ -37,14 +37,14 @@ import json
 import os
 import sys
 
-EXPECTED_VERSIONS = {"kernel": 3, "serve": 5}
+EXPECTED_VERSIONS = {"kernel": 3, "serve": 6}
 
 # Identity keys: the fields that *name* a row.  Everything else is a metric.
 KERNEL_KEYS = ("kernel", "backend", "shape", "block", "cap", "bits", "scheme")
 SERVE_KEYS = ("workload", "arch", "policy", "kernel_backend", "kv_layout",
               "kv_quant", "mesh", "batch", "max_len", "prompt_len",
               "prefix_len", "tail_len", "max_new", "requests", "waves",
-              "block_size")
+              "block_size", "decode_ticks", "prefill_chunk")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +100,9 @@ SERVE_METRICS = (
     Metric("prefill_to_decode_ratio", "higher", rel_tol=0.5, advisory=True),
     Metric("per_shard_decode_tok_s", "higher", rel_tol=0.25, normalize=True,
            advisory=True),
+    # schema v6: fused-window speedup over the sweep's own 1-tick row — a
+    # same-machine ratio (normalisation cancels), so it gets a plain band.
+    Metric("tick_speedup_vs_1", "higher", rel_tol=0.25),
     # deterministic host-side behaviour: exact.
     Metric("completed", "exact"),
     Metric("preemptions", "exact"),
@@ -115,6 +118,8 @@ SERVE_METRICS = (
     Metric("heads_sharded", "bool"),
     # latency percentiles: CPU-noise-dominated at smoke shapes — advisory.
     Metric("ttft_ms.p50", "lower", rel_tol=1.0, normalize=True,
+           advisory=True),
+    Metric("ttft_ms.p90", "lower", rel_tol=1.0, normalize=True,
            advisory=True),
     Metric("ttft_ms.p95", "lower", rel_tol=1.0, normalize=True,
            advisory=True),

@@ -57,7 +57,7 @@ from repro.serve import Engine, Request, SamplingParams
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "artifacts", "serve_bench.json")
 
-ARTIFACT_VERSION = 5
+ARTIFACT_VERSION = 6
 
 POLICIES = ("none", "dither", "stochastic", "deterministic")
 
@@ -181,7 +181,7 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
                  backend: str, batch: int, max_len: int, prompt_len: int,
                  max_new: int, requests: int, temperature: float = 0.0,
                  waves: int = 3, kv_layout: str = "ring", block_size=None,
-                 mesh=None):
+                 mesh=None, decode_ticks: int = 1, prefill_chunk=None):
     """Measure one (policy × kv_quant) serving configuration.
 
     Builds a fresh engine, runs one warm-up request through the same prompt
@@ -201,7 +201,8 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
         kw = dict(kv_layout="paged", block_size=block_size,
                   prefix_cache=False)           # the grid measures cold rates
     engine = Engine(params, cfg, batch, max_len, policy=policy, frames=frames,
-                    kv_quant=kv_quant, mesh=mesh, **kw)
+                    kv_quant=kv_quant, mesh=mesh, decode_ticks=decode_ticks,
+                    prefill_chunk=prefill_chunk, **kw)
     if kv_layout == "paged":
         block_size = engine.block_size
 
@@ -249,6 +250,11 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
         "per_shard_decode_tok_s": dc / mesh_profile["data_shards"],
         "kv_layout": kv_layout,
         "block_size": int(block_size) if kv_layout == "paged" else None,
+        # schema v6: the overlap knobs (DESIGN.md §11) are identity fields —
+        # a tick-sweep row never gates against a single-tick row
+        "decode_ticks": int(decode_ticks),
+        "prefill_chunk": (int(engine.prefill_chunk)
+                          if engine.prefill_chunk else None),
         "kv_quant": bool(kv_quant), "batch": batch, "max_len": max_len,
         "prompt_len": prompt_len, "max_new": max_new, "requests": requests,
         "waves": waves,
@@ -256,7 +262,8 @@ def bench_config(cfg, params, policy_name: str, kv_quant: bool, *,
         "prefill_tok_s": pf, "decode_tok_s": dc,
         "prefill_to_decode_ratio": (pf / dc) if dc else 0.0,
         "ttft_ms": {"mean": 1e3 * float(np.mean(ttfts)) if ttfts else 0.0,
-                    "p50": 1e3 * _pct(ttfts, 50), "p95": 1e3 * _pct(ttfts, 95)},
+                    "p50": 1e3 * _pct(ttfts, 50), "p90": 1e3 * _pct(ttfts, 90),
+                    "p95": 1e3 * _pct(ttfts, 95)},
         "itl_ms": {"p50": 1e3 * _pct(itls, 50), "p95": 1e3 * _pct(itls, 95),
                    "max": 1e3 * max(itls) if itls else 0.0},
         # schema v5: engine-metrics fields (DESIGN.md §10).  The grid
@@ -343,12 +350,20 @@ def bench_prefix_reuse(cfg, params, *, batch: int, max_len: int,
 def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
           full: bool = False, backend: str = "jnp", policies=POLICIES,
           reduced: bool = True, kv_layout: str = "ring", block_size=None,
-          mesh_shape=None):
+          mesh_shape=None, tick_sweep=(1, 4)):
     """Run the policy × kv_quant grid; returns (rows, artifact).  The paged
     layout additionally runs the prefix-reuse workload on attention-only
     archs (others fall back to the ring grid — the paged pool requires
     per-position KV).  ``mesh_shape`` = (data, model) serves the grid on a
-    sharded engine (DESIGN.md §9; needs data×model jax devices)."""
+    sharded engine (DESIGN.md §9; needs data×model jax devices).
+
+    Schema v6 adds the **tick-sweep workload** (DESIGN.md §11): the
+    policy-free config re-served at each ``decode_ticks`` setting with
+    chunked piggyback prefill on, at a decode-heavy shape (doubled
+    ``max_new``) so the dispatch amortisation is what's measured.  Each
+    ``decode_ticks > 1`` row carries ``tick_speedup_vs_1`` — its decode
+    rate over the sweep's own single-tick row (machine-normalisation
+    cancels in the ratio, so the gate can band it directly)."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -396,6 +411,31 @@ def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
                 f"|{kv_layout}{mesh_tag}]", us_per_tok,
                 f"prefill/decode={res['prefill_to_decode_ratio']:.1f}x "
                 f"ttft_p50={res['ttft_ms']['p50']:.0f}ms"))
+
+    if tick_sweep:
+        # decode-heavy shape: the fused window amortises per-tick dispatch
+        # overhead, so give it enough decode ticks to show up at smoke size
+        tick_shape = dict(shape, max_new=2 * shape["max_new"])
+        chunk = block_size if kv_layout == "paged" else shape["prompt_len"] // 2
+        base_dc = None
+        for n in sorted(set(int(t) for t in tick_sweep)):
+            res = bench_config(cfg, params, "none", False, backend=backend,
+                               kv_layout=kv_layout, block_size=block_size,
+                               mesh=mesh, decode_ticks=n, prefill_chunk=chunk,
+                               **tick_shape)
+            res["workload"] = "tick_sweep"
+            if n == 1:
+                base_dc = res["decode_tok_s"]
+            elif base_dc:
+                res["tick_speedup_vs_1"] = res["decode_tok_s"] / base_dc
+            results.append(res)
+            rows.append((
+                f"serve[tick_sweep|n={n}|{kv_layout}{mesh_tag}]",
+                1e6 / res["decode_tok_s"] if res["decode_tok_s"] else 0.0,
+                f"decode={res['decode_tok_s']:.0f}tok/s "
+                + (f"x{res['tick_speedup_vs_1']:.2f}_vs_1tick "
+                   if "tick_speedup_vs_1" in res else "")
+                + f"ttft_p90={res['ttft_ms']['p90']:.0f}ms"))
 
     if kv_layout == "paged":
         for kv_quant in (False, True):
@@ -469,6 +509,9 @@ def main(argv=None) -> None:
                          "Defaults the policy list to 'none': mesh rows "
                          "measure the sharded serve path, and only the "
                          "policy-free stream is pinned shard-invariant")
+    ap.add_argument("--decode-ticks", default="1,4", metavar="N,N,...",
+                    help="tick-sweep settings for the schema-v6 overlapped "
+                         "workload (DESIGN.md §11); '' disables the sweep")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="JSON artifact path ('' to skip writing)")
     args = ap.parse_args(argv)
@@ -489,13 +532,16 @@ def main(argv=None) -> None:
         mesh_shape = tuple(int(parsed.shape[a]) for a in ("data", "model"))
         if args.policies is None:       # explicit --policies always wins
             policies = ("none",)
+    tick_sweep = (tuple(int(t) for t in args.decode_ticks.split(","))
+                  if args.decode_ticks else ())
     rows, artifact = sweep(args.arch, smoke=args.smoke, full=args.full,
                            backend=backend,
                            policies=policies,
                            reduced=not args.no_reduced,
                            kv_layout=args.kv_layout,
                            block_size=args.block_size,
-                           mesh_shape=mesh_shape)
+                           mesh_shape=mesh_shape,
+                           tick_sweep=tick_sweep)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")

@@ -52,6 +52,15 @@ def serve_main(argv=None):
                          "the dense ring, batch × ceil(max_len/bs))")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable cross-request prefix-block reuse")
+    ap.add_argument("--decode-ticks", type=int, default=1,
+                    help="decode ticks fused into one device dispatch; the "
+                         "host drains tokens/metrics once per window "
+                         "(DESIGN.md §11)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="piggyback chunked prefill: admit prompts in chunks "
+                         "of this many tokens between decode windows "
+                         "(paged: rounded to a block multiple; default: "
+                         "whole-prompt prefill)")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="serve sharded on a (data, model) mesh, e.g. "
                          "'2,2' (DESIGN.md §9; needs data×model devices — "
@@ -94,7 +103,8 @@ def serve_main(argv=None):
                     scheduler=args.sched, kv_layout=args.kv_layout,
                     block_size=args.block_size, num_blocks=args.num_blocks,
                     prefix_cache=not args.no_prefix_cache, mesh=mesh,
-                    metrics=args.metrics)
+                    metrics=args.metrics, decode_ticks=args.decode_ticks,
+                    prefill_chunk=args.prefill_chunk)
     for r in range(args.requests):
         prompt = [(7 * r + i) % (cfg.vocab_size - 1) + 1
                   for i in range(args.prompt_len)]

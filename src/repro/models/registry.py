@@ -24,8 +24,9 @@ Params = Dict[str, Any]
 
 __all__ = [
     "init_model", "apply_model", "make_cache", "apply_decode", "batch_spec",
-    "apply_prefill", "apply_prefill_paged", "merge_prefill",
-    "supports_batched_prefill", "supports_paged_kv",
+    "apply_prefill", "apply_prefill_chunked", "apply_prefill_paged",
+    "merge_prefill", "supports_batched_prefill", "supports_paged_kv",
+    "supports_chunked_prefill",
 ]
 
 
@@ -112,6 +113,41 @@ def supports_paged_kv(cfg: ModelConfig) -> bool:
     cross-KV is a fixed full-precision tensor — both stay on the ring/dense
     layout."""
     return supports_batched_prefill(cfg)
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """True when prompts can prefill in block-aligned or ring chunks spread
+    over several engine steps (DESIGN.md §11): attention-only decoders.
+    Recurrent layers would need their hidden state checkpointed at every
+    chunk boundary; they keep the scanned whole-prompt fallback."""
+    return supports_batched_prefill(cfg)
+
+
+def apply_prefill_chunked(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,    # (B, S) right-padded prompt chunks
+    lengths: jax.Array,   # (B,) chunk lengths; 0 marks an inactive row
+    starts: jax.Array,    # (B,) absolute start position of each chunk
+    cache: Params,        # live ring cache (merged in place by the caller)
+    *,
+    policy=None,
+    counter=0,
+    kv_quant: bool = False,
+    kv_offset=None,
+):
+    """Chunked ring prefill → (last-chunk-token logits (B, vocab_size), the
+    live cache with the chunk K/V merged in).  Continuation chunks
+    (``starts > 0``) re-read their slot's earlier positions from the ring
+    inside attention instead of recomputing them (DESIGN.md §11)."""
+    b, s = tokens.shape
+    lengths = jnp.asarray(lengths, jnp.int32)
+    logits, cache = transformer.prefill_with_cache_chunked(
+        params, cfg, tokens, lengths, starts, cache, policy=policy,
+        counter=counter, kv_quant=kv_quant, kv_offset=kv_offset)
+    last = jnp.clip(lengths - 1, 0, s - 1)
+    last_logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+    return last_logits, cache
 
 
 def apply_prefill_paged(

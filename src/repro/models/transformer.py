@@ -34,7 +34,8 @@ Params = Dict[str, Any]
 
 __all__ = [
     "init_params", "forward", "decode_step", "init_cache", "prefill",
-    "prefill_with_cache", "prefill_with_cache_paged", "merge_cache",
+    "prefill_with_cache", "prefill_with_cache_chunked",
+    "prefill_with_cache_paged", "merge_cache",
 ]
 
 
@@ -617,6 +618,211 @@ def prefill_with_cache(
     remainder = [entry(kv) for kv in kv_rem]
     cache = {"pos": lengths, "layers": stacked, "remainder": remainder}
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# chunked ring prefill: chunk forward + ring-history join + ring scatter
+# ---------------------------------------------------------------------------
+
+
+def _ring_scatter_chunk(entry, k, v, lengths, starts, kv_quant: bool,
+                        kv_offset):
+    """Merge one chunk's post-RoPE K/V (B, S, nkv, hd) into a live ring
+    entry.  Gather-select form (the `_prefill_entry` idiom, inverted): for
+    every ring slot j the chunk *covers* j iff some chunk position p ≡ j
+    (mod cap) with p < starts + lengths — chunk positions are consecutive
+    and the engine clamps chunks to ≤ cap tokens, so each slot is covered
+    at most once and non-covered slots keep their old contents exactly
+    (no scatter, no duplicate-index ordering hazard).  The int8 path
+    quantises with counter = absolute position (+ per-request offset) and
+    the decode-step element indices, so a chunk writes codes bit-identical
+    to what whole-prompt prefill or token-by-token decode would have left
+    at the same positions (DESIGN.md §6/§11)."""
+    cap = entry["k"].shape[1]
+    b, s = k.shape[0], k.shape[1]
+    nkv, hd = k.shape[2], k.shape[3]
+    j = jnp.arange(cap, dtype=jnp.int32)[None, :]              # (1, cap)
+    st = starts[:, None].astype(jnp.int32)
+    t = jnp.mod(j - st, cap)                                   # chunk index
+    covered = t < lengths[:, None]                             # (B, cap)
+    pj = st + t                                                # absolute pos
+    idx = jnp.clip(t, 0, s - 1)
+    gk = jnp.take_along_axis(k, idx[:, :, None, None], axis=1)
+    gv = jnp.take_along_axis(v, idx[:, :, None, None], axis=1)
+    k_pos = jnp.where(covered, pj, entry["k_pos"]).astype(jnp.int32)
+    c4 = covered[:, :, None, None]
+
+    if not kv_quant:
+        dt = entry["k"].dtype
+        return {"k": jnp.where(c4, gk.astype(dt), entry["k"]),
+                "v": jnp.where(c4, gv.astype(dt), entry["v"]),
+                "k_pos": k_pos}
+
+    off = (jnp.zeros((b,), jnp.int32) if kv_offset is None
+           else jnp.broadcast_to(jnp.asarray(kv_offset, jnp.int32), (b,)))
+    ctr = (pj + off[:, None])[:, :, None, None]
+    idx4 = _kv_elem_idx(nkv, hd)
+    kq, ks = _kv_q8(gk, ctr, idx4, 101)
+    vq, vs = _kv_q8(gv, ctr, idx4, 102)
+    c3 = covered[:, :, None]
+    return {"k": jnp.where(c4, kq, entry["k"]),
+            "v": jnp.where(c4, vq, entry["v"]),
+            "k_scale": jnp.where(c3, ks, entry["k_scale"]),
+            "v_scale": jnp.where(c3, vs, entry["v_scale"]),
+            "k_pos": k_pos}
+
+
+def _ring_chunk_attention(params, cfg: ModelConfig, x, positions, lengths,
+                          starts, entry, policy, counter, kv_quant: bool,
+                          kv_offset):
+    """Chunk attention for the chunked ring prefill: queries at absolute
+    positions ``starts + t`` attend the in-batch chunk K/V
+    (relative-causal, the cold path's grouped einsums) plus the slot's
+    *already-written history* gathered from the live ring entry —
+    positions with ``0 <= k_pos < start``, dequantised per position and
+    joined before the softmax, exactly the paged prefill's prefix-join
+    construction applied to the ring layout (DESIGN.md §11).  Returns
+    ``(out, new_entry)`` with the chunk K/V merged into the ring."""
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    import math as _math
+
+    q = dense(x, params["wq"], policy, counter, seed=1)
+    k = dense(x, params["wk"], policy, counter, seed=2)
+    v = dense(x, params["wv"], policy, counter, seed=3)
+    if cfg.qkv_bias and "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+
+    window = cfg.window or 0
+    group = nh // nkv
+    qg = q.reshape(b, s, nkv, group, hd)
+    m_ss = layers.make_causal_mask(s, s, window=window)
+    logits_s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) \
+        / _math.sqrt(hd)
+    logits_s = jnp.where(m_ss[None, None, None, :, :], logits_s, -1e30)
+
+    # history join: the ring holds every still-reachable earlier position
+    # (k_pos ∈ [0, start)); garbage slots carry k_pos = -1 or ≥ start and
+    # mask out, so idle-window writes never leak into chunk attention
+    hk, hv = entry["k"], entry["v"]
+    if "k_scale" in entry:
+        hk = (hk.astype(jnp.float32)
+              * (entry["k_scale"][..., None] / 127.0)).astype(x.dtype)
+        hv = (hv.astype(jnp.float32)
+              * (entry["v_scale"][..., None] / 127.0)).astype(x.dtype)
+    kp = entry["k_pos"][:, None, :]                        # (B, 1, cap)
+    q_abs = positions[:, :, None]                          # (B, S, 1)
+    vp = (kp >= 0) & (kp < starts[:, None, None])
+    if window:
+        vp = vp & (kp > q_abs - window)
+    logits_p = jnp.einsum("bqhgd,bkhd->bhgqk", qg, hk).astype(jnp.float32) \
+        / _math.sqrt(hd)
+    logits_p = jnp.where(vp[:, None, None, :, :], logits_p, -1e30)
+    cap = entry["k"].shape[1]
+    probs = jax.nn.softmax(
+        jnp.concatenate([logits_p, logits_s], axis=-1), axis=-1
+    ).astype(x.dtype)
+    out = (jnp.einsum("bhgqk,bkhd->bqhgd", probs[..., :cap], hv)
+           + jnp.einsum("bhgqk,bkhd->bqhgd", probs[..., cap:], v))
+    out = dist_ctx.gather_heads(out.reshape(b, s, nh * hd))
+    out = dense(out, params["wo"], policy, counter, seed=4)
+
+    new_entry = _ring_scatter_chunk(entry, k, v, lengths, starts, kv_quant,
+                                    kv_offset)
+    return out, new_entry
+
+
+def _ring_chunk_block(bp, cfg: ModelConfig, x, positions, lengths, starts,
+                      entry, policy, counter, kv_quant, kv_offset):
+    """One transformer block of the chunked ring prefill — ``_apply_block``'s
+    attn branch with the history-joining attention above."""
+    h = layers.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    out, new_entry = _ring_chunk_attention(
+        bp["attn"], cfg, h, positions, lengths, starts, entry, policy,
+        counter, kv_quant, kv_offset)
+    x = x + out
+    if "mlp" in bp or "moe" in bp:
+        h2 = layers.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if "moe" in bp:
+            x = x + moe.moe_ffn(bp["moe"], cfg, h2, policy, counter)
+        else:
+            x = x + layers.mlp(bp["mlp"], h2, cfg.mlp_act, policy, counter)
+    return x, new_entry
+
+
+def prefill_with_cache_chunked(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,    # (B, S) right-padded prompt *chunks*
+    lengths: jax.Array,   # (B,) chunk lengths (0 = inactive row)
+    starts: jax.Array,    # (B,) absolute position of each chunk's token 0
+    cache: Params,        # live ring cache; chunk KV merges in place
+    *,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+    kv_quant: bool = False,
+    kv_offset=None,
+):
+    """Chunked ring prefill: one batched forward over per-slot prompt
+    *chunks* that merges their K/V into the live ring cache (DESIGN.md
+    §11).  A continuation chunk sets ``starts[b] > 0``: tokens before the
+    start are not recomputed — their K/V is read back from the slot's own
+    ring entry inside each layer's attention and joined before the
+    softmax, so every chunk sees one joint distribution over its whole
+    history.  ``starts = 0`` with the full prompt length degenerates to
+    whole-prompt prefill of a fresh slot.  Chunks must be ≤ the ring
+    capacity (the engine clamps).  Returns ``(logits (B, S, vocab_size),
+    cache')`` with per-slot ``pos`` advanced to ``starts + lengths`` for
+    active rows."""
+    for i in range(cfg.n_layers):
+        if cfg.layer_kind(i) != "attn":
+            raise ValueError("chunked prefill requires attention-only "
+                             "layers; use registry.apply_prefill")
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s, _ = x.shape
+    lengths = jnp.asarray(lengths, jnp.int32)
+    starts = jnp.asarray(starts, jnp.int32)
+    positions = starts[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    p_ = _period(cfg)
+
+    def body(carry, xs):
+        h = carry
+        bp, ce = xs
+        new_entries = []
+        for pos_i in range(p_):
+            h, ne = _ring_chunk_block(
+                bp[pos_i], cfg, h, positions, lengths, starts, ce[pos_i],
+                policy, counter, kv_quant, kv_offset)
+            new_entries.append(ne)
+        return h, tuple(new_entries)
+
+    if params["blocks"]:
+        x, new_layers = jax.lax.scan(
+            body, x, (tuple(params["blocks"]), tuple(cache["layers"])))
+    else:
+        new_layers = ()
+    new_rem = []
+    for i, bp in enumerate(params["remainder"]):
+        x, ne = _ring_chunk_block(
+            bp, cfg, x, positions, lengths, starts, cache["remainder"][i],
+            policy, counter, kv_quant, kv_offset)
+        new_rem.append(ne)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = dense(x, head, policy, counter, seed=9).astype(jnp.float32)
+    logits = logits[:, :, : cfg.vocab_size]
+    new_cache = {
+        "pos": jnp.where(lengths > 0, starts + lengths, cache["pos"]),
+        "layers": list(new_layers),
+        "remainder": new_rem,
+    }
+    return logits, new_cache
 
 
 # ---------------------------------------------------------------------------

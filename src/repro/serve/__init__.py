@@ -1,7 +1,8 @@
 """repro.serve — two-phase batched-prefill/decode serving over a ring or
 paged-block-pool KV cache (DESIGN.md §6)."""
 
-from repro.serve.engine import (Engine, Request, make_decode_and_sample,
+from repro.serve.engine import (Engine, Request, make_chunked_prefill,
+                                make_decode_and_sample, make_fused_decode,
                                 make_paged_prefill, make_serve_fns)
 from repro.serve.kvpool import KVPool
 from repro.serve.metrics import (Histogram, JsonlSink, Metrics, NullSink,
@@ -10,6 +11,7 @@ from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
 
 __all__ = ["Engine", "Request", "make_serve_fns", "make_decode_and_sample",
-           "make_paged_prefill", "KVPool", "SamplingParams", "sample_tokens",
+           "make_fused_decode", "make_chunked_prefill", "make_paged_prefill",
+           "KVPool", "SamplingParams", "sample_tokens",
            "Scheduler", "Metrics", "Histogram", "NullSink", "StdoutSink",
            "JsonlSink", "make_sink"]

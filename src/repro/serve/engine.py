@@ -48,7 +48,8 @@ from repro.serve.metrics import Metrics
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
 
-__all__ = ["make_serve_fns", "make_decode_and_sample", "make_paged_prefill",
+__all__ = ["make_serve_fns", "make_decode_and_sample", "make_fused_decode",
+           "make_paged_prefill", "make_chunked_prefill",
            "Engine", "Request", "SamplingParams", "Scheduler", "KVPool",
            "Metrics"]
 
@@ -121,6 +122,91 @@ def make_decode_and_sample(cfg: ModelConfig,
     return decode_and_sample
 
 
+def make_fused_decode(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
+                      *, n_ticks: int = 1):
+    """Build the windowed multi-tick decode dispatch (DESIGN.md §11).
+
+    ``fused_decode(params, token, cache, kv_offset, counter, temps, topks,
+    seeds, counters, alive, budgets, stops)`` runs ``n_ticks`` fused
+    decode-and-sample ticks in one jitted call via ``lax.scan`` and returns
+    ``(tokens (n_ticks, B), last_token (B,), counters, cache')`` — the host
+    drains one (n_ticks, B) token matrix per window instead of syncing every
+    tick.  Finish detection moves on-device as an ``alive`` bitmask: a slot
+    dies when its sampled token lands in its ``stops`` row ((B, W) int32,
+    -1-padded — EOS is folded in) or when it has emitted ``budgets[b]``
+    tokens this window (max_new / max_len / paged-block coverage, computed
+    host-side).  Dead and idle rows keep decoding but are *inert*: their
+    sampled token, sampling counter and cache position freeze, and (paged)
+    their block-table row is masked to the trash block so a finished slot
+    can never scribble over blocks headed for the prefix cache.  Because a
+    live slot's ops are bitwise those of the n_ticks=1 scan, an N-tick
+    window reproduces N single ticks exactly (tests/test_overlap.py).
+    """
+    policy = policy.resolved() if policy is not None else None
+
+    def fused_decode(params, token, cache, kv_offset, counter,
+                     temps, topks, seeds, counters, alive, budgets, stops):
+        paged = "block_tables" in cache
+        if paged:
+            leaf = (jax.tree.leaves(cache["layers"][0])[0] if cache["layers"]
+                    else jax.tree.leaves(cache["remainder"][0])[0])
+            # shard-local pool leading dim is blocks + 1; last id is trash
+            nbp = leaf.shape[1] if cache["layers"] else leaf.shape[0]
+            trash = jnp.int32(nbp - 1)
+
+        def body(carry, j):
+            token, cache, counters, alive, emitted = carry
+            pos0 = cache["pos"]
+            step_cache = cache
+            if paged:
+                step_cache = dict(cache)
+                step_cache["block_tables"] = jnp.where(
+                    alive[:, None], cache["block_tables"], trash)
+            logits, new_cache = registry.apply_decode(
+                params, cfg, token, step_cache, policy=policy,
+                counter=counter + j, kv_offset=kv_offset)
+            toks = sample_tokens(logits, temps, topks, seeds, counters)
+            toks = jnp.where(alive, toks, token)
+            new_cache["pos"] = jnp.where(alive, new_cache["pos"], pos0)
+            if paged:
+                new_cache["block_tables"] = cache["block_tables"]
+            counters = jnp.where(alive, counters + 1, counters)
+            emitted = emitted + alive.astype(jnp.int32)
+            hit = jnp.any(toks[:, None] == stops, axis=1)
+            alive = alive & ~hit & (emitted < budgets)
+            return (toks, new_cache, counters, alive, emitted), toks
+
+        carry0 = (token, cache, counters, alive, jnp.zeros_like(counters))
+        (token, cache, counters, _, _), toks_all = jax.lax.scan(
+            body, carry0, jnp.arange(n_ticks, dtype=jnp.int32))
+        return toks_all, token, counters, cache
+
+    return fused_decode
+
+
+def make_chunked_prefill(cfg: ModelConfig,
+                         policy: Optional[QuantPolicy] = None, *,
+                         kv_quant: bool = False):
+    """Build the jit-able chunked ring prefill step (DESIGN.md §11).
+
+    ``chunked_prefill(params, tokens, lengths, starts, cache, kv_offset,
+    counter)`` runs one batched forward over per-slot prompt *chunks* at
+    absolute positions ``starts + t``, joins each slot's already-written
+    ring history inside attention, merges the chunk K/V into the (donated)
+    live ring cache and returns ``(last_chunk_logits, cache')``.  The paged
+    engine needs no analogue — ``make_paged_prefill`` already takes
+    block-aligned ``starts``, so a paged chunk is just a suffix call."""
+    policy = policy.resolved() if policy is not None else None
+
+    def chunked_prefill(params, tokens, lengths, starts, cache, kv_offset,
+                        counter):
+        return registry.apply_prefill_chunked(
+            params, cfg, tokens, lengths, starts, cache, policy=policy,
+            counter=counter, kv_quant=kv_quant, kv_offset=kv_offset)
+
+    return chunked_prefill
+
+
 def make_paged_prefill(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
                        *, kv_quant: bool = False):
     """Build the jit-able paged prefill step (DESIGN.md §6).
@@ -181,6 +267,9 @@ class Request:
     # count of its pool blocks sealed into the prefix cache so far
     _resume: Optional[dict] = None
     _sealed: int = 0
+    # chunked-prefill progress (engine-internal): tokens of the prompt
+    # already written to cache while state == "prefilling" (DESIGN.md §11)
+    _pf_pos: int = 0
 
     @property
     def ttft(self) -> Optional[float]:
@@ -242,7 +331,9 @@ class Engine:
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
                  mesh=None,
-                 metrics: Union[None, str, Metrics] = None):
+                 metrics: Union[None, str, Metrics] = None,
+                 decode_ticks: int = 1,
+                 prefill_chunk: Optional[int] = None):
         self.params, self.cfg, self.batch, self.max_len = params, cfg, batch, max_len
         policy = policy.resolved() if policy is not None else None
         self.policy = policy
@@ -253,6 +344,17 @@ class Engine:
             raise ValueError("kv_layout='paged' requires an attention-only "
                              f"decoder; {cfg.name!r} is not one")
         self.kv_layout = kv_layout
+        self.decode_ticks = int(decode_ticks)
+        if self.decode_ticks < 1:
+            raise ValueError(f"decode_ticks must be >= 1, got {decode_ticks}")
+        if prefill_chunk is not None:
+            prefill_chunk = int(prefill_chunk)
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1 (or None)")
+            if not registry.supports_chunked_prefill(cfg):
+                raise ValueError("chunked prefill requires an attention-only "
+                                 f"decoder; {cfg.name!r} is not one")
+        self.prefill_chunk = prefill_chunk
 
         # ---- mesh layout (DESIGN.md §9): decode slots partition on 'data',
         # KV heads on 'model' (replicated fallback when the GQA head count
@@ -283,6 +385,13 @@ class Engine:
                                        head_dim=cfg.hd())
                            if self.heads_sharded else cfg)
 
+        if kv_layout == "ring":
+            # the ring-chunk scatter covers each slot's ring at most once per
+            # chunk only while the chunk fits the ring capacity
+            ring_cap = (min(cfg.window, max_len) if cfg.window else max_len)
+            if self.prefill_chunk is not None:
+                self.prefill_chunk = min(self.prefill_chunk, ring_cap)
+
         if kv_layout == "paged":
             from repro.kernels import autotune as _autotune
             from repro.kernels import dispatch as _dispatch
@@ -297,6 +406,10 @@ class Engine:
                     "flash", _dispatch.resolve_backend(None).name)[0]
             self.block_size = bs = int(block_size)
             self.nbmax = -(-max_len // bs)
+            if self.prefill_chunk is not None:
+                # paged chunks stay block-aligned so every continuation chunk
+                # starts at a block boundary (the paged prefill's contract)
+                self.prefill_chunk = max(bs, self.prefill_chunk // bs * bs)
             # default capacity matches the dense ring's token count; callers
             # under-provision it to exercise continuous batching / eviction.
             # Under a mesh the pool partitions on 'data': each data shard
@@ -339,17 +452,19 @@ class Engine:
             lambda old, new, act: registry.merge_prefill(cfg, old, new, act),
             donate_argnums=(0,))
         self._paged_variants: dict = {}
+        # windowed decode dispatches compile once per distinct window length
+        # (decode_ticks plus any shorter drain tails) — see _fused_for
+        self._fused_variants: dict = {}
         if mesh is None:
             self._prefill = jax.jit(prefill_step)
-            # one fused device dispatch per decode tick; the cache argument
-            # is donated so the ring buffer / block pool updates in place
-            # (no double-buffered KV copy per token)
-            self._decode_and_sample = jax.jit(
-                make_decode_and_sample(cfg_l, policy), donate_argnums=(2,))
             if kv_layout == "paged":
                 self._prefill_paged = jax.jit(
                     make_paged_prefill(cfg_l, policy, kv_quant=kv_quant),
                     static_argnames=("prefix_blocks",), donate_argnums=(5,))
+            elif self.prefill_chunk is not None:
+                self._prefill_chunked = jax.jit(
+                    make_chunked_prefill(cfg_l, policy, kv_quant=kv_quant),
+                    donate_argnums=(4,))
         else:
             # the same jitted steps, run per-shard under shard_map: every
             # in/out leaf carries an explicit PartitionSpec, and the body is
@@ -366,14 +481,20 @@ class Engine:
                 prefill_step,
                 (self._pspec, tok2, row, row, sc),
                 (tok2, self._cspec))) if kv_layout == "ring" else None)
-            self._decode_and_sample = jax.jit(self._mesh_wrap(
-                make_decode_and_sample(cfg_l, policy),
-                (self._pspec, row, self._cspec, row, sc, row, row, row, row),
-                (row, row, self._cspec)), donate_argnums=(2,))
+            # fused decode: the (n_ticks, B) token matrix shards its slot
+            # axis (axis 1) on 'data'; everything per-slot rides 'data' rows
+            self._in_specs_fused = (self._pspec, row, self._cspec, row, sc,
+                                    row, row, row, row, row, row, tok2)
+            self._out_specs_fused = (P(None, "data"), row, row, self._cspec)
             if kv_layout == "paged":
                 self._in_specs_paged = (self._pspec, tok2, row, row, tok2,
                                         self._cspec, row, sc)
                 self._out_specs_paged = (tok2, self._cspec)
+            elif self.prefill_chunk is not None:
+                self._prefill_chunked = jax.jit(self._mesh_wrap(
+                    make_chunked_prefill(cfg_l, policy, kv_quant=kv_quant),
+                    (self._pspec, tok2, row, row, self._cspec, row, sc),
+                    (tok2, self._cspec)), donate_argnums=(4,))
 
         self.scheduler = (Scheduler(scheduler) if isinstance(scheduler, str)
                           else scheduler)
@@ -392,6 +513,9 @@ class Engine:
         self._counters = np.zeros((batch,), np.int32)
         self._dev = {}
         self._dev_dirty = True
+        # per-window paged write budget: slot → positions covered by already-
+        # allocated blocks (set by _pre_decode_paged, read by _decode_tick)
+        self._paged_cap: dict = {}
         self.stats = {"prefill_s": 0.0, "prefill_tokens": 0, "prefill_calls": 0,
                       "decode_s": 0.0, "decode_tokens": 0, "decode_calls": 0,
                       "prefix_hit_tokens": 0, "preemptions": 0}
@@ -440,6 +564,23 @@ class Engine:
                 donate_argnums=(5,))
             self._paged_variants[prefix_blocks] = fn
         return fn(*args)
+
+    def _fused_for(self, n: int):
+        """The windowed decode dispatch for an ``n``-tick window, compiled on
+        first use and cached — steady state uses ``decode_ticks`` only, so
+        this compiles once (plus once per distinct stop-set bucket width via
+        the (B, W) ``stops`` argument shape)."""
+        fn = self._fused_variants.get(n)
+        if fn is None:
+            base = make_fused_decode(self._cfg_local, self.policy, n_ticks=n)
+            if self.mesh is None:
+                fn = jax.jit(base, donate_argnums=(2,))
+            else:
+                fn = jax.jit(self._mesh_wrap(base, self._in_specs_fused,
+                                             self._out_specs_fused),
+                             donate_argnums=(2,))
+            self._fused_variants[n] = fn
+        return fn
 
     # ------------------------------------------------------ pool aggregates
 
@@ -547,6 +688,8 @@ class Engine:
     def _admit_and_prefill(self):
         if self.kv_layout == "paged":
             return self._admit_and_prefill_paged()
+        if self.prefill_chunk is not None:
+            return self._admit_and_prefill_ring_chunked()
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free:
             return
@@ -607,6 +750,75 @@ class Engine:
         # re-sync the device copies before the first decode tick reads them
         self._dev_dirty = True
 
+    def _admit_and_prefill_ring_chunked(self):
+        """Sarathi-style piggyback prefill on the ring engine (DESIGN.md
+        §11): admitted prompts enter in ``prefill_chunk``-token chunks, one
+        chunk wave per engine step, so a long prompt never stalls running
+        decodes for its full length.  Slots sit in state ``prefilling`` —
+        excluded from the decode window's alive mask — until their last
+        chunk lands, which also samples their first token.  Because the
+        dither KV codes key on absolute position (``starts + t``) and the
+        first sampled token on the prefill-final logits, the chunked stream
+        is the whole-prompt stream (tests/test_overlap.py)."""
+        chunk = self.prefill_chunk
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        admitted_now = time.time()
+        for req in self.scheduler.admit(len(free)):
+            if len(req.prompt) > self.max_len:
+                req.done, req.finish_reason, req.state = True, "rejected", "done"
+                self.finished.append(req)
+                self.metrics.inc("finished_requests")
+                self.metrics.inc("finish_rejected")
+                continue
+            i = free.pop(0)
+            self.slots[i] = req
+            req.state, req.t_admit = "prefilling", admitted_now
+            req._pf_pos = 0
+            self._set_slot_sampling(i, req)
+            self._slot_pos[i] = 0
+            self._dev_dirty = True
+
+        waving = [(i, s) for i, s in enumerate(self.slots)
+                  if s is not None and s.state == "prefilling"]
+        if not waving:
+            return
+        lens = np.zeros((self.batch,), np.int32)
+        starts = np.zeros((self.batch,), np.int32)
+        pieces = {}
+        for i, req in waving:
+            prompt = list(req.prompt) or [1]          # empty prompt → BOS
+            pieces[i] = prompt[req._pf_pos:req._pf_pos + chunk]
+            lens[i] = len(pieces[i])
+            starts[i] = req._pf_pos
+
+        s_bucket = _bucket(int(lens.max()))
+        toks = np.zeros((self.batch, s_bucket), np.int32)
+        for i, p in pieces.items():
+            toks[i, : len(p)] = p
+
+        self._dev_dirty = True
+        self._refresh_device_state()
+        t0 = time.time()
+        last_logits, self.cache = self._prefill_chunked(
+            self.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(starts), self.cache, self._dev["offsets"], self.tick)
+        first = np.asarray(self._sample(
+            last_logits, self._dev["temps"], self._dev["topks"],
+            self._dev["seeds"], self._dev["counters"]))
+        dt = time.time() - t0
+        self.stats["prefill_s"] += dt
+        self.stats["prefill_tokens"] += int(lens.sum())
+        self.stats["prefill_calls"] += 1
+
+        now = time.time()
+        for i, req in waving:
+            req._pf_pos += len(pieces[i])
+            self._slot_pos[i] = req._pf_pos
+            if req._pf_pos >= len(list(req.prompt) or [1]):
+                req.state = "active"
+                self._emit(i, req, int(first[i]), now)
+        self._dev_dirty = True
+
     # ----------------------------------------------------- paged internals
 
     def _tokens_written(self, req: Request) -> List[int]:
@@ -650,7 +862,8 @@ class Engine:
         'preempted' finish)."""
         req._resume = {"pos": int(self._slot_pos[i]),
                        "last_token": int(self._last_token[i]),
-                       "t": time.time(), "reprefill": False}
+                       "t": time.time(), "reprefill": False,
+                       "prefilling": req.state == "prefilling"}
         req.state = "queued"
         self.slots[i] = None
         self._set_bt_row(i, [])
@@ -685,7 +898,9 @@ class Engine:
         st = req._resume
         req._resume = None
         self.slots[i] = req
-        req.state = "active"
+        # a request preempted mid-prefill rejoins the chunk waves where it
+        # stopped (its _pf_pos and blocks survived the round trip)
+        req.state = "prefilling" if st.get("prefilling") else "active"
         self._set_slot_sampling(i, req)
         self._last_token[i] = st["last_token"]
         self._slot_pos[i] = st["pos"]
@@ -720,6 +935,9 @@ class Engine:
         has had its chance)."""
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free:
+            # no admission this step, but half-prefilled slots still push
+            # their next chunk (DESIGN.md §11)
+            self._prefill_wave_paged()
             return
         bs = self.block_size
         free_by_shard: dict = {}
@@ -803,33 +1021,54 @@ class Engine:
             req._resume = None
             start = len(shared) * bs
             i = take_slot(shard)
-            admitted.append((i, req, seq[start:], start))
+            admitted.append((i, req, start))
 
-        if not admitted:
-            return
-
+        # place admitted requests into their slots in ``prefilling`` state —
+        # their full-history blocks are already allocated (held across
+        # windows), so the chunk waves below only *write* into them
         now = time.time()
-        lens = np.zeros((self.batch,), np.int32)
-        starts = np.zeros((self.batch,), np.int32)
-        prompts = {}
-        any_prefix = False
-        for i, req, suffix, start in admitted:
+        for i, req, start in admitted:
             self.slots[i] = req
-            req.state = "active"
+            req.state = "prefilling"
+            req._pf_pos = start
             if req.t_admit is None:
                 req.t_admit = now
             self._set_slot_sampling(i, req)
-            prompts[i] = suffix
-            lens[i] = len(suffix)
-            starts[i] = start
-            self._slot_pos[i] = start + len(suffix)
+            self._slot_pos[i] = start
             self._set_bt_row(i, self._pool_of(req.rid).table(req.rid))
-            any_prefix = any_prefix or start > 0
             self.stats["prefix_hit_tokens"] += start
+
+        self._prefill_wave_paged()
+
+    def _prefill_wave_paged(self):
+        """One chunked-prefill wave over every ``prefilling`` paged slot
+        (DESIGN.md §11).  ``prefill_chunk`` is block-aligned, so every
+        continuation chunk starts at a block boundary and rides the
+        prefix-hit path of the paged prefill — earlier chunks' K/V is
+        gathered from the slot's own pool blocks inside attention.  With
+        ``prefill_chunk=None`` the whole suffix lands in one wave (the
+        pre-overlap behaviour).  A slot's last chunk samples its first
+        token and flips it ``active``."""
+        chunk = self.prefill_chunk or (self.max_len + 1)
+        waving = [(i, s) for i, s in enumerate(self.slots)
+                  if s is not None and s.state == "prefilling"]
+        if not waving:
+            return
+        lens = np.zeros((self.batch,), np.int32)
+        starts = np.zeros((self.batch,), np.int32)
+        pieces = {}
+        any_prefix = False
+        for i, req in waving:
+            seq = self._tokens_written(req)
+            pf = req._pf_pos
+            pieces[i] = seq[pf:pf + chunk]
+            lens[i] = len(pieces[i])
+            starts[i] = pf
+            any_prefix = any_prefix or pf > 0
 
         s_bucket = _bucket(int(lens.max()))
         toks = np.zeros((self.batch, s_bucket), np.int32)
-        for i, p in prompts.items():
+        for i, p in pieces.items():
             toks[i, : len(p)] = p
 
         self._dev_dirty = True
@@ -851,11 +1090,15 @@ class Engine:
         self.stats["prefill_calls"] += 1
 
         # the prefill dispatch is ordered before any later gather, so the
-        # prompt's full blocks are now safely publishable for prefix hits
+        # chunk's full blocks are now safely publishable for prefix hits
         now = time.time()
-        for i, req, suffix, start in admitted:
-            self._seal_full_blocks(req, start + len(suffix))
-            self._emit(i, req, int(first[i]), now)
+        for i, req in waving:
+            req._pf_pos += len(pieces[i])
+            self._slot_pos[i] = req._pf_pos
+            self._seal_full_blocks(req, req._pf_pos)
+            if req._pf_pos >= len(self._tokens_written(req)):
+                req.state = "active"
+                self._emit(i, req, int(first[i]), now)
         self._dev_dirty = True
 
     def _break_deadlock(self, head: Request, blocks_short: int,
@@ -891,29 +1134,38 @@ class Engine:
         return made_room
 
     def _pre_decode_paged(self):
-        """Before each decode tick: the token written this tick lands at
-        ``_slot_pos``; a slot crossing a block boundary needs a fresh block
-        *now*.  Sealing of the just-filled block happens here (its device
-        writes are complete), allocation failures preempt-and-requeue, and
-        ``max_len`` is a hard stop ('length' — the paged pool has no ring
-        wrap to overwrite)."""
+        """Before each decode window: the window writes this slot's next
+        ``w = min(decode_ticks, budget)`` positions, so blocks covering
+        ``[p, p + w)`` must exist *now* — the host cannot allocate
+        mid-window.  Sealing of filled blocks happens here (their device
+        writes are complete); when the pool can only cover part of the
+        window, the slot's per-window budget is capped instead of finishing
+        early (``_paged_cap``, read by _decode_tick) so tight pools behave
+        exactly like decode_ticks=1; zero coverage preempts-and-requeues,
+        and ``max_len`` is a hard stop ('length' — the paged pool has no
+        ring wrap to overwrite).  Slots still mid-prefill are skipped: they
+        decode nothing and their blocks are already allocated."""
         bs = self.block_size
         for i, req in [(i, s) for i, s in enumerate(self.slots)
-                       if s is not None]:
+                       if s is not None and s.state == "active"]:
             pool = self.pools[self._slot_shard(i)]
             p = int(self._slot_pos[i])
             if p >= self.max_len:
                 self._finish(i, req, "length")
                 continue
-            if p % bs != 0:
-                self._ensure_tail_writable(i, req, p // bs)
-                continue
             self._seal_full_blocks(req, p)
-            if p // bs < len(pool.table(req.rid)):
-                self._ensure_tail_writable(i, req, p // bs)
-                continue                     # resumed into an allocated block
-            phys = pool.append_block(req.rid)
-            if phys is None:
+            w = min(self.decode_ticks, self.max_len - p,
+                    max(1, req.effective_max_new() - len(req.out)))
+            pre = len(pool.table(req.rid))
+            need = (p + w - 1) // bs + 1
+            while len(pool.table(req.rid)) < need:
+                phys = pool.append_block(req.rid)
+                if phys is None:
+                    break
+                self._bt[i, len(pool.table(req.rid)) - 1] = phys
+                self._bt_dirty = True
+            covered = len(pool.table(req.rid)) * bs - p
+            if covered <= 0:
                 if pool.holders == 1:
                     # nothing to evict or preempt — this shard's pool itself
                     # is the capacity limit for its lone request
@@ -921,8 +1173,11 @@ class Engine:
                 else:
                     self._preempt_requeue(i, req)
                 continue
-            self._bt[i, p // bs] = phys
-            self._bt_dirty = True
+            self._paged_cap[i] = covered
+            if p // bs < pre:
+                # the window starts inside a pre-existing block (partial
+                # tail or a resume) — copy-on-write guard before writing
+                self._ensure_tail_writable(i, req, p // bs)
 
     def _ensure_tail_writable(self, i: int, req: Request, logical: int):
         """Copy-on-write guard before this tick's decode write: the tail
@@ -960,34 +1215,85 @@ class Engine:
             for e in self.cache["remainder"]]
 
     def _decode_tick(self):
+        """One decode *window*: ``decode_ticks`` fused scan ticks in a
+        single device dispatch, then one host drain of the (n, B) token
+        matrix (DESIGN.md §11).  Per-slot window budgets (max_new /
+        max_len / paged block coverage) and stop sets ride down as device
+        arrays so finish detection never syncs mid-window; the drain walks
+        each slot's column up to its first stop hit and re-runs the exact
+        per-token finish logic of the one-tick engine (``_emit``)."""
+        n = self.decode_ticks
+        self._paged_cap = {}
         if self.kv_layout == "paged":
             self._pre_decode_paged()
             self._sync_block_tables()
-        active = [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        active = [(i, s) for i, s in enumerate(self.slots)
+                  if s is not None and s.state == "active"]
         if not active:
             return
+        alive = np.zeros((self.batch,), bool)
+        budgets = np.zeros((self.batch,), np.int32)
+        stop_sets = {}
+        wmax = 1
+        for i, req in active:
+            b = min(n, req.effective_max_new() - len(req.out),
+                    self.max_len - int(self._slot_pos[i]))
+            if self.kv_layout == "paged":
+                b = min(b, self._paged_cap[i])
+            alive[i] = True
+            budgets[i] = b
+            ss = set(req.sampling.stop_set())
+            if req.sampling.eos_id is not None:
+                ss.add(req.sampling.eos_id)
+            stop_sets[i] = ss
+            wmax = max(wmax, len(ss))
+        # bucket the stop-set width so the (B, W) stops array compiles per
+        # power-of-two width, not per distinct stop-set size
+        W = 1
+        while W < wmax:
+            W *= 2
+        stops = np.full((self.batch, W), -1, np.int32)   # -1 never sampled
+        for i, ss in stop_sets.items():
+            for j, t in enumerate(sorted(ss)):
+                stops[i, j] = t
+
         self._refresh_device_state()
         t0 = time.time()
-        toks_dev, counters_dev, self.cache = self._decode_and_sample(
+        toks_dev, last_dev, counters_dev, self.cache = self._fused_for(n)(
             self.params, self._dev["last_token"], self.cache,
             self._dev["offsets"], self.tick,
             self._dev["temps"], self._dev["topks"], self._dev["seeds"],
-            self._dev["counters"])
-        toks = np.asarray(toks_dev)
+            self._dev["counters"], jnp.asarray(alive),
+            jnp.asarray(budgets), jnp.asarray(stops))
+        toks = np.asarray(toks_dev)           # (n, B) — the window drain
         dt = time.time() - t0
-        # the fused step advanced counters and produced the next input token
-        # on device — keep those copies resident (no re-upload next tick)
+        # the fused window advanced counters and produced the next input
+        # token on device — keep those copies resident (no re-upload next
+        # window; dead rows froze, matching the host mirrors below)
         self._dev["counters"] = counters_dev
-        self._dev["last_token"] = toks_dev
-        self.tick += 1
+        self._dev["last_token"] = last_dev
+        self.tick += n
         self.stats["decode_s"] += dt
-        self.stats["decode_tokens"] += len(active)
         self.stats["decode_calls"] += 1
 
         now = time.time()
         for i, req in active:
-            self._slot_pos[i] += 1
-            self._emit(i, req, int(toks[i]), now)
+            col = toks[:, i]
+            ss = stop_sets[i]
+            m = int(budgets[i])               # tokens this slot really kept
+            for j in range(m):
+                if int(col[j]) in ss:
+                    m = j + 1
+                    break
+            # windowed-drain ITL attribution: m tokens arrived over one
+            # host drain interval — attribute the per-token inter-arrival
+            # as interval/m instead of one m-sized observation per drain
+            t_prev = req.t_last if req.t_last is not None else now
+            share = (now - t_prev) / m
+            for j in range(m):
+                self._slot_pos[i] += 1
+                self._emit(i, req, int(col[j]), t_prev + share * (j + 1))
+            self.stats["decode_tokens"] += m
 
     def _emit(self, i: int, req: Request, tok: int, now: float):
         req.out.append(tok)

@@ -239,6 +239,11 @@ class Metrics:
         self.ttft_s.record(seconds)
 
     def observe_itl(self, seconds: float) -> None:
+        """One observation **per completed token**, not per host drain: a
+        windowed-decode engine draining m tokens at once must attribute
+        drain_interval / m to each (the engine's _decode_tick does exactly
+        that), so the itl histogram's count matches the token count at any
+        decode_ticks setting (tests/test_metrics.py)."""
         self.itl_s.record(seconds)
 
     def tick(self, **gauges) -> None:

@@ -7,14 +7,20 @@ the ``st`` strategy namespace degrades to inert placeholders, so module-level
 strategy definitions still evaluate.
 """
 
+import functools
+
 import pytest
 
 try:
-    from hypothesis import given, strategies as st  # noqa: F401
+    from hypothesis import given, settings, strategies as st  # noqa: F401
 
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
+
+    def settings(*_args, **_kwargs):
+        """No-op ``@settings(...)`` decorator factory."""
+        return lambda fn: fn
 
     class _StrategyStub:
         """Any ``st.<name>(...)`` call returns an inert placeholder."""
@@ -26,12 +32,16 @@ except ModuleNotFoundError:
 
     def given(*_args, **_kwargs):
         def decorate(_fn):
+            # functools.wraps preserves the signature, so stacked
+            # @pytest.mark.parametrize decorators still find their argument
+            # names at collection; the skip mark is evaluated before fixture
+            # resolution, so the strategy-bound parameters are never looked
+            # up as fixtures.
             @pytest.mark.skip(reason="hypothesis not installed")
-            def skipped():
+            @functools.wraps(_fn)
+            def skipped(*args, **kwargs):
                 pass
 
-            skipped.__name__ = _fn.__name__
-            skipped.__doc__ = _fn.__doc__
             return skipped
 
         return decorate

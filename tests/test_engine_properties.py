@@ -1,0 +1,175 @@
+"""Property soak for the overlapped engine (DESIGN.md §6, §11).
+
+Hypothesis drives randomized request mixes (prompt lengths, priorities,
+budgets, temperatures, eos/stop collisions, oversized prompts) through the
+engine at every overlap setting — single-tick, fused windows, chunked
+prefill, tight paged pools — and checks the invariants that must hold for
+*any* workload, not just the pinned parity fixtures in tests/test_overlap.py:
+
+* **drain leaves nothing behind** — every submitted request finishes, all
+  slots free, queue empty, and the paged pool holds zero live blocks.
+* **FCFS within priority, preemption included** — among equal-priority
+  requests, first admission order follows submission order (a requeued
+  victim keeps its original ``_arrival``, so it never loses its place).
+* **finish reasons are valid and consistent** with the emitted stream
+  (eos ⇒ last token is ``eos_id``; stop ⇒ last token in ``stop_ids``;
+  length ⇒ budget exhausted; rejected ⇒ nothing emitted).
+* **stats ≡ metrics** — the histogram counts and counters the metrics
+  surface reports match the per-request ground truth on the Request
+  objects and ``Engine.stats``.
+
+Engines are cached per overlap configuration (the jitted serve fns
+recompile per Engine), so each example only pays a serve run.  Skips when
+hypothesis is absent (tests/_hypothesis_compat.py).
+"""
+
+import itertools
+
+import jax
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.models import registry
+from repro.serve.engine import Engine, Request
+from repro.serve.sampling import SamplingParams
+
+CFG = get_config("smollm_135m").reduced()
+PARAMS = registry.init_model(jax.random.PRNGKey(0), CFG)
+
+MAX_LEN = 32
+EOS, STOP = 11, 77
+
+# one engine per overlap configuration, built lazily and reused across
+# examples (jit closures are per-Engine; recompiling per example would
+# dominate the soak).  The last one runs a pool small enough to preempt.
+CONFIGS = {
+    "ring-plain": dict(),
+    "ring-window": dict(decode_ticks=4, prefill_chunk=5),
+    "paged-plain": dict(kv_layout="paged", block_size=8),
+    "paged-window": dict(kv_layout="paged", block_size=8, decode_ticks=2,
+                         prefill_chunk=8),
+    "paged-tight": dict(kv_layout="paged", block_size=8, num_blocks=12,
+                        decode_ticks=4, prefill_chunk=8, kv_quant=True),
+}
+_ENGINES = {}
+_RID = itertools.count()
+
+
+def _engine(name):
+    if name not in _ENGINES:
+        _ENGINES[name] = Engine(PARAMS, CFG, batch=2, max_len=MAX_LEN,
+                                scheduler="priority", **CONFIGS[name])
+    eng = _ENGINES[name]
+    eng.finished = []
+    eng.reset_stats()
+    return eng
+
+
+req_st = st.tuples(
+    st.integers(0, 40),                     # prompt length: 0 = BOS path,
+                                            # > max_len = rejection path
+    st.integers(0, 2 ** 31 - 1),            # prompt content seed
+    st.integers(1, 2),                      # priority class
+    st.integers(1, 6),                      # max_new
+    st.sampled_from([0.0, 0.8]),            # greedy / sampled
+)
+
+
+def _submit(eng, draws):
+    reqs = []
+    for n, seed, prio, max_new, temp in draws:
+        rid = next(_RID)
+        prompt = [(seed + 7 * i) % (CFG.vocab_size - 1) + 1 for i in range(n)]
+        req = Request(rid=rid, prompt=prompt, priority=prio,
+                      sampling=SamplingParams(
+                          temperature=temp, max_new=max_new, seed=seed,
+                          eos_id=EOS, stop_ids=(STOP,),
+                          counter_offset=(rid % 7) * 100))
+        eng.submit(req)
+        reqs.append(req)
+    return reqs
+
+
+def _check_invariants(eng, reqs):
+    done = {r.rid: r for r in eng.finished}
+
+    # -- nothing left behind
+    assert sorted(done) == sorted(r.rid for r in reqs)
+    assert all(s is None for s in eng.slots)
+    assert len(eng.scheduler) == 0
+    if eng.pools:
+        assert eng.pool_stats()["live"] == 0
+
+    # -- finish reasons valid and consistent with the stream
+    for r in reqs:
+        assert r.done and r.state == "done"
+        assert r.finish_reason in {"eos", "stop", "length", "preempted",
+                                   "rejected"}
+        budget = r.effective_max_new()
+        assert len(r.out) <= budget
+        if r.finish_reason == "eos":
+            assert r.out[-1] == EOS
+        elif r.finish_reason == "stop":
+            assert r.out[-1] == STOP
+        elif r.finish_reason == "length":
+            assert (len(r.out) == budget
+                    or len(r.prompt) + len(r.out) >= MAX_LEN)
+        elif r.finish_reason == "rejected":
+            assert r.out == [] and r.t_first is None
+        if r.out:
+            assert all(v >= 0.0 for v in r.itl)
+            assert len(r.itl) == len(r.out) - 1
+
+    # -- FCFS within priority: first admission follows submission order
+    for prio in {r.priority for r in reqs}:
+        cls = [r for r in reqs if r.priority == prio and r.t_admit is not None]
+        admits = [r.t_admit for r in cls]       # reqs is in submission order
+        assert admits == sorted(admits)
+
+    # -- stats ≡ metrics
+    ms = eng.metrics.summary()
+    assert ms["counters"].get("finished_requests", 0) == len(reqs)
+    assert ms["ttft_s"]["count"] == sum(
+        1 for r in reqs if r.t_first is not None)
+    assert ms["itl_s"]["count"] == sum(len(r.itl) for r in reqs)
+    assert eng.stats["decode_tokens"] >= sum(
+        len(r.out) - 1 for r in reqs if r.out)
+    for reason in {r.finish_reason for r in reqs}:
+        assert ms["counters"][f"finish_{reason}"] == sum(
+            1 for r in reqs if r.finish_reason == reason)
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+@settings(max_examples=8, deadline=None)
+@given(draws=st.lists(req_st, min_size=1, max_size=6))
+def test_engine_invariants_hold_for_any_workload(name, draws):
+    eng = _engine(name)
+    reqs = _submit(eng, draws)
+    eng.run(ticks=600)
+    _check_invariants(eng, reqs)
+
+
+@settings(max_examples=6, deadline=None)
+@given(draws=st.lists(req_st, min_size=2, max_size=6),
+       victim=st.integers(0, 5))
+def test_invariants_survive_mid_run_preemption(draws, victim):
+    """White-box soak: forcibly preempt an occupied paged slot partway
+    through serving (mid-prefill or mid-decode) — the requeued victim must
+    still finish, keep its place within its priority class, and leak no
+    blocks."""
+    eng = _engine("paged-window")
+    reqs = _submit(eng, draws)
+    kicked = False
+    for _ in range(600):
+        if not kicked:
+            i = victim % eng.batch
+            s = eng.slots[i]
+            if s is not None and s.state in ("prefilling", "active"):
+                eng._preempt_requeue(i, s)
+                kicked = True
+        eng.step()
+        if not len(eng.scheduler) and all(s is None for s in eng.slots):
+            break
+    _check_invariants(eng, reqs)

@@ -160,6 +160,44 @@ def test_metrics_consistent_with_engine_stats(eng_kw):
         assert "live_blocks" not in g
 
 
+@pytest.mark.parametrize("eng_kw", [
+    {},
+    {"kv_layout": "paged", "block_size": 8},
+], ids=["ring", "paged"])
+def test_itl_attribution_consistent_across_decode_ticks(eng_kw):
+    """A fused window drains m tokens per host visit; the engine attributes
+    drain_interval / m to each (DESIGN.md §11), so the itl histogram keeps
+    one observation **per completed token** — decode_ticks=4 and
+    decode_ticks=1 must report identical itl counts and identical
+    per-request itl list lengths, not one observation per drain."""
+    eng1, done1 = _run_engine(**eng_kw)
+    eng4, done4 = _run_engine(decode_ticks=4, **eng_kw)
+    assert len(done1) == len(done4) == 4
+
+    by_rid1 = {r.rid: r for r in done1}
+    by_rid4 = {r.rid: r for r in done4}
+    for rid in by_rid1:
+        r1, r4 = by_rid1[rid], by_rid4[rid]
+        assert r1.out == r4.out                          # streams bitwise
+        # one inter-token latency per token after the first — regardless of
+        # how many host drains produced them
+        assert len(r4.itl) == len(r1.itl) == len(r1.out) - 1
+        assert all(v >= 0.0 for v in r4.itl)
+        # max_new=4 ⇒ the 3 decode tokens drain in a single 4-tick window,
+        # so every one carries the same drain_interval / m share (equal up
+        # to float64 epoch-timestamp subtraction noise, ~µs)
+        assert all(v == pytest.approx(r4.itl[0], abs=1e-5) for v in r4.itl)
+
+    m1, m4 = eng1.metrics.summary(), eng4.metrics.summary()
+    want = sum(len(r.out) - 1 for r in done1)
+    assert m1["itl_s"]["count"] == want
+    assert m4["itl_s"]["count"] == want                  # per token, per drain
+    assert m1["ttft_s"]["count"] == m4["ttft_s"]["count"] == 4
+    # the fused engine made fewer decode dispatches to emit the same tokens
+    assert eng4.stats["decode_tokens"] == eng1.stats["decode_tokens"]
+    assert eng4.stats["decode_calls"] < eng1.stats["decode_calls"]
+
+
 def test_rejected_requests_are_counted():
     eng = Engine(PARAMS, CFG, batch=1, max_len=8)
     eng.submit(Request(rid=0, prompt=list(range(1, 20)), max_new=4))

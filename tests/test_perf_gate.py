@@ -15,7 +15,7 @@ ARTIFACTS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                              "artifacts")
 
 
-def _serve_artifact(decode_tok_s=1000.0, calib_us=100.0, version=5):
+def _serve_artifact(decode_tok_s=1000.0, calib_us=100.0, version=6):
     return {
         "version": version,
         "calibration": {"probe": "matmul_f32_256", "repeats": 5,
@@ -25,6 +25,7 @@ def _serve_artifact(decode_tok_s=1000.0, calib_us=100.0, version=5):
             "kv_layout": "ring", "kv_quant": False, "mesh": None,
             "batch": 2, "max_len": 32, "prompt_len": 8, "max_new": 4,
             "requests": 3, "waves": 3, "block_size": None,
+            "decode_ticks": 1, "prefill_chunk": None,
             "decode_tok_s": decode_tok_s, "prefill_tok_s": 4 * decode_tok_s,
             "completed": 9, "preemptions": 0, "prefix_hit_rate": 0.0,
             "attn_bytes_per_token": 123456,
@@ -184,6 +185,28 @@ def test_new_candidate_rows_are_info_not_fail(tmp_path):
     findings = gate_directories(ref, cand_dir)
     assert not _fails(findings)
     assert any("new candidate row" in f.message for f in findings)
+
+
+def test_tick_sweep_rows_gate_speedup_and_identity(tmp_path):
+    """Schema v6: decode_ticks/prefill_chunk are identity keys — a 4-tick
+    row never matches a 1-tick row — and the fused-window speedup ratio
+    ``tick_speedup_vs_1`` is a gated (non-advisory) metric."""
+    def with_sweep(speedup):
+        art = _serve_artifact()
+        row = copy.deepcopy(art["results"][0])
+        row.update(workload="tick_sweep", decode_ticks=4, prefill_chunk=4,
+                   tick_speedup_vs_1=speedup)
+        art["results"].append(row)
+        return art
+
+    a = with_sweep(1.5)["results"][1]
+    assert row_key("serve", a) != row_key("serve", _serve_artifact()["results"][0])
+
+    ref, cand = _dirs(tmp_path, with_sweep(1.5), with_sweep(1.45))
+    assert not _fails(gate_directories(ref, cand))      # inside the band
+    ref, cand = _dirs(tmp_path, with_sweep(1.5), with_sweep(1.0))
+    assert any(f.metric == "tick_speedup_vs_1"
+               for f in _fails(gate_directories(ref, cand)))
 
 
 def test_row_key_and_kind_mapping():
