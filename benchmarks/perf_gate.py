@@ -1,7 +1,7 @@
 """CI perf-regression gate: diff fresh bench artifacts against committed ones.
 
 Loads the committed reference artifacts under ``benchmarks/artifacts/``
-(kernel_bench schema v3, serve_bench schema v6) and a candidate directory of
+(kernel_bench schema v3, serve_bench schema v7) and a candidate directory of
 freshly generated artifacts from the same commands, matches result rows on
 their identity keys (kernel × backend × shape × block; workload × policy ×
 kv_quant × layout × mesh × shape), and checks every shared metric against a
@@ -37,7 +37,7 @@ import json
 import os
 import sys
 
-EXPECTED_VERSIONS = {"kernel": 3, "serve": 6}
+EXPECTED_VERSIONS = {"kernel": 3, "serve": 7}
 
 # Identity keys: the fields that *name* a row.  Everything else is a metric.
 KERNEL_KEYS = ("kernel", "backend", "shape", "block", "cap", "bits", "scheme")
@@ -114,6 +114,13 @@ SERVE_METRICS = (
     Metric("kv_hbm_bytes_dense_ring", "exact"),
     Metric("ttft_hist_ms.count", "exact"),
     Metric("itl_hist_ms.count", "exact"),
+    # schema v7: fault-tolerance counters (DESIGN.md §12).  The bench
+    # workload sets no deadlines or queue cap and never crashes — all three
+    # must be exactly zero, so any expiry/shed/restart on the benchmark
+    # path is a behaviour regression, not noise.
+    Metric("deadline_expired", "exact"),
+    Metric("shed", "exact"),
+    Metric("recoveries", "exact"),
     Metric("attn_full_cap_fp32_upcast", "bool"),
     Metric("heads_sharded", "bool"),
     # latency percentiles: CPU-noise-dominated at smoke shapes — advisory.

@@ -57,7 +57,7 @@ from repro.serve import Engine, Request, SamplingParams
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "artifacts", "serve_bench.json")
 
-ARTIFACT_VERSION = 6
+ARTIFACT_VERSION = 7
 
 POLICIES = ("none", "dither", "stochastic", "deterministic")
 

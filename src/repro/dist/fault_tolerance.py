@@ -1,20 +1,36 @@
-"""Fault tolerance for long training runs: failure injection (tests/chaos),
-a straggler watchdog, and the restart-from-checkpoint driver loop.
+"""Fault tolerance for long runs: failure injection (tests/chaos), a
+straggler watchdog, and restart-from-checkpoint driver loops.
 
-The training loop (launch/train.py) calls ``injector.maybe_fail(step, phase)``
-at its failure points; ``run_with_restarts`` re-enters the loop after a crash
-and the loop resumes from the latest checkpoint — the recovery contract
-tests/test_fault_tolerance.py pins down.
+Two consumers share these primitives:
+
+* **training** — launch/train.py calls ``injector.maybe_fail(step, phase)``
+  at its failure points ('before_save' / 'after_save'); ``run_with_restarts``
+  re-enters the loop after a crash and the loop resumes from the latest
+  checkpoint — the recovery contract tests/test_fault_tolerance.py pins.
+* **serving** (DESIGN.md §12) — the engine calls the same injector at its
+  five serve crash points ('pre_admit', 'pool_alloc', 'mid_window',
+  'post_drain', 'sink_write'), keyed on the engine tick at the start of the
+  window; ``run_serve_with_restarts`` rebuilds a fresh engine after each
+  crash and restores it from the latest ``Engine.snapshot`` file.  Because
+  dither KV codes are position-pure and the sampler is a stateless hash of
+  (seed, counter), the restored engine's streams are *bitwise* those of an
+  uninterrupted run — tests/test_serve_fault.py.
 """
 
 from __future__ import annotations
 
+import json
+import os
 from typing import Callable, Dict, Optional, Set, Tuple
 
 __all__ = [
     "InjectedFailure", "FailureInjector", "StragglerWatchdog",
-    "run_with_restarts",
+    "run_with_restarts", "run_serve_with_restarts", "SERVE_PHASES",
 ]
+
+# the engine's injection points, in within-step order (DESIGN.md §12)
+SERVE_PHASES = ("pre_admit", "pool_alloc", "mid_window", "post_drain",
+                "sink_write")
 
 
 class InjectedFailure(RuntimeError):
@@ -78,3 +94,39 @@ def run_with_restarts(loop: Callable[[int], object], max_restarts: int = 3):
     raise RuntimeError(
         f"job failed after {max_restarts} restarts"
     ) from last_exc
+
+
+def run_serve_with_restarts(make_engine: Callable[[], object],
+                            submit: Callable[[object], None], *,
+                            snapshot_path: str, ticks: int,
+                            max_restarts: int = 3,
+                            streams: Optional[dict] = None):
+    """Crash-tolerant serve driver (DESIGN.md §12): the serving analogue of
+    the training restart loop above.
+
+    Each (re)start builds a **fresh** engine via ``make_engine`` — a crashed
+    engine died mid-mutation and must be discarded, never re-driven.  If
+    ``snapshot_path`` exists the engine restores from it (``submit`` is NOT
+    called again: the snapshot already carries the queue and every
+    in-flight request); on a cold start ``submit(engine)`` enqueues the
+    workload.  ``streams`` optionally re-attaches per-rid streaming
+    callbacks, which snapshots cannot carry.  Returns the engine that ran
+    to completion.
+
+    ``make_engine`` should pass the same ``snapshot_path`` to the Engine so
+    each window persists a recovery point; it should also share one
+    ``FailureInjector`` across restarts — its ``fired`` set is what lets a
+    resumed run sail past an already-fired crash point.
+    """
+
+    def loop(_restart_idx: int):
+        engine = make_engine()
+        if os.path.exists(snapshot_path):
+            with open(snapshot_path) as fh:
+                engine.restore(json.load(fh), streams=streams)
+        else:
+            submit(engine)
+        engine.run(ticks)
+        return engine
+
+    return run_with_restarts(loop, max_restarts=max_restarts)

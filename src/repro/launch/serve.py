@@ -11,6 +11,8 @@ Admits requests through the scheduler, prefills prompts with the batched
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -79,6 +81,25 @@ def serve_main(argv=None):
                          "'stdout', or 'jsonl:<path>' / a *.jsonl path.  "
                          "Unset = collect but don't stream; the summary "
                          "prints either way")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request wall-clock deadline from submission "
+                         "(DESIGN.md §12): queued or running, a request "
+                         "past it finishes with reason 'deadline'")
+    ap.add_argument("--queue-cap", type=int, default=None,
+                    help="bounded admission queue: submissions past this "
+                         "depth shed per --shed-policy (DESIGN.md §12)")
+    ap.add_argument("--shed-policy", default="reject-new",
+                    choices=["reject-new", "evict-lowest-priority"],
+                    help="what a full queue sheds: the newcomer, or the "
+                         "lowest-priority queued request when the "
+                         "newcomer outranks it")
+    ap.add_argument("--snapshot-path", default=None, metavar="PATH",
+                    help="persist an atomic engine snapshot every window "
+                         "(JSON; DESIGN.md §12) — the crash-recovery point")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore from --snapshot-path if it exists and "
+                         "continue (bitwise for policy-free serving) "
+                         "instead of submitting the synthetic workload")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -104,16 +125,29 @@ def serve_main(argv=None):
                     block_size=args.block_size, num_blocks=args.num_blocks,
                     prefix_cache=not args.no_prefix_cache, mesh=mesh,
                     metrics=args.metrics, decode_ticks=args.decode_ticks,
-                    prefill_chunk=args.prefill_chunk)
-    for r in range(args.requests):
-        prompt = [(7 * r + i) % (cfg.vocab_size - 1) + 1
-                  for i in range(args.prompt_len)]
-        engine.submit(Request(
-            rid=r, prompt=prompt, priority=r % 2,
-            sampling=SamplingParams(temperature=args.temperature,
-                                    top_k=args.top_k, seed=args.seed + r,
-                                    max_new=args.max_new,
-                                    counter_offset=1000 * r)))
+                    prefill_chunk=args.prefill_chunk,
+                    queue_cap=args.queue_cap, shed_policy=args.shed_policy,
+                    snapshot_path=args.snapshot_path)
+    resumed = False
+    if args.resume and args.snapshot_path and os.path.exists(args.snapshot_path):
+        with open(args.snapshot_path) as fh:
+            engine.restore(json.load(fh))
+        resumed = True
+        print(f"resumed from {args.snapshot_path} at tick {engine.tick} "
+              f"({len(engine.finished)} finished, "
+              f"{len(engine.scheduler)} queued)")
+    if not resumed:
+        for r in range(args.requests):
+            prompt = [(7 * r + i) % (cfg.vocab_size - 1) + 1
+                      for i in range(args.prompt_len)]
+            engine.submit(Request(
+                rid=r, prompt=prompt, priority=r % 2,
+                deadline_s=(args.deadline_ms / 1e3
+                            if args.deadline_ms is not None else None),
+                sampling=SamplingParams(temperature=args.temperature,
+                                        top_k=args.top_k, seed=args.seed + r,
+                                        max_new=args.max_new,
+                                        counter_offset=1000 * r)))
     t0 = time.time()
     done = engine.run(ticks=args.requests * (args.max_new + 6) + 20)
     dt = time.time() - t0
@@ -139,12 +173,18 @@ def serve_main(argv=None):
               f"heads_sharded={engine.heads_sharded} "
               f"slots/shard={args.batch // engine.dp}")
     ms = engine.metrics.summary()
+    mc = ms["counters"]
     print(f"metrics: ticks={ms['ticks']} "
           f"queue_depth_mean={ms['gauges'].get('queue_depth', {}).get('mean', 0):.2f} "
           f"occupancy_mean={ms['gauges'].get('batch_occupancy', {}).get('mean', 0):.2f} "
           f"ttft_p95={1e3 * ms['ttft_s']['p95']:.1f}ms "
           f"itl_p95={1e3 * ms['itl_s']['p95']:.1f}ms "
           f"sink_errors={ms['sink_errors']}")
+    print(f"fault: deadline_expired={int(mc.get('finish_deadline', 0))} "
+          f"shed={int(mc.get('finish_shed', 0))} "
+          f"recoveries={int(mc.get('recoveries', 0))} "
+          f"slow_windows={int(mc.get('slow_windows', 0))} "
+          f"degrade_events={int(mc.get('degrade_events', 0))}")
     engine.metrics.close()
 
 

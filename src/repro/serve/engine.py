@@ -30,6 +30,8 @@ single-device stream (tests/test_sharded_serve.py).
 from __future__ import annotations
 
 import functools
+import json
+import os
 import time
 from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Callable, List, Optional, Union
@@ -40,6 +42,7 @@ import numpy as np
 
 from repro.dist import ctx as dist_ctx
 from repro.dist import sharding as dist_sharding
+from repro.dist.fault_tolerance import StragglerWatchdog
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.numerics.policy import QuantPolicy
@@ -238,12 +241,15 @@ class Request:
 
     Lifecycle (DESIGN.md §6): ``queued`` → (scheduler admits) → ``active``
     → ``done`` with ``finish_reason`` ∈ {"eos", "stop", "length",
-    "preempted", "rejected"}.  ``sampling`` carries the per-request decode
-    controls; ``max_new`` is a convenience override of
+    "preempted", "rejected", "deadline", "shed"}.  ``sampling`` carries the
+    per-request decode controls; ``max_new`` is a convenience override of
     ``sampling.max_new`` kept from the original API.  ``stream`` (if set)
     is called as ``stream(request, token)`` for every emitted token.
     Timing fields are host-clock seconds: ``ttft`` = time-to-first-token
-    from submission, ``itl`` = inter-token latencies.
+    from submission, ``itl`` = inter-token latencies.  ``deadline_s`` is a
+    wall-clock budget from submission (DESIGN.md §12): the engine expires
+    the request — queued or running — once the budget elapses, checked
+    once per window drain with zero extra device dispatches.
     """
 
     rid: int
@@ -251,6 +257,7 @@ class Request:
     sampling: SamplingParams = field(default_factory=SamplingParams)
     priority: int = 0
     max_new: Optional[int] = None
+    deadline_s: Optional[float] = None
     stream: Optional[Callable[["Request", int], None]] = None
     out: List[int] = field(default_factory=list)
     done: bool = False
@@ -320,7 +327,17 @@ class Engine:
     time", §VII); per-request ``counter_offset`` shifts the int8-KV and
     sampling counters so concurrent requests walk independent pulse
     sequences and restarts replay identically (DESIGN.md §6).
+
+    Fault tolerance (DESIGN.md §12): per-request deadlines and a queue TTL
+    expire stale work once per window drain; ``queue_cap`` bounds the queue
+    with a shed policy ('reject-new' / 'evict-lowest-priority'); pool
+    pressure past ``degrade_high`` steps the decode window down to single
+    ticks and pauses prefix-cache insertion until pressure clears past
+    ``degrade_low``; :meth:`snapshot`/:meth:`restore` give bitwise crash
+    recovery (host truth serialized, device KV re-materialized by replay).
     """
+
+    SHED_POLICIES = ("reject-new", "evict-lowest-priority")
 
     def __init__(self, params, cfg: ModelConfig, batch: int, max_len: int,
                  policy: Optional[QuantPolicy] = None, frames=None,
@@ -333,11 +350,21 @@ class Engine:
                  mesh=None,
                  metrics: Union[None, str, Metrics] = None,
                  decode_ticks: int = 1,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 queue_cap: Optional[int] = None,
+                 shed_policy: str = "reject-new",
+                 queue_ttl_s: Optional[float] = None,
+                 injector=None,
+                 watchdog: Union[None, bool, StragglerWatchdog] = True,
+                 snapshot_path: Optional[str] = None,
+                 snapshot_every: int = 1,
+                 degrade_high: float = 0.90,
+                 degrade_low: float = 0.70):
         self.params, self.cfg, self.batch, self.max_len = params, cfg, batch, max_len
         policy = policy.resolved() if policy is not None else None
         self.policy = policy
         self.kv_quant = kv_quant
+        self._frames = frames
         if kv_layout not in ("ring", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if kv_layout == "paged" and not registry.supports_paged_kv(cfg):
@@ -355,6 +382,30 @@ class Engine:
                 raise ValueError("chunked prefill requires an attention-only "
                                  f"decoder; {cfg.name!r} is not one")
         self.prefill_chunk = prefill_chunk
+
+        # ---- fault-tolerance / overload knobs (DESIGN.md §12)
+        if shed_policy not in self.SHED_POLICIES:
+            raise ValueError(f"unknown shed_policy {shed_policy!r}; expected "
+                             f"one of {self.SHED_POLICIES}")
+        if queue_cap is not None and int(queue_cap) < 1:
+            raise ValueError(f"queue_cap must be >= 1 (or None), got {queue_cap}")
+        if not (0.0 < degrade_low <= degrade_high <= 1.0):
+            raise ValueError("need 0 < degrade_low <= degrade_high <= 1, got "
+                             f"({degrade_low}, {degrade_high})")
+        self.queue_cap = None if queue_cap is None else int(queue_cap)
+        self.shed_policy = shed_policy
+        self.queue_ttl_s = queue_ttl_s
+        self.injector = injector
+        self.watchdog = (StragglerWatchdog() if watchdog is True
+                         else (watchdog or None))
+        self.snapshot_path = snapshot_path
+        self.snapshot_every = max(1, int(snapshot_every))
+        self.degrade_high, self.degrade_low = degrade_high, degrade_low
+        self._degraded = False
+        self._now = time.time          # injectable clock (deadline tests)
+        self._steps_since_snap = 0
+        self._step_tick = 0            # tick at window start (injector key)
+        self._last_window_s = 0.0
 
         # ---- mesh layout (DESIGN.md §9): decode slots partition on 'data',
         # KV heads on 'model' (replicated fallback when the GQA head count
@@ -619,18 +670,51 @@ class Engine:
         self.metrics.reset()
 
     def submit(self, req: Request):
+        """Enqueue a request, applying overload admission control
+        (DESIGN.md §12) when ``queue_cap`` is set: a full queue either
+        sheds the newcomer ('reject-new') or evicts the queued request
+        with the lowest priority — latest arrival among ties — when the
+        newcomer outranks it ('evict-lowest-priority').  Preempted
+        requests re-enter through the scheduler's ``requeue`` and are
+        never shed: they hold pool blocks and their place in line."""
         req.state = "queued"
         if req.t_submit is None:
             req.t_submit = time.time()
+        if self.queue_cap is not None and \
+                len(self.scheduler) >= self.queue_cap:
+            victim = req
+            if self.shed_policy == "evict-lowest-priority":
+                lowest = min(self.scheduler.queued(),
+                             key=lambda r: (r.priority, -r._arrival))
+                if lowest.priority < req.priority:
+                    self.scheduler.pop(lowest)
+                    victim = lowest
+            self._finish_queued(victim, "shed")
+            if victim is req:
+                return
         self.scheduler.submit(req)
 
     def step(self) -> List[Request]:
-        """One engine tick: admit + batched-prefill, then decode every
-        active slot.  Returns the requests still active after the tick."""
+        """One engine window: expire deadlines, admit + batched-prefill,
+        decode every active slot, observe the window wall time, persist a
+        snapshot.  Returns the requests still active after the window.
+        The five ``injector`` crash points fire in this order (keyed on
+        the tick at window start); a crashed engine's host state is
+        mid-mutation — discard it and restore a fresh engine from the
+        snapshot (``run_serve_with_restarts``)."""
+        self._step_tick = self.tick
+        t0 = self._now()
+        self._maybe_fail("pre_admit")
+        self._expire_deadlines()
+        self._update_pressure()
         self._admit_and_prefill()
         if any(s is not None for s in self.slots):
             self._decode_tick()
+        self._observe_window(self._now() - t0)
+        self._maybe_fail("sink_write")
         self._record_tick_metrics()
+        self._maybe_fail("post_drain")
+        self._maybe_snapshot()
         return [s for s in self.slots if s is not None]
 
     def run(self, ticks: int) -> List[Request]:
@@ -641,7 +725,110 @@ class Engine:
             if not len(self.scheduler) and all(s is None for s in self.slots):
                 break
         self.metrics.flush()          # drain the tail of the gauge buffer
+        if self.snapshot_path is not None:
+            self.write_snapshot(self.snapshot_path)
         return self.finished
+
+    # ----------------------------------------- fault tolerance (DESIGN.md §12)
+
+    def _maybe_fail(self, phase: str):
+        """One injector crash point, keyed on the tick at window start so a
+        chaos test can name any phase of a specific window."""
+        if self.injector is not None:
+            self.injector.maybe_fail(self._step_tick, phase)
+
+    def _finish_queued(self, req: Request, reason: str):
+        """Retire a request that never reaches a slot this time (shed at
+        submission, or expired while queued).  A preempted block-holder
+        releases its blocks — expiry must not leak pool capacity."""
+        if self.pools and req.rid in self._rid_shard:
+            self._pool_of(req.rid).release(req.rid)
+            self._rid_shard.pop(req.rid, None)
+        req._resume = None
+        req.done, req.finish_reason, req.state = True, reason, "done"
+        self.finished.append(req)
+        self.metrics.inc("finished_requests")
+        self.metrics.inc(f"finish_{reason}")
+
+    def _expire_deadlines(self):
+        """Expire overdue requests, once per window drain, *before*
+        admission — a pure host-side scan over the queue and the slots
+        (zero device dispatches; a cancelled running slot reuses the
+        normal finish path, whose block release the engine already pays
+        on every finish).  Queued requests expire on their own
+        ``deadline_s`` or the engine-wide ``queue_ttl_s``; running ones
+        only on their ``deadline_s`` (TTL is a queue-staleness bound, not
+        an execution cap)."""
+        ttl = self.queue_ttl_s
+        now = self._now()
+
+        def age(r):
+            return now - (r.t_submit if r.t_submit is not None else now)
+
+        for req in self.scheduler.queued():
+            if (req.deadline_s is not None and age(req) > req.deadline_s) or \
+                    (ttl is not None and age(req) > ttl):
+                self.scheduler.pop(req)
+                self._finish_queued(req, "deadline")
+        for i, req in enumerate(self.slots):
+            if req is not None and req.deadline_s is not None \
+                    and age(req) > req.deadline_s:
+                self._finish(i, req, "deadline")
+
+    def _window_ticks(self) -> int:
+        """The decode window length this step: ``decode_ticks``, stepped
+        down to 1 while degraded (shorter windows = more frequent
+        admission/preemption decisions under block scarcity).  Safe to vary
+        freely — window length is bitwise stream-preserving (§11)."""
+        return 1 if self._degraded else self.decode_ticks
+
+    def _update_pressure(self):
+        """Graceful degradation under pool pressure (DESIGN.md §12), with
+        hysteresis so the engine does not flap at the watermark: when live
+        blocks cross ``degrade_high`` of capacity, decode windows drop to
+        single ticks and prefix-cache *insertion* pauses (finished blocks
+        return to the free list instead of lingering as cached copies —
+        sealing resumes where it left off once pressure clears below
+        ``degrade_low``).  Both effects are stream-preserving: window
+        length is bitwise-invariant (§11) and prefix hit vs cold is
+        stream-pinned (§6), so degradation never changes emitted tokens."""
+        if not self.pools:
+            return
+        share = sum(p.live_blocks for p in self.pools) / self.num_blocks
+        if not self._degraded and share >= self.degrade_high:
+            self._degraded = True
+            self.metrics.inc("degrade_events")
+            self.metrics.event("degraded", tick=self.tick, live_share=share)
+        elif self._degraded and share <= self.degrade_low:
+            self._degraded = False
+            self.metrics.event("restored", tick=self.tick, live_share=share)
+
+    def _observe_window(self, seconds: float):
+        """Feed the straggler watchdog one window wall time; flagged
+        windows bump the ``slow_windows`` counter and log an event through
+        the existing sink path."""
+        self._last_window_s = seconds
+        if self.watchdog is not None and \
+                self.watchdog.observe(self._step_tick, seconds):
+            self.metrics.inc("slow_windows")
+            self.metrics.event("slow_window", tick=self._step_tick,
+                               window_s=seconds)
+
+    def _maybe_snapshot(self):
+        if self.snapshot_path is None:
+            return
+        self._steps_since_snap += 1
+        if self._steps_since_snap >= self.snapshot_every:
+            self._steps_since_snap = 0
+            self.write_snapshot(self.snapshot_path)
+
+    def write_snapshot(self, path: str):
+        """Atomically persist :meth:`snapshot` as JSON (tmp + ``os.replace``
+        — a crash mid-write can never corrupt the previous snapshot)."""
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(self.snapshot(), fh)
+        os.replace(tmp, path)
 
     # ------------------------------------------------------------ internals
 
@@ -661,6 +848,8 @@ class Engine:
             decode_tokens=self.stats["decode_tokens"],
             prefix_hit_tokens=self.stats["prefix_hit_tokens"],
             preemptions=self.stats["preemptions"],
+            window_s=self._last_window_s,
+            degraded=int(self._degraded),
         )
         if self.pools:
             ps = self.pool_stats()
@@ -912,8 +1101,10 @@ class Engine:
         """Publish every full block below ``n_tokens`` into the prefix
         cache (chained-hash order).  Callers only invoke this after the
         device writes for those blocks were dispatched — a same-wave hit
-        would race the scatter."""
-        if not self._prefix_enabled:
+        would race the scatter.  Paused while degraded (DESIGN.md §12):
+        ``req._sealed`` does not advance, so sealing resumes from the same
+        block once pressure clears."""
+        if not self._prefix_enabled or self._degraded:
             return
         bs = self.block_size
         pool = self._pool_of(req.rid)
@@ -1145,6 +1336,7 @@ class Engine:
         and ``max_len`` is a hard stop ('length' — the paged pool has no
         ring wrap to overwrite).  Slots still mid-prefill are skipped: they
         decode nothing and their blocks are already allocated."""
+        self._maybe_fail("pool_alloc")
         bs = self.block_size
         for i, req in [(i, s) for i, s in enumerate(self.slots)
                        if s is not None and s.state == "active"]:
@@ -1154,7 +1346,7 @@ class Engine:
                 self._finish(i, req, "length")
                 continue
             self._seal_full_blocks(req, p)
-            w = min(self.decode_ticks, self.max_len - p,
+            w = min(self._window_ticks(), self.max_len - p,
                     max(1, req.effective_max_new() - len(req.out)))
             pre = len(pool.table(req.rid))
             need = (p + w - 1) // bs + 1
@@ -1222,7 +1414,7 @@ class Engine:
         arrays so finish detection never syncs mid-window; the drain walks
         each slot's column up to its first stop hit and re-runs the exact
         per-token finish logic of the one-tick engine (``_emit``)."""
-        n = self.decode_ticks
+        n = self._window_ticks()
         self._paged_cap = {}
         if self.kv_layout == "paged":
             self._pre_decode_paged()
@@ -1266,6 +1458,9 @@ class Engine:
             self._dev["counters"], jnp.asarray(alive),
             jnp.asarray(budgets), jnp.asarray(stops))
         toks = np.asarray(toks_dev)           # (n, B) — the window drain
+        # crash point between the device window and the host drain: the
+        # window's tokens are lost with the process, never half-emitted
+        self._maybe_fail("mid_window")
         dt = time.time() - t0
         # the fused window advanced counters and produced the next input
         # token on device — keep those copies resident (no re-upload next
@@ -1337,3 +1532,299 @@ class Engine:
             # LRU prefix cache until allocation pressure evicts them
             self._seal_full_blocks(req, int(self._slot_pos[i]))
             self._release_slot_blocks(i, req)
+
+    # --------------------------------- snapshot / restore (DESIGN.md §12)
+
+    @staticmethod
+    def _req_to_state(req: Request) -> dict:
+        sp = req.sampling
+        return {
+            "rid": req.rid, "prompt": list(req.prompt),
+            "out": list(req.out), "priority": req.priority,
+            "max_new": req.max_new, "deadline_s": req.deadline_s,
+            "done": req.done, "finish_reason": req.finish_reason,
+            "state": req.state,
+            "t_submit": req.t_submit, "t_admit": req.t_admit,
+            "t_first": req.t_first, "t_last": req.t_last,
+            "itl": list(req.itl),
+            "arrival": getattr(req, "_arrival", None),
+            "resume": req._resume, "sealed": req._sealed,
+            "pf_pos": req._pf_pos,
+            "sampling": {"temperature": sp.temperature, "top_k": sp.top_k,
+                         "seed": sp.seed, "max_new": sp.max_new,
+                         "eos_id": sp.eos_id,
+                         "stop_ids": list(sp.stop_ids),
+                         "counter_offset": sp.counter_offset},
+        }
+
+    @staticmethod
+    def _req_from_state(st: dict,
+                        streams: Optional[dict] = None) -> Request:
+        sps = st["sampling"]
+        req = Request(
+            rid=st["rid"], prompt=list(st["prompt"]),
+            sampling=SamplingParams(
+                temperature=sps["temperature"], top_k=sps["top_k"],
+                seed=sps["seed"], max_new=sps["max_new"],
+                eos_id=sps["eos_id"], stop_ids=tuple(sps["stop_ids"]),
+                counter_offset=sps["counter_offset"]),
+            priority=st["priority"], max_new=st["max_new"],
+            deadline_s=st["deadline_s"])
+        req.out = list(st["out"])
+        req.done, req.finish_reason = st["done"], st["finish_reason"]
+        req.state = st["state"]
+        req.t_submit, req.t_admit = st["t_submit"], st["t_admit"]
+        req.t_first, req.t_last = st["t_first"], st["t_last"]
+        req.itl = list(st["itl"])
+        if st["arrival"] is not None:
+            req._arrival = st["arrival"]
+        req._resume = st["resume"]
+        req._sealed, req._pf_pos = st["sealed"], st["pf_pos"]
+        if streams is not None:
+            req.stream = streams.get(req.rid)
+        return req
+
+    def snapshot(self) -> dict:
+        """Serialize **all host-side truth** as one JSON-able dict
+        (DESIGN.md §12): queue + per-slot request states (tokens emitted,
+        ``_pf_pos`` prefill progress, preempt-resume records), pool block
+        tables / refcounts / prefix index, the per-slot sampler mirrors
+        (seed / offset / counter / last token), stats and metrics.  Device
+        state is deliberately absent — it is a pure function of this host
+        truth (dither KV codes are position-pure, the sampler is a
+        stateless hash), which is exactly what :meth:`restore` exploits.
+        Streaming callbacks cannot be serialized; ``restore(...,
+        streams={rid: cb})`` re-attaches them."""
+        return {
+            "version": 1,
+            "layout": {
+                "kv_layout": self.kv_layout, "batch": self.batch,
+                "max_len": self.max_len, "kv_quant": bool(self.kv_quant),
+                "decode_ticks": self.decode_ticks,
+                "prefill_chunk": self.prefill_chunk,
+                "block_size": getattr(self, "block_size", None),
+                "num_blocks": getattr(self, "num_blocks", None),
+                "dp": self.dp, "tp": self.tp,
+            },
+            "tick": self.tick,
+            "degraded": self._degraded,
+            "scheduler": self.scheduler.snapshot(),
+            "queue": [self._req_to_state(r) for r in self.scheduler.queued()],
+            "slots": [None if s is None else self._req_to_state(s)
+                      for s in self.slots],
+            "finished": [self._req_to_state(r) for r in self.finished],
+            "slot_state": {
+                "last_token": [int(x) for x in self._last_token],
+                "slot_pos": [int(x) for x in self._slot_pos],
+                "temps": [float(x) for x in self._temps],
+                "topks": [int(x) for x in self._topks],
+                "seeds": [int(x) for x in self._seeds],
+                "offsets": [int(x) for x in self._offsets],
+                "counters": [int(x) for x in self._counters],
+            },
+            "pools": [p.snapshot() for p in self.pools],
+            "rid_shard": {str(r): s for r, s in self._rid_shard.items()}
+                         if self.pools else {},
+            "stats": dict(self.stats),
+            "metrics": self.metrics.snapshot(),
+        }
+
+    def restore(self, snap: dict, streams: Optional[dict] = None) -> "Engine":
+        """Adopt a :meth:`snapshot` and re-materialize the device KV so the
+        engine continues **bitwise** where the snapshot was taken
+        (policy-free / deterministic-scheme serving — the §12 contract,
+        tests/test_serve_fault.py).  Works on a freshly constructed engine
+        of the same layout *or* in place on a crashed one (every mutable
+        field is overwritten; the device cache is rebuilt from scratch).
+
+        Host truth is copied back verbatim; then :meth:`_replay_device_state`
+        rebuilds each occupied slot's KV: the written prompt region through
+        the engine's own prefill path (position-pure codes ⇒ the original
+        prefill's bits) and the generated region by **teacher-forced decode
+        replay** — each committed token re-runs the fused decode-step math
+        with sampling discarded, so the decode-written KV is bit-identical
+        too.  Unheld prefix-cache blocks are dropped (see
+        ``KVPool.restore``); free capacity is unchanged."""
+        lay = snap["layout"]
+        mine = {
+            "kv_layout": self.kv_layout, "batch": self.batch,
+            "max_len": self.max_len, "kv_quant": bool(self.kv_quant),
+            "decode_ticks": self.decode_ticks,
+            "prefill_chunk": self.prefill_chunk,
+            "block_size": getattr(self, "block_size", None),
+            "num_blocks": getattr(self, "num_blocks", None),
+            "dp": self.dp, "tp": self.tp,
+        }
+        diff = {k for k in mine if lay.get(k) != mine[k]}
+        if diff:
+            raise ValueError("snapshot layout does not match this engine: "
+                             + ", ".join(f"{k}={lay.get(k)!r}!={mine[k]!r}"
+                                         for k in sorted(diff)))
+        self.tick = int(snap["tick"])
+        self._degraded = bool(snap["degraded"])
+        queue = [self._req_from_state(st, streams) for st in snap["queue"]]
+        self.scheduler.restore(snap["scheduler"], queue)
+        self.slots = [None if st is None else self._req_from_state(st, streams)
+                      for st in snap["slots"]]
+        self.finished = [self._req_from_state(st, streams)
+                         for st in snap["finished"]]
+        ss = snap["slot_state"]
+        self._last_token = np.asarray(ss["last_token"], np.int32)
+        self._slot_pos = np.asarray(ss["slot_pos"], np.int64)
+        self._temps = np.asarray(ss["temps"], np.float32)
+        self._topks = np.asarray(ss["topks"], np.int32)
+        self._seeds = np.asarray(ss["seeds"], np.int32)
+        self._offsets = np.asarray(ss["offsets"], np.int32)
+        self._counters = np.asarray(ss["counters"], np.int32)
+        self.stats = dict(snap["stats"])
+        self.metrics.restore(snap["metrics"])
+        self._paged_cap = {}
+        self._steps_since_snap = 0
+        if self.pools:
+            for pool, ps in zip(self.pools, snap["pools"]):
+                pool.restore(ps)
+            self._rid_shard = {int(r): int(s)
+                               for r, s in snap["rid_shard"].items()}
+        # fresh device cache, then deterministic re-materialization of
+        # every occupied slot's KV (and of the block-table mirror)
+        if self.kv_layout == "paged":
+            self.cache = registry.make_cache(
+                self.params, self.cfg, self.batch, self.max_len,
+                frames=self._frames, policy=self.policy,
+                kv_quant=self.kv_quant, kv_layout="paged",
+                block_size=self.block_size, num_blocks=self._nb_local,
+                data_shards=self.dp)
+            self._bt = np.full((self.batch, self.nbmax), self._trash,
+                               np.int32)
+            for i, req in enumerate(self.slots):
+                if req is not None:
+                    self._bt[i, :len(self._pool_of(req.rid).table(req.rid))] \
+                        = self._pool_of(req.rid).table(req.rid)
+            self._bt_dirty = True
+        else:
+            self.cache = registry.make_cache(
+                self.params, self.cfg, self.batch, self.max_len,
+                frames=self._frames, policy=self.policy,
+                kv_quant=self.kv_quant)
+        self._dev_dirty = True
+        self._replay_device_state()
+        self._dev_dirty = True
+        self.metrics.inc("recoveries")
+        return self
+
+    def _replay_fn_for(self):
+        """The jitted teacher-forced replay step (compiled on first use):
+        the fused decode tick's model math with sampling stripped — the
+        input token is *given*, not sampled — and the same inert-row
+        freezing (position pinned, paged rows masked to the trash block)."""
+        fn = getattr(self, "_replay_fn", None)
+        if fn is not None:
+            return fn
+        cfg_l, policy = self._cfg_local, self.policy
+        paged = self.kv_layout == "paged"
+
+        def replay_step(params, token, cache, kv_offset, counter, alive):
+            pos0 = cache["pos"]
+            step_cache = cache
+            if paged:
+                leaf = (jax.tree.leaves(cache["layers"][0])[0]
+                        if cache["layers"]
+                        else jax.tree.leaves(cache["remainder"][0])[0])
+                nbp = leaf.shape[1] if cache["layers"] else leaf.shape[0]
+                step_cache = dict(cache)
+                step_cache["block_tables"] = jnp.where(
+                    alive[:, None], cache["block_tables"],
+                    jnp.int32(nbp - 1))
+            _, new_cache = registry.apply_decode(
+                params, cfg_l, token, step_cache, policy=policy,
+                counter=counter, kv_offset=kv_offset)
+            new_cache["pos"] = jnp.where(alive, new_cache["pos"], pos0)
+            if paged:
+                new_cache["block_tables"] = cache["block_tables"]
+            return new_cache
+
+        if self.mesh is None:
+            fn = jax.jit(replay_step, donate_argnums=(2,))
+        else:
+            P = jax.sharding.PartitionSpec
+            row, sc = P("data"), P()
+            fn = jax.jit(self._mesh_wrap(
+                replay_step,
+                (self._pspec, row, self._cspec, row, sc, row),
+                self._cspec), donate_argnums=(2,))
+        self._replay_fn = fn
+        return fn
+
+    def _replay_device_state(self):
+        """Re-materialize the device KV for every occupied slot, bitwise.
+
+        Two regions per slot, split at the prompt boundary: positions the
+        original run wrote via *prefill* are re-prefilled through the same
+        batched prefill path (dither codes are position-pure, so the bits
+        match); positions written via *decode* are replayed teacher-forced
+        — one decode step per committed token, inert rows frozen — which
+        reproduces the decode-written bits exactly (re-prefilling them
+        instead would only agree to rounding: the prefill≡decode
+        first-layer-only divergence tests/test_serve.py pins).  Slots
+        restored mid-reprefill (``_resume['reprefill']`` histories) treat
+        prompt + generated as one prefill region, matching what the
+        original engine would write on re-admission."""
+        occupied = [(i, s) for i, s in enumerate(self.slots)
+                    if s is not None]
+        if self.kv_layout == "paged":
+            self._sync_block_tables()
+        if not occupied:
+            return
+        prompt_part, gen_tokens = {}, {}
+        for i, req in occupied:
+            written = int(self._slot_pos[i])
+            seq = self._tokens_written(req)        # prompt (+ out: reprefill)
+            prompt_len = len(list(req.prompt) or [1])
+            if req.state == "prefilling":
+                # mid-prefill: everything written so far came via prefill
+                prompt_part[i], gen_tokens[i] = seq[:written], []
+            else:
+                p = min(written, prompt_len)
+                prompt_part[i] = seq[:p]
+                gen_tokens[i] = list(req.out)[:written - p]
+
+        lens = np.zeros((self.batch,), np.int32)
+        for i, _ in occupied:
+            lens[i] = len(prompt_part[i])
+        if lens.max() > 0:
+            s_bucket = _bucket(int(lens.max()))
+            toks = np.zeros((self.batch, s_bucket), np.int32)
+            for i, _ in occupied:
+                toks[i, :lens[i]] = prompt_part[i]
+            self._dev_dirty = True
+            self._refresh_device_state()
+            if self.kv_layout == "paged":
+                starts = np.zeros((self.batch,), np.int32)
+                bt_dev = jnp.asarray(self._bt)
+                self._bt_dirty = False
+                _, self.cache = self._paged_prefill_call(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens),
+                    jnp.asarray(starts), bt_dev, self.cache,
+                    self._dev["offsets"], self.tick, prefix_blocks=0)
+            else:
+                _, pf_cache = self._prefill(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens),
+                    self._dev["offsets"], self.tick)
+                self.cache = self._merge(self.cache, pf_cache,
+                                         jnp.asarray(lens > 0))
+
+        depth = max(len(g) for g in gen_tokens.values()) \
+            if gen_tokens else 0
+        if depth:
+            replay = self._replay_fn_for()
+            for t in range(depth):
+                token = np.zeros((self.batch,), np.int32)
+                alive = np.zeros((self.batch,), bool)
+                for i, _ in occupied:
+                    g = gen_tokens[i]
+                    if t < len(g):
+                        token[i], alive[i] = g[t], True
+                self.cache = replay(
+                    self.params, jnp.asarray(token), self.cache,
+                    jnp.asarray(self._offsets), self.tick,
+                    jnp.asarray(alive))

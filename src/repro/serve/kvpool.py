@@ -263,3 +263,64 @@ class KVPool:
                 self._cached.pop(phys, None)
                 self._free.append(phys)
         self._chain.pop(rid, None)
+
+    # --------------------------------------------------------- snapshot/restore
+
+    def snapshot(self) -> dict:
+        """JSON-able copy of the whole allocator state (DESIGN.md §12):
+        free list, refcounts, per-block hashes, the LRU cache order, the
+        prefix-lookup index, per-request tables/chains and the stats
+        counters.  Chain hashes are hashes of int tuples, which Python
+        computes deterministically (PYTHONHASHSEED only perturbs str/bytes),
+        so a snapshot restored in a *new process* still matches prefixes."""
+        return {
+            "num_blocks": self.num_blocks,
+            "block_size": self.block_size,
+            "prefix_cache": self.prefix_cache,
+            "free": list(self._free),
+            "ref": list(self._ref),
+            "hash": list(self._hash),
+            "cached": list(self._cached),          # LRU order, oldest first
+            "lookup": [[h, phys] for h, phys in self._lookup.items()],
+            "tables": {str(rid): list(t) for rid, t in self._tables.items()},
+            "chain": {str(rid): h for rid, h in self._chain.items()},
+            "stats": dict(self.stats),
+        }
+
+    def restore(self, snap: dict, *, drop_unheld: bool = True) -> None:
+        """Rebuild allocator state from :meth:`snapshot`.
+
+        ``drop_unheld=True`` (the crash-recovery default) releases every
+        refcount-0 prefix-cached block to the free list and forgets its
+        hash: the engine's replay re-materialises device contents only for
+        blocks *held by live requests* (their holders rewrite bit-identical
+        KV), while an unheld cached block's tokens are not recorded
+        anywhere, so its device bits cannot be rebuilt and it must not be
+        matchable.  Held blocks keep their hash/index entries — sharing
+        them stays sound because every holder's replay writes the same
+        position-pure bits.  ``free_blocks`` is unchanged either way
+        (cached blocks were already evictable), so admission capacity —
+        and therefore scheduling — is unaffected."""
+        if (snap["num_blocks"] != self.num_blocks
+                or snap["block_size"] != self.block_size):
+            raise ValueError(
+                f"pool snapshot shape ({snap['num_blocks']}×"
+                f"{snap['block_size']}) does not match this pool "
+                f"({self.num_blocks}×{self.block_size})")
+        self._free = [int(x) for x in snap["free"]]
+        self._ref = [int(x) for x in snap["ref"]]
+        self._hash = [None if h is None else int(h) for h in snap["hash"]]
+        self._cached = OrderedDict((int(p), None) for p in snap["cached"])
+        self._lookup = {int(h): int(p) for h, p in snap["lookup"]}
+        self._tables = {int(r): [int(b) for b in t]
+                        for r, t in snap["tables"].items()}
+        self._chain = {int(r): int(h) for r, h in snap["chain"].items()}
+        self.stats = {k: int(v) for k, v in snap["stats"].items()}
+        if drop_unheld:
+            for phys in list(self._cached):
+                h = self._hash[phys]
+                if h is not None and self._lookup.get(h) == phys:
+                    del self._lookup[h]
+                self._hash[phys] = None
+                self._free.append(phys)
+            self._cached.clear()

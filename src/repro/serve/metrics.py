@@ -118,6 +118,23 @@ class Histogram:
                 "p50": self.percentile(50), "p95": self.percentile(95),
                 "p99": self.percentile(99), "max": self.max}
 
+    def state(self) -> dict:
+        """JSON-able full state (exact counts, not the percentile summary) —
+        engine snapshots carry this so a restored engine's histograms keep
+        accumulating where the crashed one stopped (DESIGN.md §12)."""
+        return {"lo": self.lo, "hi": self.hi, "n_buckets": self.n_buckets,
+                "counts": list(self.counts), "count": self.count,
+                "sum": self.sum, "max": self.max}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "Histogram":
+        h = cls(state["lo"], state["hi"], state["n_buckets"])
+        h.counts = [int(c) for c in state["counts"]]
+        h.count = int(state["count"])
+        h.sum = float(state["sum"])
+        h.max = float(state["max"])
+        return h
+
 
 # --------------------------------------------------------------------- sinks
 
@@ -260,6 +277,17 @@ class Metrics:
         if len(self._buffer) >= self.flush_every:
             self.flush()
 
+    def event(self, kind: str, **fields) -> None:
+        """Buffer one out-of-band event record for the sink (same stream as
+        the tick records, distinguished by an ``event`` key) — the engine
+        logs straggler windows and degradation transitions this way
+        (DESIGN.md §12) without inventing a second sink path."""
+        rec = {"t": time.time(), "event": kind}
+        rec.update(fields)
+        self._buffer.append(rec)
+        if len(self._buffer) >= self.flush_every:
+            self.flush()
+
     # -- sink plumbing
 
     def flush(self) -> None:
@@ -282,6 +310,35 @@ class Metrics:
                       "disabling sink — serving continues without streaming",
                       file=sys.stderr)
             self.sink = NullSink()
+
+    # -- snapshot / restore (crash recovery, DESIGN.md §12)
+
+    def snapshot(self) -> dict:
+        """JSON-able aggregate state: counters, tick count, gauge
+        aggregates and full histogram states.  The sink buffer is *not*
+        captured — buffered-but-unflushed records are exactly the
+        observability loss the crash-isolation contract already permits."""
+        return {
+            "counters": dict(self.counters),
+            "ticks": self.ticks,
+            "gauge_sum": dict(self._gauge_sum),
+            "gauge_last": dict(self._gauge_last),
+            "gauge_n": dict(self._gauge_n),
+            "ttft_s": self.ttft_s.state(),
+            "itl_s": self.itl_s.state(),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Resume accumulation from a :meth:`snapshot` (sink and
+        ``flush_every`` keep this instance's configuration)."""
+        self.counters = {k: v for k, v in snap["counters"].items()}
+        self.ticks = int(snap["ticks"])
+        self._gauge_sum = {k: float(v) for k, v in snap["gauge_sum"].items()}
+        self._gauge_last = dict(snap["gauge_last"])
+        self._gauge_n = {k: int(v) for k, v in snap["gauge_n"].items()}
+        self.ttft_s = Histogram.from_state(snap["ttft_s"])
+        self.itl_s = Histogram.from_state(snap["itl_s"])
+        self._buffer = []
 
     # -- reading
 

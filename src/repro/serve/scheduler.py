@@ -92,3 +92,24 @@ class Scheduler:
         self._sort()
         picked, self._queue = self._queue[:n], self._queue[n:]
         return picked
+
+    # --------------------------------------------------- snapshot / restore
+
+    def snapshot(self) -> dict:
+        """The scheduler's own serializable state (DESIGN.md §12).  The
+        queued requests themselves are engine objects — the engine
+        serializes them (with their ``_arrival`` stamps) and hands them
+        back through :meth:`restore`."""
+        return {"policy": self.policy, "arrivals": self._arrivals}
+
+    def restore(self, snap: dict, queue: List[Any]) -> None:
+        """Adopt a snapshot: the arrival counter continues where it
+        stopped (post-restore submissions sort after everything restored)
+        and ``queue`` — requests carrying their original ``_arrival``
+        stamps — becomes the queue, re-sorted lazily as usual."""
+        if snap["policy"] != self.policy:
+            raise ValueError(f"snapshot policy {snap['policy']!r} does not "
+                             f"match this scheduler ({self.policy!r})")
+        self._arrivals = int(snap["arrivals"])
+        self._queue = list(queue)
+        self._unsorted = True

@@ -106,7 +106,7 @@ def _check_invariants(eng, reqs):
     for r in reqs:
         assert r.done and r.state == "done"
         assert r.finish_reason in {"eos", "stop", "length", "preempted",
-                                   "rejected"}
+                                   "rejected", "deadline", "shed"}
         budget = r.effective_max_new()
         assert len(r.out) <= budget
         if r.finish_reason == "eos":
@@ -118,6 +118,13 @@ def _check_invariants(eng, reqs):
                     or len(r.prompt) + len(r.out) >= MAX_LEN)
         elif r.finish_reason == "rejected":
             assert r.out == [] and r.t_first is None
+        elif r.finish_reason in ("shed", "deadline"):
+            # shed/expired before ever reaching a slot ⇒ nothing emitted;
+            # a preempted block-holder shed/expired from the queue (or a
+            # running slot cancelled by its deadline) keeps what it
+            # generated — either way the stream obeys the budget above
+            if r.t_first is None:
+                assert r.out == []
         if r.out:
             assert all(v >= 0.0 for v in r.itl)
             assert len(r.itl) == len(r.out) - 1
@@ -149,6 +156,36 @@ def test_engine_invariants_hold_for_any_workload(name, draws):
     reqs = _submit(eng, draws)
     eng.run(ticks=600)
     _check_invariants(eng, reqs)
+
+
+@pytest.mark.parametrize("name", ["ring-window", "paged-plain"])
+@settings(max_examples=6, deadline=None)
+@given(draws=st.lists(req_st, min_size=2, max_size=6),
+       expire=st.lists(st.booleans(), min_size=6, max_size=6),
+       cap=st.integers(1, 3),
+       policy=st.sampled_from(["reject-new", "evict-lowest-priority"]))
+def test_invariants_hold_under_shedding_and_deadlines(name, draws, expire,
+                                                      cap, policy):
+    """The bounded queue and deadline expiry keep every invariant: shed and
+    expired requests still land in ``finished`` with consistent metrics,
+    nothing leaks, and survivors keep FCFS-within-priority.  A zero
+    deadline expires deterministically (the expiry scan runs before
+    admission), so which requests reach a slot stays reproducible."""
+    eng = _engine(name)
+    eng.queue_cap, eng.shed_policy = cap, policy
+    try:
+        reqs = []
+        for k, d in enumerate(draws):
+            reqs.extend(_submit(eng, [d]))
+            if expire[k % len(expire)]:
+                reqs[-1].deadline_s = 0.0
+        eng.run(ticks=600)
+        _check_invariants(eng, reqs)
+        for r in reqs:
+            if r.deadline_s == 0.0 and r.finish_reason != "shed":
+                assert r.finish_reason == "deadline" and r.out == []
+    finally:
+        eng.queue_cap, eng.shed_policy = None, "reject-new"
 
 
 @settings(max_examples=6, deadline=None)

@@ -15,7 +15,7 @@ ARTIFACTS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                              "artifacts")
 
 
-def _serve_artifact(decode_tok_s=1000.0, calib_us=100.0, version=6):
+def _serve_artifact(decode_tok_s=1000.0, calib_us=100.0, version=7):
     return {
         "version": version,
         "calibration": {"probe": "matmul_f32_256", "repeats": 5,
@@ -36,6 +36,7 @@ def _serve_artifact(decode_tok_s=1000.0, calib_us=100.0, version=6):
                              "p99": 21.0, "max": 22.0},
             "itl_hist_ms": {"count": 9, "p50": 5.0, "p95": 9.0,
                             "p99": 9.5, "max": 10.0},
+            "deadline_expired": 0, "shed": 0, "recoveries": 0,
         }],
     }
 
@@ -162,6 +163,18 @@ def test_exact_and_bool_metrics_have_no_band(tmp_path):
     _write(cand_d, "kernel_bench.json", k_cand)
     assert any(f.metric == "codes_exact_vs_ref"
                for f in _fails(gate_directories(ref_d, cand_d)))
+
+
+def test_fault_counters_gate_exactly(tmp_path):
+    """Schema v7: the fault-tolerance counters are exact metrics — the
+    bench workload never expires, sheds or restarts, so a single stray
+    count on the benchmark path fails the gate."""
+    cand = _serve_artifact()
+    cand["results"][0]["shed"] = 1
+    cand["results"][0]["recoveries"] = 2
+    ref, cand_dir = _dirs(tmp_path, _serve_artifact(), cand)
+    bad = {f.metric for f in _fails(gate_directories(ref, cand_dir))}
+    assert {"shed", "recoveries"} <= bad
 
 
 def test_lost_row_and_missing_file_fail(tmp_path):

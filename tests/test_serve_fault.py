@@ -1,0 +1,522 @@
+"""Serve-path fault tolerance: deadlines, shedding, degradation, and
+bitwise crash recovery (DESIGN.md §12).
+
+The load-bearing pin is the **chaos recovery contract**: an engine crashed
+by the serve-phase ``FailureInjector`` at any of its five crash points and
+restored from its snapshot emits token streams *bitwise-identical* to an
+uninterrupted run — for ring and paged layouts × bf16/int8 KV × greedy and
+temperature sampling — with zero slot/block leaks and FCFS-within-priority
+preserved across the restart.  This only works because the paper's
+determinism carries to serving: dither KV codes are a pure function of
+(value, absolute position + offset, element index) and the sampler is a
+stateless hash of (seed, counter), so re-prefilling the prompt region and
+teacher-forced-replaying the generated region rebuilds the device cache
+bit-for-bit.  A stochastic-rounded cache has no such replay.
+
+Engines are cached per configuration (jit closures are per-Engine);
+``Engine.restore`` works in place, so the crash tests restore into the
+cached engine rather than recompiling a fresh one.  The
+``run_serve_with_restarts`` test builds genuinely fresh engines to prove
+the cross-process recovery shape.  Hypothesis parts skip cleanly when
+hypothesis is absent (tests/_hypothesis_compat.py).
+"""
+
+import itertools
+import json
+import time
+
+import jax
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.dist.fault_tolerance import (FailureInjector, InjectedFailure,
+                                        SERVE_PHASES, StragglerWatchdog,
+                                        run_serve_with_restarts)
+from repro.models import registry
+from repro.serve.engine import Engine, Request
+from repro.serve.sampling import SamplingParams
+
+CFG = get_config("smollm_135m").reduced()
+PARAMS = registry.init_model(jax.random.PRNGKey(0), CFG)
+
+MAX_LEN = 32
+EOS = 11
+
+# the acceptance matrix: ring/paged × bf16/int8, exercised below at both
+# greedy and temperature sampling
+CONFIGS = {
+    "ring-bf16": dict(decode_ticks=2),
+    "ring-int8": dict(decode_ticks=2, kv_quant=True),
+    "paged-bf16": dict(kv_layout="paged", block_size=8, decode_ticks=2),
+    "paged-int8": dict(kv_layout="paged", block_size=8, decode_ticks=2,
+                       kv_quant=True),
+}
+_ENGINES = {}
+_RID = itertools.count()
+
+
+def _engine(name):
+    if name not in _ENGINES:
+        _ENGINES[name] = Engine(PARAMS, CFG, batch=2, max_len=MAX_LEN,
+                                scheduler="priority", **CONFIGS[name])
+    eng = _ENGINES[name]
+    eng.finished = []
+    eng.injector = None
+    eng.snapshot_path = None
+    eng.reset_stats()
+    return eng
+
+
+def _request(rid, key=None, temperature=0.0, max_new=5, prompt_len=None,
+             **kw):
+    """Build a request whose *content* (prompt, seed, priority, counter
+    offset) is a pure function of ``key`` — parity tests run the same
+    keyed workload under different rid ranges on a shared engine."""
+    key = rid if key is None else key
+    prompt_len = 4 + key % 3 if prompt_len is None else prompt_len
+    prompt = [(7 * key + i) % (CFG.vocab_size - 1) + 1
+              for i in range(prompt_len)]
+    return Request(rid=rid, prompt=prompt, priority=key % 2,
+                   sampling=SamplingParams(temperature=temperature, seed=key,
+                                           max_new=max_new, eos_id=EOS,
+                                           counter_offset=100 * key), **kw)
+
+
+def _streams(engine):
+    return {r.rid: (list(r.out), r.finish_reason) for r in engine.finished}
+
+
+def _assert_no_leaks(engine):
+    assert all(s is None for s in engine.slots)
+    assert len(engine.scheduler) == 0
+    if engine.pools:
+        assert sum(p.live_blocks for p in engine.pools) == 0
+
+
+def _assert_fcfs_within_priority(reqs):
+    for prio in {r.priority for r in reqs}:
+        admits = [r.t_admit for r in reqs
+                  if r.priority == prio and r.t_admit is not None]
+        assert admits == sorted(admits)
+
+
+# -------------------------------------------------------------- deadlines
+
+
+def test_deadline_expires_queued_request():
+    """A queued request past its deadline finishes 'deadline' without ever
+    touching a slot; the expiry scan runs before admission, so a zero
+    deadline is deterministic."""
+    eng = _engine("ring-bf16")
+    eng.submit(_request(next(_RID), max_new=6))
+    eng.submit(_request(next(_RID), max_new=6))
+    expired = _request(next(_RID), deadline_s=0.0)
+    eng.submit(expired)
+    eng.run(200)
+    assert expired.finish_reason == "deadline"
+    assert expired.out == [] and expired.t_admit is None
+    assert eng.metrics.counters["finish_deadline"] == 1
+    _assert_no_leaks(eng)
+
+
+def test_queue_ttl_expires_stale_queue():
+    eng = Engine(PARAMS, CFG, batch=1, max_len=MAX_LEN, queue_ttl_s=30.0)
+    eng.submit(_request(0, max_new=4))
+    eng.submit(_request(1, max_new=4))
+    eng.step()                                  # admits rid 0; rid 1 queued
+    eng._now = lambda: time.time() + 60.0       # everything is now stale
+    done = {r.rid: r for r in eng.run(200)}
+    assert done[1].finish_reason == "deadline" and done[1].out == []
+    # the running request has no deadline_s — TTL only bounds queue wait
+    assert done[0].finish_reason == "length"
+    _assert_no_leaks(eng)
+
+
+def test_deadline_cancels_running_request_and_releases_blocks():
+    eng = _engine("paged-bf16")
+    victim = _request(next(_RID), deadline_s=5.0, max_new=30)
+    eng.submit(victim)
+    eng.submit(_request(next(_RID), max_new=4))
+    for _ in range(2):
+        eng.step()
+    assert victim.state == "active" and victim.out
+    clock = eng._now
+    try:
+        eng._now = lambda: time.time() + 100.0
+        eng.run(200)
+    finally:
+        eng._now = clock
+    assert victim.finish_reason == "deadline" and len(victim.out) > 0
+    assert len(victim.out) < 30                 # cancelled, not drained
+    _assert_no_leaks(eng)
+
+
+# --------------------------------------------------------------- shedding
+
+
+def test_shed_reject_new_bounds_the_queue():
+    eng = Engine(PARAMS, CFG, batch=1, max_len=MAX_LEN, queue_cap=2)
+    eng.submit(_request(0, max_new=6))
+    eng.step()                                  # rid 0 occupies the slot
+    kept = [_request(1), _request(2)]
+    for r in kept:
+        eng.submit(r)
+    shed = _request(3)
+    eng.submit(shed)
+    assert shed.done and shed.finish_reason == "shed" and shed.out == []
+    assert shed in eng.finished
+    assert len(eng.scheduler) == 2
+    eng.run(300)
+    assert all(r.finish_reason in ("length", "eos") for r in kept)
+    assert eng.metrics.counters["finish_shed"] == 1
+    assert eng.metrics.counters["finished_requests"] == 4
+    _assert_no_leaks(eng)
+
+
+def test_shed_evict_lowest_priority_prefers_newcomer_rank():
+    eng = Engine(PARAMS, CFG, batch=1, max_len=MAX_LEN, queue_cap=2,
+                 shed_policy="evict-lowest-priority", scheduler="priority")
+    eng.submit(_request(0, max_new=6))
+    eng.step()
+    low_old = _request(1)
+    low_new = _request(2)
+    for r in (low_old, low_new):
+        r.priority = 0
+        eng.submit(r)
+    vip = _request(3)
+    vip.priority = 5
+    eng.submit(vip)           # evicts the lowest-priority *latest* arrival
+    assert low_new.finish_reason == "shed"
+    assert not low_old.done and not vip.done
+    peer = _request(4)
+    peer.priority = 0         # does not outrank the queue minimum
+    eng.submit(peer)
+    assert peer.finish_reason == "shed"
+    eng.run(300)
+    assert {r.rid for r in eng.finished} == {0, 1, 2, 3, 4}
+    assert eng.metrics.counters["finish_shed"] == 2
+    _assert_no_leaks(eng)
+
+
+# ------------------------------------------------------------ degradation
+
+
+def test_degradation_watermarks_have_hysteresis():
+    """White-box: drive the live-block share across the watermarks via
+    direct pool allocations and check the degraded flag flips with
+    hysteresis — window drops to 1 tick, prefix insertion pauses, and both
+    restore only after pressure clears the low watermark."""
+    eng = Engine(PARAMS, CFG, batch=2, max_len=MAX_LEN, kv_layout="paged",
+                 block_size=4, num_blocks=8, decode_ticks=4)
+    pool, bs = eng.pool, 4
+    assert eng._window_ticks() == 4
+    pool.allocate(999, 8 * bs)                       # live share 1.0
+    eng._update_pressure()
+    assert eng._degraded and eng._window_ticks() == 1
+    pool.release(999)
+    pool.allocate(998, 7 * bs)                       # 0.875: between marks
+    eng._update_pressure()
+    assert eng._degraded, "must stay degraded between the watermarks"
+    pool.release(998)
+    pool.allocate(997, 4 * bs)                       # 0.5 <= degrade_low
+    eng._update_pressure()
+    assert not eng._degraded and eng._window_ticks() == 4
+    pool.allocate(996, 3 * bs)                       # 0.875 again, from below
+    eng._update_pressure()
+    assert not eng._degraded, "must stay clear until the high watermark"
+    assert eng.metrics.counters["degrade_events"] == 1
+    pool.release(997)
+    pool.release(996)
+
+
+def test_degraded_engine_streams_are_unchanged():
+    """Degradation is stream-preserving: a forced-degraded run emits the
+    same tokens as a normal one (window length is bitwise-invariant and
+    sealing is only an availability optimisation)."""
+    eng = _engine("paged-int8")
+    reqs = [_request(next(_RID), key=k, temperature=0.8) for k in range(3)]
+    rid0 = reqs[0].rid
+    for r in reqs:
+        eng.submit(r)
+    eng.run(300)
+    ref = {r.rid - rid0: (list(r.out), r.finish_reason)
+           for r in eng.finished}
+
+    eng = _engine("paged-int8")
+    eng._degraded = True
+    eng.degrade_low = -1.0          # unreachable: stays degraded throughout
+    try:
+        reqs = [_request(next(_RID), key=k, temperature=0.8)
+                for k in range(3)]
+        rid0 = reqs[0].rid
+        for r in reqs:
+            eng.submit(r)
+        eng.run(300)
+        got = {r.rid - rid0: (list(r.out), r.finish_reason)
+               for r in eng.finished}
+    finally:
+        eng._degraded = False
+        eng.degrade_low = 0.70
+    assert got == ref
+    _assert_no_leaks(eng)
+
+
+# --------------------------------------------------- snapshot/restore pins
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_snapshot_restore_is_bitwise(name, temperature):
+    """The §12 acceptance pin: stop an engine mid-flight, serialize it
+    through real JSON, restore, continue — streams, finish reasons, FCFS
+    order and pool accounting all match the uninterrupted run exactly."""
+    def workload(rid0):
+        return [_request(rid0 + k, key=k, temperature=temperature,
+                         max_new=5 + k % 2) for k in range(4)]
+
+    eng = _engine(name)
+    rid0 = next(_RID)
+    for _ in range(3):
+        next(_RID)
+    ref_reqs = workload(rid0)
+    for r in ref_reqs:
+        eng.submit(r)
+    eng.run(300)
+    ref = {r.rid - rid0: (list(r.out), r.finish_reason)
+           for r in eng.finished}
+    _assert_fcfs_within_priority(ref_reqs)
+
+    eng = _engine(name)
+    rid0 = next(_RID)
+    for _ in range(3):
+        next(_RID)
+    reqs = {r.rid: r for r in workload(rid0)}
+    for r in reqs.values():
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()                        # mid-flight: slots busy, queue live
+    snap = json.loads(json.dumps(eng.snapshot()))      # prove JSON-able
+    eng.restore(snap)                     # in place: fresh device cache
+    eng.run(300)
+    got = {r.rid - rid0: (list(r.out), r.finish_reason)
+           for r in eng.finished}
+    assert got == ref
+    # restored Request objects replace the submitted ones; FCFS must hold
+    # across the restore boundary on the engine's own records
+    by_rid = {r.rid: r for r in eng.finished}
+    _assert_fcfs_within_priority([by_rid[rid] for rid in sorted(by_rid)])
+    assert eng.metrics.counters["recoveries"] == 1
+    _assert_no_leaks(eng)
+
+
+def test_snapshot_restores_into_fresh_engine_from_file(tmp_path):
+    """Cold-process shape: snapshot to disk, build a new Engine, restore,
+    and re-attach streaming callbacks by rid."""
+    kw = dict(batch=2, max_len=MAX_LEN, kv_layout="paged", block_size=8,
+              decode_ticks=2)
+    ref = Engine(PARAMS, CFG, **kw)
+    for r in range(4):
+        ref.submit(_request(r))
+    ref.run(300)
+    expected = _streams(ref)
+
+    eng = Engine(PARAMS, CFG, snapshot_path=str(tmp_path / "snap.json"), **kw)
+    for r in range(4):
+        eng.submit(_request(r))
+    for _ in range(2):
+        eng.step()
+    del eng                                     # "crash": engine object gone
+
+    tokens = {r: [] for r in range(4)}
+    streams = {r: (lambda req, tok, _r=r: tokens[_r].append(tok))
+               for r in range(4)}
+    fresh = Engine(PARAMS, CFG, **kw)
+    with open(tmp_path / "snap.json") as fh:
+        fresh.restore(json.load(fh), streams=streams)
+    fresh.run(300)
+    assert _streams(fresh) == expected
+    # callbacks resumed mid-stream: every post-restore token reached its
+    # stream, and each stream is a suffix of the request's full output
+    assert any(tokens.values())
+    for r in fresh.finished:
+        got = tokens[r.rid]
+        if got:
+            assert r.out[-len(got):] == got
+    _assert_no_leaks(fresh)
+
+
+def test_restore_rejects_layout_mismatch():
+    eng = _engine("paged-bf16")
+    snap = eng.snapshot()
+    other = _engine("ring-bf16")
+    with pytest.raises(ValueError, match="kv_layout"):
+        other.restore(snap)
+
+
+# ------------------------------------------------------- injector + driver
+
+
+def test_injector_crash_points_recover_bitwise(tmp_path):
+    """Every serve crash phase, driven through ``run_serve_with_restarts``
+    with genuinely fresh engines per restart: recovery is bitwise, the
+    injector fires exactly once, and nothing leaks."""
+    kw = dict(batch=2, max_len=MAX_LEN, kv_layout="paged", block_size=8,
+              decode_ticks=2)
+    ref = Engine(PARAMS, CFG, **kw)
+    for r in range(4):
+        ref.submit(_request(r, temperature=0.8))
+    ref.run(300)
+    expected = _streams(ref)
+
+    for phase in SERVE_PHASES:
+        snap_path = str(tmp_path / f"snap_{phase}.json")
+        injector = FailureInjector(crash_at={2: phase})
+
+        def make_engine():
+            return Engine(PARAMS, CFG, injector=injector,
+                          snapshot_path=snap_path, **kw)
+
+        def submit(engine):
+            for r in range(4):
+                engine.submit(_request(r, temperature=0.8))
+
+        eng = run_serve_with_restarts(make_engine, submit,
+                                      snapshot_path=snap_path, ticks=300)
+        assert _streams(eng) == expected, phase
+        assert injector.fired == {(2, phase)}
+        assert eng.metrics.counters["recoveries"] == 1
+        _assert_no_leaks(eng)
+
+
+def test_injector_unrecoverable_after_max_restarts(tmp_path):
+    """A crash point that always re-fires (fresh injector per engine)
+    exhausts max_restarts and surfaces as the chained RuntimeError."""
+    snap_path = str(tmp_path / "snap.json")
+
+    def make_engine():
+        return Engine(PARAMS, CFG, batch=1, max_len=MAX_LEN,
+                      injector=FailureInjector(crash_at={0: "pre_admit"}),
+                      snapshot_path=snap_path)
+
+    def submit(engine):
+        engine.submit(_request(0))
+
+    with pytest.raises(RuntimeError, match="after 1 restarts"):
+        run_serve_with_restarts(make_engine, submit,
+                                snapshot_path=snap_path, ticks=50,
+                                max_restarts=1)
+
+
+# ---------------------------------------------------------------- watchdog
+
+
+class _ListSink:
+    def __init__(self):
+        self.records = []
+
+    def write(self, records):
+        self.records.extend(records)
+
+    def close(self):
+        pass
+
+
+def test_watchdog_flags_slow_windows_through_the_sink():
+    sink = _ListSink()
+    eng = Engine(PARAMS, CFG, batch=1, max_len=MAX_LEN, metrics=sink,
+                 watchdog=StragglerWatchdog(threshold=0.0, warmup=1))
+    eng.submit(_request(0, max_new=6))
+    eng.run(100)
+    eng.metrics.flush()
+    slow = eng.metrics.counters["slow_windows"]
+    assert slow > 0
+    events = [r for r in sink.records if r.get("event") == "slow_window"]
+    assert len(events) == slow
+    assert all("window_s" in e and "tick" in e for e in events)
+    ticks = [r for r in sink.records if "queue_depth" in r]
+    assert all("window_s" in r for r in ticks)   # per-window wall-time gauge
+
+
+def test_watchdog_defaults_on_and_quiet():
+    eng = _engine("ring-bf16")
+    assert isinstance(eng.watchdog, StragglerWatchdog)
+    off = Engine(PARAMS, CFG, batch=1, max_len=MAX_LEN, watchdog=False)
+    assert off.watchdog is None
+
+
+# --------------------------------------------------------- hypothesis soak
+
+
+crash_st = st.tuples(
+    st.integers(0, 10),                       # crash window index
+    st.sampled_from(SERVE_PHASES),
+)
+
+
+@settings(max_examples=8, deadline=None)
+@given(crashes=st.lists(crash_st, min_size=1, max_size=3, unique=True),
+       temperature=st.sampled_from([0.0, 0.8]),
+       n_reqs=st.integers(2, 5))
+def test_random_crash_soak_recovers_bitwise(crashes, temperature, n_reqs):
+    """Hypothesis-chosen crash ticks/phases (possibly several per run): the
+    cached engine crashes, restores in place from its last snapshot file,
+    and must still finish every request with streams bitwise-equal to an
+    uninterrupted run and no leaks."""
+    import os
+    import tempfile
+
+    name = "paged-int8"
+    eng = _engine(name)
+    rid0 = next(_RID)
+    for _ in range(n_reqs - 1):
+        next(_RID)
+    reqs = [_request(rid0 + k, key=k, temperature=temperature)
+            for k in range(n_reqs)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(300)
+    ref = {r.rid - rid0: (list(r.out), r.finish_reason)
+           for r in eng.finished}
+
+    eng = _engine(name)
+    rid0 = next(_RID)
+    for _ in range(n_reqs - 1):
+        next(_RID)
+    reqs = [_request(rid0 + k, key=k, temperature=temperature)
+            for k in range(n_reqs)]
+    fd, snap_path = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    os.unlink(snap_path)
+    try:
+        # windows advance the tick by decode_ticks; key crashes on the
+        # ticks the windows actually start at
+        n = eng.decode_ticks
+        eng.injector = FailureInjector(
+            crash_at={w * n: phase for w, phase in crashes})
+        eng.snapshot_path = snap_path
+        for r in reqs:
+            eng.submit(r)
+        # recovery point for a crash that lands before the first on-disk
+        # snapshot: the pristine just-submitted state
+        snap0 = eng.snapshot()
+        for _ in range(len(crashes) + 1):
+            try:
+                eng.run(300)
+                break
+            except InjectedFailure:
+                if os.path.exists(snap_path):
+                    with open(snap_path) as fh:
+                        eng.restore(json.load(fh))
+                else:
+                    eng.restore(snap0)
+        got = {r.rid - rid0: (list(r.out), r.finish_reason)
+               for r in eng.finished}
+        assert got == ref
+        _assert_no_leaks(eng)
+    finally:
+        eng.injector = None
+        eng.snapshot_path = None
+        if os.path.exists(snap_path):
+            os.unlink(snap_path)
