@@ -1,7 +1,7 @@
 """CI perf-regression gate: diff fresh bench artifacts against committed ones.
 
 Loads the committed reference artifacts under ``benchmarks/artifacts/``
-(kernel_bench schema v3, serve_bench schema v7) and a candidate directory of
+(kernel_bench schema v3, serve_bench schema v8) and a candidate directory of
 freshly generated artifacts from the same commands, matches result rows on
 their identity keys (kernel × backend × shape × block; workload × policy ×
 kv_quant × layout × mesh × shape), and checks every shared metric against a
@@ -17,6 +17,10 @@ per-metric tolerance band:
     histogram counts, prefix-hit rates: bit-deterministic host-side
     quantities; any drift is a behaviour change, not noise.
   * **bool** — correctness flags (``codes_exact_vs_ref``) must not flip.
+  * **ceiling** — reference-*independent* absolute budgets
+    (``trace_overhead_pct`` ≤ 2%): the bound is the contract, so the
+    candidate is checked against ``abs_floor`` directly, with no
+    machine normalisation and no drift band.
   * **advisory** — latency percentiles and single-call µs timings: reported
     in the gate output but never fail it (CPU smoke runs are too noisy for
     hard latency bands; the *rates* are best-of-waves and stable).
@@ -37,7 +41,7 @@ import json
 import os
 import sys
 
-EXPECTED_VERSIONS = {"kernel": 3, "serve": 7}
+EXPECTED_VERSIONS = {"kernel": 3, "serve": 8}
 
 # Identity keys: the fields that *name* a row.  Everything else is a metric.
 KERNEL_KEYS = ("kernel", "backend", "shape", "block", "cap", "bits", "scheme")
@@ -53,7 +57,9 @@ class Metric:
 
     ``mode`` — 'higher' (regression = candidate below ref), 'lower'
     (regression = candidate above ref), 'exact' (must match to abs_floor),
-    'bool' (must equal ref).  ``normalize`` scales the candidate by the
+    'bool' (must equal ref), 'ceiling' (candidate must not exceed
+    ``abs_floor``; the reference value is ignored — the budget itself is
+    the contract).  ``normalize`` scales the candidate by the
     machine-speed ratio before comparing.  ``advisory`` reports but never
     fails.  The tolerance is ``max(rel_tol * |ref|, abs_floor)``."""
     path: str
@@ -123,6 +129,17 @@ SERVE_METRICS = (
     Metric("recoveries", "exact"),
     Metric("attn_full_cap_fp32_upcast", "bool"),
     Metric("heads_sharded", "bool"),
+    # schema v8: per-request tracing (DESIGN.md §13).  The overhead pct is
+    # an absolute budget, not a drift band — tracing must cost ≤ 2% of the
+    # smoke decode rate on *any* machine, so it gates against the ceiling
+    # rather than the reference.  The bitwise flag pins the host-only
+    # contract (tracing never perturbs a token stream) and the span count
+    # pins instrumentation coverage.
+    Metric("trace_overhead_pct", "ceiling", abs_floor=2.0),
+    Metric("streams_bitwise_equal", "bool"),
+    Metric("trace_phase_spans", "exact"),
+    Metric("decode_tok_s_untraced", "higher", rel_tol=0.25, normalize=True,
+           advisory=True),
     # latency percentiles: CPU-noise-dominated at smoke shapes — advisory.
     Metric("ttft_ms.p50", "lower", rel_tol=1.0, normalize=True,
            advisory=True),
@@ -203,6 +220,12 @@ def check_metric(m: Metric, ref_row: dict, cand_row: dict,
         if bool(cand_v) != bool(ref_v):
             return Finding(sev, file, key, m.path,
                            f"flipped {ref_v} -> {cand_v}")
+        return None
+    if m.mode == "ceiling":
+        if float(cand_v) > m.abs_floor:
+            return Finding(sev, file, key, m.path,
+                           f"{float(cand_v):g} > {m.abs_floor:g} "
+                           f"absolute ceiling")
         return None
     ref_v, cand_v = float(ref_v), float(cand_v)
     if m.mode == "exact":

@@ -57,7 +57,7 @@ from repro.serve import Engine, Request, SamplingParams
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "artifacts", "serve_bench.json")
 
-ARTIFACT_VERSION = 7
+ARTIFACT_VERSION = 8
 
 POLICIES = ("none", "dither", "stochastic", "deterministic")
 
@@ -347,6 +347,98 @@ def bench_prefix_reuse(cfg, params, *, batch: int, max_len: int,
     }
 
 
+def bench_trace_overhead(cfg, params, *, batch: int, max_len: int,
+                         prompt_len: int, max_new: int, requests: int,
+                         kv_layout: str = "ring", block_size=None,
+                         mesh=None, waves: int = 6, decode_ticks: int = 4,
+                         prefill_chunk=None):
+    """Schema-v8 workload (DESIGN.md §13): what leaving per-request tracing
+    on costs on the fused-window decode path.
+
+    Two persistent engines — one traced (``trace='mem'``), one untraced —
+    serve identical waves **interleaved** (off, on, off, on, …) so
+    shared-host load drift lands on both sides of every pair equally.
+    Each wave's decode rates are paired and the *max* on/off ratio across
+    waves is kept: ``trace_overhead_pct = 100 · (1 − max_w on_w/off_w)``
+    — the same best-of-waves treatment the grid rates get, so CPU noise
+    can't masquerade as tracer cost.  The traced engine's token streams
+    are also compared bitwise against the untraced engine's every wave:
+    tracing is host-only by construction and must never perturb a stream.
+    """
+    kw = {}
+    if kv_layout == "paged":
+        kw = dict(kv_layout="paged", block_size=block_size,
+                  prefix_cache=False)
+
+    def make(trace):
+        return Engine(params, cfg, batch, max_len, mesh=mesh,
+                      decode_ticks=decode_ticks,
+                      prefill_chunk=prefill_chunk, trace=trace, **kw)
+
+    eng_on, eng_off = make("mem"), make(None)
+    if kv_layout == "paged":
+        block_size = eng_on.block_size
+
+    def run_wave(eng, rid0):
+        eng.reset_stats()
+        for r in range(requests):
+            prompt = [(5 * r + i) % (cfg.vocab_size - 1) + 1
+                      for i in range(prompt_len)]
+            eng.submit(Request(
+                rid=rid0 + r, prompt=prompt,
+                sampling=SamplingParams(max_new=max_new, seed=r,
+                                        counter_offset=1000 * r)))
+        done = list(eng.run(ticks=requests * (max_new + 4) + 20))
+        eng.finished = []
+        st = eng.stats
+        dc = st["decode_tokens"] / st["decode_s"] if st["decode_s"] else 0.0
+        return dc, {r.rid - rid0: list(r.out) for r in done}
+
+    run_wave(eng_off, 0)                 # warm-up: compiles both engines
+    run_wave(eng_on, 0)
+
+    dc_on = dc_off = best_ratio = 0.0
+    completed = 0
+    streams_equal = True
+    for w in range(waves):
+        rid0 = (w + 1) * 10_000          # fresh rids: fresh trace timelines
+        off_dc, off_streams = run_wave(eng_off, rid0)
+        on_dc, on_streams = run_wave(eng_on, rid0)
+        streams_equal = streams_equal and on_streams == off_streams
+        completed += len(on_streams)
+        dc_on, dc_off = max(dc_on, on_dc), max(dc_off, off_dc)
+        if off_dc:
+            best_ratio = max(best_ratio, on_dc / off_dc)
+    overhead_pct = (max(0.0, 100.0 * (1.0 - best_ratio))
+                    if best_ratio else 0.0)
+    n_spans = sum(1 for rec in eng_on.trace.records()
+                  if rec.get("kind") == "span" and rec.get("cat") == "phase"
+                  and rec.get("rid") is not None)
+    return {
+        "workload": "trace_overhead", "arch": cfg.name,
+        "policy": "none", "kernel_backend": None,
+        **_mesh_profile(cfg, eng_on),
+        "kv_layout": kv_layout,
+        "block_size": int(block_size) if kv_layout == "paged" else None,
+        "kv_quant": False, "batch": batch, "max_len": max_len,
+        "prompt_len": prompt_len, "max_new": max_new,
+        "requests": requests, "waves": waves,
+        "decode_ticks": int(decode_ticks),
+        "prefill_chunk": (int(eng_on.prefill_chunk)
+                          if eng_on.prefill_chunk else None),
+        "completed": int(completed),
+        "decode_tok_s": dc_on,
+        "decode_tok_s_untraced": dc_off,
+        "trace_overhead_pct": overhead_pct,
+        "streams_bitwise_equal": bool(streams_equal),
+        # deterministic span-count pin: the tracer's per-request phase
+        # spans across every measured wave (warm-up included — the traced
+        # engine retains its whole run), so silent instrumentation loss
+        # fails the gate as schema drift would.
+        "trace_phase_spans": int(n_spans),
+    }
+
+
 def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
           full: bool = False, backend: str = "jnp", policies=POLICIES,
           reduced: bool = True, kv_layout: str = "ring", block_size=None,
@@ -363,7 +455,13 @@ def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
     ``max_new``) so the dispatch amortisation is what's measured.  Each
     ``decode_ticks > 1`` row carries ``tick_speedup_vs_1`` — its decode
     rate over the sweep's own single-tick row (machine-normalisation
-    cancels in the ratio, so the gate can band it directly)."""
+    cancels in the ratio, so the gate can band it directly).
+
+    Schema v8 adds the **trace-overhead workload** (DESIGN.md §13):
+    tracing-on vs tracing-off engines interleaved on a decode-heavy shape,
+    reporting ``trace_overhead_pct`` (gated against an absolute ≤2%
+    ceiling) and ``streams_bitwise_equal`` (tracing must not perturb any
+    token stream)."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -436,6 +534,24 @@ def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
                 + (f"x{res['tick_speedup_vs_1']:.2f}_vs_1tick "
                    if "tick_speedup_vs_1" in res else "")
                 + f"ttft_p90={res['ttft_ms']['p90']:.0f}ms"))
+
+    # schema v8: trace-overhead workload (DESIGN.md §13) — decode-heavy
+    # shape like the tick sweep, fused windows + chunked prefill on, so the
+    # tracer's per-window host work is measured where it matters most
+    trace_shape = dict(shape, max_new=4 * shape["max_new"])
+    trace_chunk = (block_size if kv_layout == "paged"
+                   else shape["prompt_len"] // 2)
+    res = bench_trace_overhead(cfg, params, kv_layout=kv_layout,
+                               block_size=block_size, mesh=mesh,
+                               decode_ticks=4, prefill_chunk=trace_chunk,
+                               **trace_shape)
+    results.append(res)
+    rows.append((
+        f"serve[trace_overhead|{kv_layout}{mesh_tag}]",
+        1e6 / res["decode_tok_s"] if res["decode_tok_s"] else 0.0,
+        f"overhead={res['trace_overhead_pct']:.2f}% "
+        f"bitwise={int(res['streams_bitwise_equal'])} "
+        f"decode={res['decode_tok_s']:.0f}tok/s"))
 
     if kv_layout == "paged":
         for kv_quant in (False, True):

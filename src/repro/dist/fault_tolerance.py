@@ -117,6 +117,13 @@ def run_serve_with_restarts(make_engine: Callable[[], object],
     each window persists a recovery point; it should also share one
     ``FailureInjector`` across restarts — its ``fired`` set is what lets a
     resumed run sail past an already-fired crash point.
+
+    Trace handoff (DESIGN.md §13): when ``make_engine`` enables tracing
+    (``Engine(trace=...)``), the snapshot carries every request's span
+    timeline, so the restored engine resumes the *same* timelines — spans
+    open at crash time are closed with a recovery marker and a ``recovery``
+    segment bridges crash → resume.  Nothing extra is needed here beyond
+    constructing each restart's engine with the same trace spec.
     """
 
     def loop(_restart_idx: int):

@@ -24,6 +24,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import weakref
 from typing import Callable, Dict, List, Optional, Tuple
 
 __all__ = [
@@ -34,7 +35,30 @@ __all__ = [
     "best_block", "autotune_matmul", "autotune_quantize",
     "autotune_decode_attention", "autotune_paged_attention",
     "cache_key", "load_cache", "save_cache", "clear_cache",
+    "register_observer",
 ]
+
+# Observability (DESIGN.md §13): tracers register here so winner-cache
+# hits/misses and measured recompute sweeps show up on the serving timeline
+# instead of as mystery gaps.  WeakSet: a dropped tracer unregisters itself,
+# so short-lived engines never pin observers.  Observers are duck-typed —
+# anything with an ``autotune_event(kind, **fields)`` method.
+_OBSERVERS: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def register_observer(obs) -> None:
+    """Register an object (held weakly) whose ``autotune_event`` method
+    receives autotuner cache events: ``autotune_cache_hit``,
+    ``autotune_model_pick``, ``autotune_sweep``."""
+    _OBSERVERS.add(obs)
+
+
+def _notify(kind: str, **fields) -> None:
+    for obs in list(_OBSERVERS):
+        try:
+            obs.autotune_event(kind, **fields)
+        except Exception:  # noqa: BLE001 — observability must not gate tuning
+            pass
 
 # v5e VMEM is ~16 MiB/core; leave headroom for the compiler's own buffers.
 VMEM_BUDGET_BYTES = 16 * 1024 * 1024
@@ -237,9 +261,12 @@ def best_block(kind: str, shape: tuple, dtype, bits: int, scheme: str,
     matmul, i.e. fewest sequential grid steps per output tile)."""
     if _cache_path() and _CACHE_LOADED_FROM != _cache_path():
         load_cache()
-    hit = _CACHE.get(cache_key(kind, shape, dtype, bits, scheme, backend))
+    key = cache_key(kind, shape, dtype, bits, scheme, backend)
+    hit = _CACHE.get(key)
     if hit is not None:
+        _notify("autotune_cache_hit", key=key, block=list(hit))
         return tuple(hit)
+    _notify("autotune_model_pick", key=key)
     if kind == "matmul":
         m, k, n = shape
         cands = matmul_candidates(m, k, n)
@@ -288,6 +315,9 @@ def _time_block(run: Callable[[tuple], object], block: tuple,
 def _sweep(kind: str, shape: tuple, dtype, bits: int, scheme: str,
            backend: str, candidates: List[tuple],
            run: Callable[[tuple], object], repeats: int):
+    key = cache_key(kind, shape, dtype, bits, scheme, backend)
+    recompute = key in _CACHE  # re-sweeping a key that already had a winner
+    t0 = time.perf_counter()
     results = []
     for block in candidates:
         try:
@@ -299,8 +329,11 @@ def _sweep(kind: str, shape: tuple, dtype, bits: int, scheme: str,
         raise RuntimeError(f"no runnable {kind} block candidate for {shape}")
     results.sort(key=lambda r: r["seconds"])
     winner = tuple(results[0]["block"])
-    _CACHE[cache_key(kind, shape, dtype, bits, scheme, backend)] = winner
+    _CACHE[key] = winner
     save_cache()
+    _notify("autotune_sweep", key=key, winner=list(winner),
+            candidates=len(results), recompute=recompute,
+            sweep_s=time.perf_counter() - t0)
     return winner, results
 
 

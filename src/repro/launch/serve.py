@@ -81,6 +81,13 @@ def serve_main(argv=None):
                          "'stdout', or 'jsonl:<path>' / a *.jsonl path.  "
                          "Unset = collect but don't stream; the summary "
                          "prints either way")
+    ap.add_argument("--trace", default=None, metavar="SPEC",
+                    help="per-request span tracing (DESIGN.md §13): 'mem' "
+                         "(in-memory, enables the end-of-run attribution "
+                         "summary), 'perfetto:<path>' (Chrome-trace JSON "
+                         "for ui.perfetto.dev), 'jsonl:<path>' (streaming "
+                         "event feed), comma-combinable.  Unset = off "
+                         "(zero overhead)")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request wall-clock deadline from submission "
                          "(DESIGN.md §12): queued or running, a request "
@@ -124,7 +131,8 @@ def serve_main(argv=None):
                     scheduler=args.sched, kv_layout=args.kv_layout,
                     block_size=args.block_size, num_blocks=args.num_blocks,
                     prefix_cache=not args.no_prefix_cache, mesh=mesh,
-                    metrics=args.metrics, decode_ticks=args.decode_ticks,
+                    metrics=args.metrics, trace=args.trace,
+                    decode_ticks=args.decode_ticks,
                     prefill_chunk=args.prefill_chunk,
                     queue_cap=args.queue_cap, shed_policy=args.shed_policy,
                     snapshot_path=args.snapshot_path)
@@ -185,6 +193,17 @@ def serve_main(argv=None):
           f"recoveries={int(mc.get('recoveries', 0))} "
           f"slow_windows={int(mc.get('slow_windows', 0))} "
           f"degrade_events={int(mc.get('degrade_events', 0))}")
+    if engine.trace.enabled:
+        # end-of-run latency attribution (DESIGN.md §13): one line per
+        # finished request, wall time decomposed into phase shares
+        from repro.serve.trace import format_explain
+        for r in sorted(done, key=lambda x: x.rid):
+            print("explain " + format_explain(engine.explain(r.rid)))
+        engine.trace.close()      # flush the jsonl feed, write the perfetto
+        if engine.trace.perfetto_path:
+            print(f"trace: wrote perfetto export to "
+                  f"{engine.trace.perfetto_path} "
+                  f"(open at https://ui.perfetto.dev)")
     engine.metrics.close()
 
 

@@ -9,9 +9,10 @@ from repro.serve.metrics import (Histogram, JsonlSink, Metrics, NullSink,
                                  StdoutSink, make_sink)
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
+from repro.serve.trace import Tracer, format_explain
 
 __all__ = ["Engine", "Request", "make_serve_fns", "make_decode_and_sample",
            "make_fused_decode", "make_chunked_prefill", "make_paged_prefill",
            "KVPool", "SamplingParams", "sample_tokens",
            "Scheduler", "Metrics", "Histogram", "NullSink", "StdoutSink",
-           "JsonlSink", "make_sink"]
+           "JsonlSink", "make_sink", "Tracer", "format_explain"]

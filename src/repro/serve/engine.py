@@ -50,6 +50,7 @@ from repro.serve.kvpool import KVPool
 from repro.serve.metrics import Metrics
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
+from repro.serve.trace import Tracer
 
 __all__ = ["make_serve_fns", "make_decode_and_sample", "make_fused_decode",
            "make_paged_prefill", "make_chunked_prefill",
@@ -349,6 +350,7 @@ class Engine:
                  prefix_cache: bool = True,
                  mesh=None,
                  metrics: Union[None, str, Metrics] = None,
+                 trace: Union[None, str, Tracer] = None,
                  decode_ticks: int = 1,
                  prefill_chunk: Optional[int] = None,
                  queue_cap: Optional[int] = None,
@@ -576,6 +578,18 @@ class Engine:
         # 'jsonl:<path>', a sink object) or None (collect, don't stream).
         self.metrics = (metrics if isinstance(metrics, Metrics)
                         else Metrics(sink=metrics))
+        # per-request tracing (DESIGN.md §13): span timelines + latency
+        # attribution, host-timestamped only where the engine already syncs
+        # — zero extra device dispatches, disabled entirely by default.
+        # Accepts a Tracer, a spec string ('mem', 'perfetto:<path>',
+        # 'jsonl:<path>', comma-combinable), a sink object, or None (off).
+        self.trace = Tracer.from_spec(trace)
+        if self.trace.enabled:
+            # queue/block provenance rides the tracer's event feed; the
+            # hooks stay None (and cost nothing) on an untraced engine
+            self.scheduler.on_event = self.trace.event
+            for pool in self.pools:
+                pool.on_event = self.trace.event
 
     # ------------------------------------------------------------- mesh glue
 
@@ -680,6 +694,7 @@ class Engine:
         req.state = "queued"
         if req.t_submit is None:
             req.t_submit = time.time()
+        self.trace.begin(req.rid, req.t_submit, priority=req.priority)
         if self.queue_cap is not None and \
                 len(self.scheduler) >= self.queue_cap:
             victim = req
@@ -693,6 +708,18 @@ class Engine:
             if victim is req:
                 return
         self.scheduler.submit(req)
+
+    def explain(self, rid: int) -> dict:
+        """Latency-attribution report for a traced request (DESIGN.md §13):
+        wall time decomposed into queue / prefill / decode / preempt_stall /
+        degraded / recovery shares that sum to 100%, with the dominant term
+        named.  Requires the engine to have been constructed with
+        ``trace=...``; raises ``KeyError`` for an unknown rid."""
+        if not self.trace.enabled:
+            raise RuntimeError("tracing is disabled; construct the Engine "
+                               "with trace='mem' (or a sink spec) to explain "
+                               "requests")
+        return self.trace.explain(rid, now=self._now())
 
     def step(self) -> List[Request]:
         """One engine window: expire deadlines, admit + batched-prefill,
@@ -725,6 +752,7 @@ class Engine:
             if not len(self.scheduler) and all(s is None for s in self.slots):
                 break
         self.metrics.flush()          # drain the tail of the gauge buffer
+        self.trace.flush()
         if self.snapshot_path is not None:
             self.write_snapshot(self.snapshot_path)
         return self.finished
@@ -749,6 +777,7 @@ class Engine:
         self.finished.append(req)
         self.metrics.inc("finished_requests")
         self.metrics.inc(f"finish_{reason}")
+        self.trace.finish(req.rid, self._now(), reason)
 
     def _expire_deadlines(self):
         """Expire overdue requests, once per window drain, *before*
@@ -798,21 +827,27 @@ class Engine:
         if not self._degraded and share >= self.degrade_high:
             self._degraded = True
             self.metrics.inc("degrade_events")
-            self.metrics.event("degraded", tick=self.tick, live_share=share)
+            now = self._now()
+            self.trace.event("degraded", t=now, tick=self.tick,
+                             live_share=share)
+            self.trace.set_degraded(True, now)
         elif self._degraded and share <= self.degrade_low:
             self._degraded = False
-            self.metrics.event("restored", tick=self.tick, live_share=share)
+            now = self._now()
+            self.trace.event("restored", t=now, tick=self.tick,
+                             live_share=share)
+            self.trace.set_degraded(False, now)
 
     def _observe_window(self, seconds: float):
         """Feed the straggler watchdog one window wall time; flagged
-        windows bump the ``slow_windows`` counter and log an event through
-        the existing sink path."""
+        windows bump the ``slow_windows`` counter and log an event on the
+        tracer's feed (DESIGN.md §13 — lifecycle events unified there)."""
         self._last_window_s = seconds
         if self.watchdog is not None and \
                 self.watchdog.observe(self._step_tick, seconds):
             self.metrics.inc("slow_windows")
-            self.metrics.event("slow_window", tick=self._step_tick,
-                               window_s=seconds)
+            self.trace.event("slow_window", tick=self._step_tick,
+                             window_s=seconds)
 
     def _maybe_snapshot(self):
         if self.snapshot_path is None:
@@ -857,6 +892,7 @@ class Engine:
                 live_blocks=ps["live"], cached_blocks=ps["cached"],
                 free_blocks=sum(p.free_blocks for p in self.pools))
         self.metrics.tick(**gauges)
+        self.trace.counters(t=self._now(), **gauges)
 
     def _refresh_device_state(self):
         """Re-upload the per-slot sampling state and last tokens if any slot
@@ -889,6 +925,7 @@ class Engine:
                 self.finished.append(req)
                 self.metrics.inc("finished_requests")
                 self.metrics.inc("finish_rejected")
+                self.trace.finish(req.rid, self._now(), "rejected")
                 continue
             admitted.append(req)
         if not admitted:
@@ -902,6 +939,7 @@ class Engine:
             sp = req.sampling
             self.slots[i] = req
             req.state, req.t_admit = "active", now
+            self.trace.phase(req.rid, "prefill", now, slot=i)
             prompts[i] = list(req.prompt) or [1]          # empty prompt → BOS
             lens[i] = len(prompts[i])
             self._temps[i] = sp.temperature
@@ -931,6 +969,11 @@ class Engine:
         self.stats["prefill_s"] += dt
         self.stats["prefill_tokens"] += int(lens.sum())
         self.stats["prefill_calls"] += 1
+        self.trace.wave(
+            "prefill_wave", t0, t0 + dt,
+            [(self.slots[i].rid, "prefill[0]",
+              {"slot": i, "tokens": int(lens[i])}) for i in prompts],
+            tick=self._step_tick)
 
         now = time.time()
         for i, req in list(prompts.items()):
@@ -958,10 +1001,12 @@ class Engine:
                 self.finished.append(req)
                 self.metrics.inc("finished_requests")
                 self.metrics.inc("finish_rejected")
+                self.trace.finish(req.rid, admitted_now, "rejected")
                 continue
             i = free.pop(0)
             self.slots[i] = req
             req.state, req.t_admit = "prefilling", admitted_now
+            self.trace.phase(req.rid, "prefill", admitted_now, slot=i)
             req._pf_pos = 0
             self._set_slot_sampling(i, req)
             self._slot_pos[i] = 0
@@ -998,6 +1043,11 @@ class Engine:
         self.stats["prefill_s"] += dt
         self.stats["prefill_tokens"] += int(lens.sum())
         self.stats["prefill_calls"] += 1
+        self.trace.wave(
+            "prefill_wave", t0, t0 + dt,
+            [(req.rid, f"prefill[{int(starts[i]) // chunk}]",
+              {"slot": i, "tokens": int(lens[i])}) for i, req in waving],
+            tick=self._step_tick)
 
         now = time.time()
         for i, req in waving:
@@ -1053,6 +1103,9 @@ class Engine:
                        "last_token": int(self._last_token[i]),
                        "t": time.time(), "reprefill": False,
                        "prefilling": req.state == "prefilling"}
+        self.trace.phase(
+            req.rid, "preempt_stall", req._resume["t"], slot=i,
+            blocks=len(self._pool_of(req.rid).table(req.rid)))
         req.state = "queued"
         self.slots[i] = None
         self._set_bt_row(i, [])
@@ -1077,6 +1130,8 @@ class Engine:
         if req._resume is None:
             req._resume = {"pos": 0, "last_token": 0, "t": time.time()}
         req._resume["reprefill"] = True
+        self.trace.event("reprefill", rid=req.rid, t=self._now(),
+                         pos=req._resume["pos"])
         # 'preemptions' counts preemption *events* — a requeue-with-blocks
         # and a later block reclamation are two events for one request
         self.stats["preemptions"] += 1
@@ -1090,6 +1145,11 @@ class Engine:
         # a request preempted mid-prefill rejoins the chunk waves where it
         # stopped (its _pf_pos and blocks survived the round trip)
         req.state = "prefilling" if st.get("prefilling") else "active"
+        self.trace.phase(
+            req.rid, "prefill" if st.get("prefilling") else "decode",
+            self._now(), slot=i, resumed=1,
+            shard=self._rid_shard[req.rid],
+            blocks=len(self._pool_of(req.rid).table(req.rid)))
         self._set_slot_sampling(i, req)
         self._last_token[i] = st["last_token"]
         self._slot_pos[i] = st["pos"]
@@ -1181,6 +1241,7 @@ class Engine:
                 self.finished.append(req)
                 self.metrics.inc("finished_requests")
                 self.metrics.inc(f"finish_{reason}")
+                self.trace.finish(req.rid, self._now(), reason)
                 continue
             seed = req.sampling.counter_offset if self.kv_quant else 0
             # rank eligible shards: longest cached prefix first, then most
@@ -1224,6 +1285,11 @@ class Engine:
             req._pf_pos = start
             if req.t_admit is None:
                 req.t_admit = now
+            self.trace.phase(
+                req.rid, "prefill", now, slot=i,
+                shard=self._rid_shard[req.rid],
+                blocks=len(self._pool_of(req.rid).table(req.rid)),
+                prefix_tokens=start)
             self._set_slot_sampling(i, req)
             self._slot_pos[i] = start
             self._set_bt_row(i, self._pool_of(req.rid).table(req.rid))
@@ -1279,6 +1345,11 @@ class Engine:
         self.stats["prefill_s"] += dt
         self.stats["prefill_tokens"] += int(lens.sum())
         self.stats["prefill_calls"] += 1
+        self.trace.wave(
+            "prefill_wave", t0, t0 + dt,
+            [(req.rid, f"prefill[{int(starts[i]) // chunk}]",
+              {"slot": i, "tokens": int(lens[i])}) for i, req in waving],
+            tick=self._step_tick)
 
         # the prefill dispatch is ordered before any later gather, so the
         # chunk's full blocks are now safely publishable for prefix hits
@@ -1472,6 +1543,7 @@ class Engine:
         self.stats["decode_calls"] += 1
 
         now = time.time()
+        kept = {}
         for i, req in active:
             col = toks[:, i]
             ss = stop_sets[i]
@@ -1480,6 +1552,7 @@ class Engine:
                 if int(col[j]) in ss:
                     m = j + 1
                     break
+            kept[i] = m
             # windowed-drain ITL attribution: m tokens arrived over one
             # host drain interval — attribute the per-token inter-arrival
             # as interval/m instead of one m-sized observation per drain
@@ -1489,11 +1562,17 @@ class Engine:
                 self._slot_pos[i] += 1
                 self._emit(i, req, int(col[j]), t_prev + share * (j + 1))
             self.stats["decode_tokens"] += m
+        self.trace.wave(
+            "decode_window", t0, t0 + dt,
+            [(req.rid, f"decode[w{self._step_tick}]",
+              {"slot": i, "tokens": kept[i]}) for i, req in active],
+            tick=self._step_tick, n_ticks=n)
 
     def _emit(self, i: int, req: Request, tok: int, now: float):
         req.out.append(tok)
         if req.t_first is None:
             req.t_first = now
+            self.trace.phase(req.rid, "decode", now, slot=i)
             if req.ttft is not None:
                 self.metrics.observe_ttft(req.ttft)
         else:
@@ -1525,6 +1604,8 @@ class Engine:
         self.finished.append(req)
         self.metrics.inc("finished_requests")
         self.metrics.inc(f"finish_{reason}")
+        self.trace.finish(req.rid, req.t_last if req.t_last is not None
+                          else self._now(), reason, slot=i)
         self.slots[i] = None
         if self.kv_layout == "paged":
             # seal what the prompt + generation filled (future prefix hits),
@@ -1627,6 +1708,7 @@ class Engine:
                          if self.pools else {},
             "stats": dict(self.stats),
             "metrics": self.metrics.snapshot(),
+            "trace": self.trace.snapshot(self._now()),
         }
 
     def restore(self, snap: dict, streams: Optional[dict] = None) -> "Engine":
@@ -1678,6 +1760,9 @@ class Engine:
         self._counters = np.asarray(ss["counters"], np.int32)
         self.stats = dict(snap["stats"])
         self.metrics.restore(snap["metrics"])
+        # resume the request timelines (spans open at crash close with a
+        # recovery marker; absent in pre-v9 snapshots → no-op)
+        self.trace.restore(snap.get("trace"), t=self._now())
         self._paged_cap = {}
         self._steps_since_snap = 0
         if self.pools:

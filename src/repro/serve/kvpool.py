@@ -72,6 +72,10 @@ class KVPool:
         self._chain: Dict[int, int] = {}            # rid → sealed-chain hash
         self.stats = {"allocated": 0, "evicted": 0, "prefix_hit_blocks": 0,
                       "cow_copies": 0}
+        # block-provenance hook (DESIGN.md §13): when set by a tracing
+        # engine, called as on_event(kind, **fields) at eviction / prefix
+        # hit / CoW / exhaustion; None (the default) costs nothing.
+        self.on_event = None
 
     # ------------------------------------------------------------- inspection
 
@@ -146,6 +150,9 @@ class KVPool:
             self._hash[phys] = None
             self.stats["allocated"] += 1
             self.stats["evicted"] += 1
+            if self.on_event is not None:
+                self.on_event("block_evict", phys=phys,
+                              cached=len(self._cached))
             return phys
         return None
 
@@ -183,6 +190,9 @@ class KVPool:
         self._tables[rid] = list(shared) + fresh
         self._chain[rid] = chain
         self.stats["prefix_hit_blocks"] += len(shared)
+        if self.on_event is not None and shared:
+            self.on_event("prefix_hit", rid=rid, blocks=len(shared),
+                          fresh=len(fresh))
         return list(self._tables[rid])
 
     def append_block(self, rid: int) -> Optional[int]:
@@ -191,6 +201,9 @@ class KVPool:
         caller preempts-and-requeues the request with its blocks intact."""
         phys = self._pop_block()
         if phys is None:
+            if self.on_event is not None:
+                self.on_event("pool_exhausted", rid=rid,
+                              live=self.live_blocks)
             return None
         self._ref[phys] = 1
         self._tables[rid].append(phys)
@@ -212,6 +225,8 @@ class KVPool:
         self._ref[fresh] = 1
         self._tables[rid][logical] = fresh
         self.stats["cow_copies"] += 1
+        if self.on_event is not None:
+            self.on_event("cow_copy", rid=rid, logical=logical)
         return fresh, True
 
     # ---------------------------------------------------------------- sealing

@@ -33,12 +33,13 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import sys
 import time
 from typing import Dict, List, Optional, Union
 
 __all__ = ["Histogram", "Metrics", "NullSink", "StdoutSink", "JsonlSink",
-           "make_sink"]
+           "SinkBuffer", "make_sink"]
 
 
 class Histogram:
@@ -166,14 +167,44 @@ class StdoutSink:
 
 class JsonlSink:
     """Appends records to a JSONL file, one object per line.  The file is
-    opened lazily on first flush and kept open across flushes."""
+    opened lazily on first flush and kept open across flushes.
+
+    Durability contract: ``close()`` flushes **and fsyncs** so a clean
+    shutdown leaves every record on disk, and the lazy open repairs a torn
+    final line (a crash mid-``write`` can leave a partial JSON object with
+    no trailing newline) by truncating back to the last complete line —
+    downstream jsonl readers never see a corrupt tail after a reopen.
+    """
 
     def __init__(self, path: str):
         self.path = path
         self._fh = None
 
+    def _repair_torn_tail(self) -> None:
+        try:
+            size = os.path.getsize(self.path)
+        except OSError:
+            return
+        if size == 0:
+            return
+        with open(self.path, "rb+") as fh:
+            # Scan backwards in chunks for the last newline; everything
+            # after it is a torn partial record from a crashed writer.
+            pos, chunk = size, 4096
+            last_nl = -1
+            while pos > 0 and last_nl < 0:
+                start = max(0, pos - chunk)
+                fh.seek(start)
+                buf = fh.read(pos - start)
+                nl = buf.rfind(b"\n")
+                if nl >= 0:
+                    last_nl = start + nl
+                pos = start
+            fh.truncate(last_nl + 1 if last_nl >= 0 else 0)
+
     def write(self, records: List[dict]) -> None:
         if self._fh is None:
+            self._repair_torn_tail()
             self._fh = open(self.path, "a")
         for rec in records:
             self._fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
@@ -181,6 +212,8 @@ class JsonlSink:
 
     def close(self) -> None:
         if self._fh is not None:
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
             self._fh.close()
             self._fh = None
 
@@ -206,6 +239,57 @@ def make_sink(spec: Union[None, str, object]):
     raise TypeError(f"not a metrics sink: {spec!r}")
 
 
+class SinkBuffer:
+    """Buffered, crash-isolated front end shared by every record stream
+    (:class:`Metrics` and :class:`repro.serve.trace.Tracer`).
+
+    Records accumulate in a list and reach the sink in batches of
+    ``flush_every``.  A sink exception is counted in ``sink_errors``,
+    reported once on stderr, and the sink is swapped for a
+    :class:`NullSink` — the producer never sees the error (the records of
+    the failing flush are dropped: best-effort observability).
+    """
+
+    def __init__(self, sink, flush_every: int = 64):
+        self.sink = sink if hasattr(sink, "write") else make_sink(sink)
+        self.flush_every = max(1, int(flush_every))
+        self.sink_errors = 0
+        self._warned = False
+        self._buffer: List[dict] = []
+
+    def add(self, rec: dict) -> None:
+        self._buffer.append(rec)
+        if len(self._buffer) >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> None:
+        if not self._buffer:
+            return
+        records, self._buffer = self._buffer, []
+        if isinstance(self.sink, NullSink):
+            return
+        try:
+            self.sink.write(records)
+        except Exception as e:                       # noqa: BLE001
+            self.sink_errors += 1
+            if not self._warned:
+                self._warned = True
+                print(f"metrics sink failed ({type(e).__name__}: {e}); "
+                      "disabling sink — serving continues without streaming",
+                      file=sys.stderr)
+            self.sink = NullSink()
+
+    def close(self) -> None:
+        self.flush()
+        try:
+            self.sink.close()
+        except Exception:                            # noqa: BLE001
+            self.sink_errors += 1
+
+    def clear(self) -> None:
+        self._buffer = []
+
+
 # ----------------------------------------------------------------- collector
 
 
@@ -222,11 +306,23 @@ class Metrics:
 
     def __init__(self, sink: Union[None, str, object] = None,
                  flush_every: int = 64):
-        self.sink = make_sink(sink)
-        self.flush_every = max(1, int(flush_every))
-        self.sink_errors = 0
-        self._warned = False
+        self._sb = SinkBuffer(make_sink(sink), flush_every=flush_every)
         self.reset()
+
+    # The sink plumbing lives in the shared SinkBuffer; these properties
+    # keep the original public surface (tests read metrics.sink /
+    # metrics.sink_errors directly).
+    @property
+    def sink(self):
+        return self._sb.sink
+
+    @property
+    def sink_errors(self) -> int:
+        return self._sb.sink_errors
+
+    @property
+    def flush_every(self) -> int:
+        return self._sb.flush_every
 
     # -- lifecycle
 
@@ -235,17 +331,13 @@ class Metrics:
         self.ttft_s = Histogram()
         self.itl_s = Histogram()
         self.ticks = 0
-        self._buffer: List[dict] = []
+        self._sb.clear()
         self._gauge_sum: Dict[str, float] = {}
         self._gauge_last: Dict[str, float] = {}
         self._gauge_n: Dict[str, int] = {}
 
     def close(self) -> None:
-        self.flush()
-        try:
-            self.sink.close()
-        except Exception:
-            self.sink_errors += 1
+        self._sb.close()
 
     # -- recording (all host-side; never touches a device array)
 
@@ -273,43 +365,24 @@ class Metrics:
                 self._gauge_n[k] = self._gauge_n.get(k, 0) + 1
                 self._gauge_last[k] = v
         self.ticks += 1
-        self._buffer.append(rec)
-        if len(self._buffer) >= self.flush_every:
-            self.flush()
+        self._sb.add(rec)
 
     def event(self, kind: str, **fields) -> None:
         """Buffer one out-of-band event record for the sink (same stream as
-        the tick records, distinguished by an ``event`` key) — the engine
-        logs straggler windows and degradation transitions this way
-        (DESIGN.md §12) without inventing a second sink path."""
+        the tick records, distinguished by an ``event`` key).  Since PR 9
+        the engine's lifecycle events (degraded/restored/slow_window)
+        travel on the tracer's feed instead (DESIGN.md §13); this remains
+        for ad-hoc callers that want events interleaved with gauges."""
         rec = {"t": time.time(), "event": kind}
         rec.update(fields)
-        self._buffer.append(rec)
-        if len(self._buffer) >= self.flush_every:
-            self.flush()
+        self._sb.add(rec)
 
     # -- sink plumbing
 
     def flush(self) -> None:
-        """Hand the buffered records to the sink.  Crash isolation: a sink
-        exception is counted, reported once, and the sink is replaced by a
-        :class:`NullSink` — serving never sees it.  The records of the
-        failing flush are dropped (best-effort observability)."""
-        if not self._buffer:
-            return
-        records, self._buffer = self._buffer, []
-        if isinstance(self.sink, NullSink):
-            return
-        try:
-            self.sink.write(records)
-        except Exception as e:                       # noqa: BLE001
-            self.sink_errors += 1
-            if not self._warned:
-                self._warned = True
-                print(f"metrics sink failed ({type(e).__name__}: {e}); "
-                      "disabling sink — serving continues without streaming",
-                      file=sys.stderr)
-            self.sink = NullSink()
+        """Hand the buffered records to the sink (crash-isolated — see
+        :class:`SinkBuffer`)."""
+        self._sb.flush()
 
     # -- snapshot / restore (crash recovery, DESIGN.md §12)
 
@@ -338,7 +411,7 @@ class Metrics:
         self._gauge_n = {k: int(v) for k, v in snap["gauge_n"].items()}
         self.ttft_s = Histogram.from_state(snap["ttft_s"])
         self.itl_s = Histogram.from_state(snap["itl_s"])
-        self._buffer = []
+        self._sb.clear()
 
     # -- reading
 

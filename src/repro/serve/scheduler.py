@@ -37,12 +37,19 @@ class Scheduler:
         self._queue: List[Any] = []
         self._arrivals = 0
         self._unsorted = False
+        # queue-provenance hook (DESIGN.md §13): when set by a tracing
+        # engine, called as on_event(kind, **fields) on enter/requeue so
+        # queue churn shows up on the trace timeline; None costs nothing.
+        self.on_event = None
 
     def submit(self, req) -> None:
         req._arrival = self._arrivals
         self._arrivals += 1
         self._queue.append(req)
         self._unsorted = True
+        if self.on_event is not None:
+            self.on_event("queue_enter", rid=getattr(req, "rid", None),
+                          arrival=req._arrival, depth=len(self._queue))
 
     def requeue(self, req) -> None:
         """Put a preempted request back, keeping its original ``_arrival``
@@ -52,6 +59,9 @@ class Scheduler:
         assert hasattr(req, "_arrival"), "requeue is for admitted requests"
         self._queue.append(req)
         self._unsorted = True
+        if self.on_event is not None:
+            self.on_event("queue_requeue", rid=getattr(req, "rid", None),
+                          arrival=req._arrival, depth=len(self._queue))
 
     def __len__(self) -> int:
         return len(self._queue)

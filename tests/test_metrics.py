@@ -60,6 +60,30 @@ def test_histogram_underflow_overflow_and_empty():
     assert h.hi <= h.percentile(99) <= h.max
 
 
+def test_histogram_percentile_extremes():
+    h = Histogram()
+    assert h.percentile(0.0) == 0.0 == h.percentile(100.0)  # empty
+    h.record(0.05)                                      # single sample
+    lo_edge = h._edge(h._bucket(0.05) - 1)
+    hi_edge = h._edge(h._bucket(0.05))
+    # every percentile of a single sample lands inside its bucket
+    for q in (0.0, 1.0, 50.0, 99.0, 100.0):
+        assert lo_edge <= h.percentile(q) <= hi_edge
+    assert h.summary()["max"] == 0.05
+
+
+def test_histogram_clamps_out_of_range_values():
+    h = Histogram(lo=1e-2, hi=1.0, n_buckets=4)
+    for v in (0.0, 1e-6, 5.0, 100.0):
+        h.record(v)
+    assert h.count == 4
+    assert h.counts[0] == 2                             # underflow bucket
+    assert h.counts[-1] == 2                            # overflow bucket
+    assert 0.0 <= h.percentile(1) <= h.lo
+    assert h.hi <= h.percentile(99) <= h.max == 100.0
+    assert h.sum == pytest.approx(105.000001)           # sums stay exact
+
+
 # ---------------------------------------------------------------------------
 # sinks
 # ---------------------------------------------------------------------------
@@ -88,6 +112,35 @@ def test_jsonl_sink_streams_every_tick(tmp_path):
     assert [l["tick"] for l in lines] == list(range(len(lines)))
     assert all("queue_depth" in l and "batch_occupancy" in l for l in lines)
     assert lines[-1]["finished_total"] == len(done)
+
+
+def test_jsonl_sink_close_fsyncs_and_reopen_repairs_torn_tail(tmp_path):
+    """Durability contract: close() leaves every record on disk, and a
+    reopening writer truncates a torn final line (crash mid-write) back to
+    the last complete record before appending."""
+    path = tmp_path / "m.jsonl"
+    sink = JsonlSink(str(path))
+    sink.write([{"a": 1}, {"a": 2}])
+    sink.close()
+    assert sink._fh is None                             # idempotent close
+    sink.close()
+    with open(path, "a") as fh:
+        fh.write('{"a": 3, "torn')                      # no trailing newline
+
+    reopened = JsonlSink(str(path))
+    reopened.write([{"a": 4}])
+    reopened.close()
+    recs = [json.loads(l) for l in path.read_text().splitlines()]
+    assert [r["a"] for r in recs] == [1, 2, 4]          # torn record gone
+
+
+def test_jsonl_sink_repairs_file_with_no_complete_line(tmp_path):
+    path = tmp_path / "m.jsonl"
+    path.write_text('{"partial": ')                     # newline-free tail
+    sink = JsonlSink(str(path))
+    sink.write([{"a": 1}])
+    sink.close()
+    assert [json.loads(l)["a"] for l in path.read_text().splitlines()] == [1]
 
 
 def test_sink_crash_isolation():

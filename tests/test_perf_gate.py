@@ -15,7 +15,7 @@ ARTIFACTS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                              "artifacts")
 
 
-def _serve_artifact(decode_tok_s=1000.0, calib_us=100.0, version=7):
+def _serve_artifact(decode_tok_s=1000.0, calib_us=100.0, version=8):
     return {
         "version": version,
         "calibration": {"probe": "matmul_f32_256", "repeats": 5,
@@ -220,6 +220,33 @@ def test_tick_sweep_rows_gate_speedup_and_identity(tmp_path):
     ref, cand = _dirs(tmp_path, with_sweep(1.5), with_sweep(1.0))
     assert any(f.metric == "tick_speedup_vs_1"
                for f in _fails(gate_directories(ref, cand)))
+
+
+def test_trace_overhead_gates_against_absolute_ceiling(tmp_path):
+    """Schema v8: ``trace_overhead_pct`` uses the reference-independent
+    ceiling mode — 2.5% fails even when the reference also reads 2.5%
+    (no drift ratchet), and the bitwise/span-count pins are frozen."""
+    def with_trace(pct, bitwise=True, spans=63):
+        art = _serve_artifact()
+        row = copy.deepcopy(art["results"][0])
+        row.update(workload="trace_overhead", decode_ticks=4, prefill_chunk=4,
+                   max_new=16, trace_overhead_pct=pct,
+                   decode_tok_s_untraced=1000.0,
+                   streams_bitwise_equal=bitwise, trace_phase_spans=spans)
+        art["results"].append(row)
+        return art
+
+    ref, cand = _dirs(tmp_path, with_trace(0.0), with_trace(1.9))
+    assert not _fails(gate_directories(ref, cand))       # under the ceiling
+
+    ref, cand = _dirs(tmp_path, with_trace(2.5), with_trace(2.5))
+    assert any(f.metric == "trace_overhead_pct"          # ceiling is absolute:
+               for f in _fails(gate_directories(ref, cand)))  # ref ≡ cand still fails
+
+    ref, cand = _dirs(tmp_path, with_trace(0.0),
+                      with_trace(0.0, bitwise=False, spans=60))
+    bad = {f.metric for f in _fails(gate_directories(ref, cand))}
+    assert {"streams_bitwise_equal", "trace_phase_spans"} <= bad
 
 
 def test_row_key_and_kind_mapping():

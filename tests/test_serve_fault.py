@@ -424,18 +424,26 @@ class _ListSink:
 
 
 def test_watchdog_flags_slow_windows_through_the_sink():
-    sink = _ListSink()
-    eng = Engine(PARAMS, CFG, batch=1, max_len=MAX_LEN, metrics=sink,
+    """Since PR 9 the lifecycle *events* (slow_window, degraded/restored)
+    travel on the tracer's feed (DESIGN.md §13); the metrics stream keeps
+    the counter and the per-window wall-time gauge.  Both sinks are
+    attached here to pin which stream carries what."""
+    msink, tsink = _ListSink(), _ListSink()
+    eng = Engine(PARAMS, CFG, batch=1, max_len=MAX_LEN, metrics=msink,
+                 trace=tsink,
                  watchdog=StragglerWatchdog(threshold=0.0, warmup=1))
     eng.submit(_request(0, max_new=6))
     eng.run(100)
     eng.metrics.flush()
+    eng.trace.flush()
     slow = eng.metrics.counters["slow_windows"]
     assert slow > 0
-    events = [r for r in sink.records if r.get("event") == "slow_window"]
+    events = [r for r in tsink.records
+              if r.get("kind") == "event" and r.get("name") == "slow_window"]
     assert len(events) == slow
     assert all("window_s" in e and "tick" in e for e in events)
-    ticks = [r for r in sink.records if "queue_depth" in r]
+    assert not any(r.get("event") == "slow_window" for r in msink.records)
+    ticks = [r for r in msink.records if "queue_depth" in r]
     assert all("window_s" in r for r in ticks)   # per-window wall-time gauge
 
 
