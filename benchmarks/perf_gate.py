@@ -1,7 +1,7 @@
 """CI perf-regression gate: diff fresh bench artifacts against committed ones.
 
 Loads the committed reference artifacts under ``benchmarks/artifacts/``
-(kernel_bench schema v3, serve_bench schema v8) and a candidate directory of
+(kernel_bench schema v3, serve_bench schema v9) and a candidate directory of
 freshly generated artifacts from the same commands, matches result rows on
 their identity keys (kernel × backend × shape × block; workload × policy ×
 kv_quant × layout × mesh × shape), and checks every shared metric against a
@@ -41,14 +41,14 @@ import json
 import os
 import sys
 
-EXPECTED_VERSIONS = {"kernel": 3, "serve": 8}
+EXPECTED_VERSIONS = {"kernel": 3, "serve": 9}
 
 # Identity keys: the fields that *name* a row.  Everything else is a metric.
 KERNEL_KEYS = ("kernel", "backend", "shape", "block", "cap", "bits", "scheme")
 SERVE_KEYS = ("workload", "arch", "policy", "kernel_backend", "kv_layout",
               "kv_quant", "mesh", "batch", "max_len", "prompt_len",
               "prefix_len", "tail_len", "max_new", "requests", "waves",
-              "block_size", "decode_ticks", "prefill_chunk")
+              "block_size", "decode_ticks", "prefill_chunk", "draft_k")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,7 +58,8 @@ class Metric:
     ``mode`` — 'higher' (regression = candidate below ref), 'lower'
     (regression = candidate above ref), 'exact' (must match to abs_floor),
     'bool' (must equal ref), 'ceiling' (candidate must not exceed
-    ``abs_floor``; the reference value is ignored — the budget itself is
+    ``abs_floor``) / 'floor' (candidate must not fall below ``abs_floor``;
+    for both, the reference value is ignored — the budget itself is
     the contract).  ``normalize`` scales the candidate by the
     machine-speed ratio before comparing.  ``advisory`` reports but never
     fails.  The tolerance is ``max(rel_tol * |ref|, abs_floor)``."""
@@ -140,6 +141,22 @@ SERVE_METRICS = (
     Metric("trace_phase_spans", "exact"),
     Metric("decode_tok_s_untraced", "higher", rel_tol=0.25, normalize=True,
            advisory=True),
+    # schema v9: speculative decode (DESIGN.md §14).  The speedup is a
+    # same-machine spec/plain ratio at the replay-oracle accept ceiling —
+    # banded against the reference *and* held to the ≥1.5× absolute
+    # contract (the workload's reason to exist).  Accept rates and window
+    # counters are deterministic on the greedy smoke workload — exact, so
+    # drafter-quality or acceptance-walk drift gates as a behaviour change.
+    Metric("spec_speedup_vs_plain", "higher", rel_tol=0.25),
+    Metric("spec_speedup_vs_plain", "floor", abs_floor=1.5),
+    Metric("decode_tok_s_plain", "higher", rel_tol=0.25, normalize=True,
+           advisory=True),
+    Metric("spec_accept_rate", "exact", abs_floor=1e-9),
+    Metric("spec_accept_rate_prompt_lookup", "exact", abs_floor=1e-9),
+    Metric("spec_windows", "exact"),
+    Metric("spec_draft_tokens", "exact"),
+    Metric("spec_accepted_tokens", "exact"),
+    Metric("spec_emitted_tokens", "exact"),
     # latency percentiles: CPU-noise-dominated at smoke shapes — advisory.
     Metric("ttft_ms.p50", "lower", rel_tol=1.0, normalize=True,
            advisory=True),
@@ -226,6 +243,12 @@ def check_metric(m: Metric, ref_row: dict, cand_row: dict,
             return Finding(sev, file, key, m.path,
                            f"{float(cand_v):g} > {m.abs_floor:g} "
                            f"absolute ceiling")
+        return None
+    if m.mode == "floor":
+        if float(cand_v) < m.abs_floor:
+            return Finding(sev, file, key, m.path,
+                           f"{float(cand_v):g} < {m.abs_floor:g} "
+                           f"absolute floor")
         return None
     ref_v, cand_v = float(ref_v), float(cand_v)
     if m.mode == "exact":

@@ -57,7 +57,7 @@ from repro.serve import Engine, Request, SamplingParams
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "artifacts", "serve_bench.json")
 
-ARTIFACT_VERSION = 8
+ARTIFACT_VERSION = 9
 
 POLICIES = ("none", "dither", "stochastic", "deterministic")
 
@@ -439,10 +439,125 @@ def bench_trace_overhead(cfg, params, *, batch: int, max_len: int,
     }
 
 
+def bench_spec_decode(cfg, params, *, batch: int, max_len: int,
+                      prompt_len: int, max_new: int, requests: int,
+                      draft_k: int = 4, kv_layout: str = "ring",
+                      block_size=None, mesh=None, waves: int = 6):
+    """Schema-v9 workload (DESIGN.md §14): draft-and-verify decode speedup
+    over plain sequential decode, measured at the bulk-commit ceiling.
+
+    Two persistent engines — spec-decode on, spec-decode off — serve
+    identical waves interleaved (plain, spec, plain, spec, …) so shared-host
+    load drift lands on both sides of every pair, and the *max* paired
+    spec/plain decode-rate ratio across waves is kept
+    (``spec_speedup_vs_plain``) — a same-machine ratio, so machine
+    normalisation cancels and the gate bands it directly against the ≥1.5×
+    contract.  The spec engine drafts with :class:`ReplayDrafter` seeded
+    from the plain engine's own recorded streams: accept rate is 1 by
+    construction, so the ratio isolates what the verify-dispatch mechanics
+    buy (K tokens per dispatch) from workload-dependent draftability.  The
+    workload-dependent side is reported separately:
+    ``spec_accept_rate_prompt_lookup`` is the model-free
+    :class:`PromptLookupDrafter`'s accept rate on the same waves — exact
+    (deterministic greedy engine), so drafter-quality drift gates too.
+
+    Every spec stream (replay *and* prompt-lookup) is compared bitwise
+    against the plain stream each wave: acceptance is exact token match
+    against the engine's own sampler, so speculation must never perturb a
+    stream (the DESIGN.md §14 contract the test layer pins per-config)."""
+    from repro.serve.draft import PromptLookupDrafter, ReplayDrafter
+    kw = {}
+    if kv_layout == "paged":
+        kw = dict(kv_layout="paged", block_size=block_size,
+                  prefix_cache=False)
+
+    prompts = [[(5 * r + i) % (cfg.vocab_size - 1) + 1
+                for i in range(prompt_len)] for r in range(requests)]
+
+    def run_wave(eng, rid0):
+        eng.reset_stats()
+        for r, prompt in enumerate(prompts):
+            eng.submit(Request(
+                rid=rid0 + r, prompt=prompt,
+                sampling=SamplingParams(max_new=max_new, seed=r,
+                                        counter_offset=1000 * r)))
+        done = list(eng.run(ticks=requests * (max_new + 4) + 20))
+        eng.finished = []
+        st = eng.stats
+        dc = st["decode_tokens"] / st["decode_s"] if st["decode_s"] else 0.0
+        return dc, {r.rid - rid0: list(r.out) for r in done}
+
+    eng_plain = Engine(params, cfg, batch, max_len, mesh=mesh, **kw)
+    if kv_layout == "paged":
+        block_size = eng_plain.block_size
+    # warm-up wave doubles as the replay oracle: record what plain decode
+    # emits for each prompt, then draft exactly that through the spec engine
+    _, oracle = run_wave(eng_plain, 0)
+    streams = {tuple(p): oracle[r] for r, p in enumerate(prompts)}
+    eng_spec = Engine(params, cfg, batch, max_len, mesh=mesh,
+                      spec_decode=True, draft_k=draft_k,
+                      drafter=ReplayDrafter(streams), **kw)
+    run_wave(eng_spec, 0)                # warm-up: compiles verify + commit
+
+    dc_spec = dc_plain = best_ratio = 0.0
+    completed = 0
+    streams_equal = True
+    for w in range(waves):
+        rid0 = (w + 1) * 10_000
+        plain_dc, plain_streams = run_wave(eng_plain, rid0)
+        spec_dc, spec_streams = run_wave(eng_spec, rid0)
+        streams_equal = streams_equal and spec_streams == plain_streams
+        completed += len(spec_streams)
+        dc_plain, dc_spec = max(dc_plain, plain_dc), max(dc_spec, spec_dc)
+        if plain_dc:
+            best_ratio = max(best_ratio, spec_dc / plain_dc)
+    mc = eng_spec.metrics.summary()["counters"]   # last measured wave
+    drafted = int(mc.get("spec_draft_tokens", 0))
+    accepted = int(mc.get("spec_accepted_tokens", 0))
+
+    # the workload-dependent side: prompt-lookup drafting on the same wave
+    # (untimed — one wave, accept rate and stream parity are what's pinned)
+    eng_pl = Engine(params, cfg, batch, max_len, mesh=mesh,
+                    spec_decode=True, draft_k=draft_k,
+                    drafter=PromptLookupDrafter(), **kw)
+    _, pl_streams = run_wave(eng_pl, 10_000)      # same rids as wave 0
+    streams_equal = streams_equal and pl_streams == {
+        r: list(out) for r, out in enumerate(streams.values())}
+    plc = eng_pl.metrics.summary()["counters"]
+    pl_drafted = int(plc.get("spec_draft_tokens", 0))
+    pl_accepted = int(plc.get("spec_accepted_tokens", 0))
+    return {
+        "workload": "spec_decode", "arch": cfg.name,
+        "policy": "none", "kernel_backend": None,
+        **_mesh_profile(cfg, eng_spec),
+        "kv_layout": kv_layout,
+        "block_size": int(block_size) if kv_layout == "paged" else None,
+        "kv_quant": False, "batch": batch, "max_len": max_len,
+        "prompt_len": prompt_len, "max_new": max_new,
+        "requests": requests, "waves": waves,
+        "draft_k": int(draft_k),
+        "completed": int(completed),
+        "decode_tok_s": dc_spec,
+        "decode_tok_s_plain": dc_plain,
+        "spec_speedup_vs_plain": best_ratio,
+        "streams_bitwise_equal": bool(streams_equal),
+        # per-wave spec counters (DESIGN.md §10): deterministic host-side
+        # quantities under the replay oracle — exact-gated
+        "spec_windows": int(mc.get("spec_windows", 0)),
+        "spec_draft_tokens": drafted,
+        "spec_accepted_tokens": accepted,
+        "spec_emitted_tokens": int(mc.get("spec_emitted_tokens", 0)),
+        "spec_accept_rate": (accepted / drafted) if drafted else 0.0,
+        "spec_accept_rate_prompt_lookup": ((pl_accepted / pl_drafted)
+                                           if pl_drafted else 0.0),
+    }
+
+
 def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
           full: bool = False, backend: str = "jnp", policies=POLICIES,
           reduced: bool = True, kv_layout: str = "ring", block_size=None,
-          mesh_shape=None, tick_sweep=(1, 4)):
+          mesh_shape=None, tick_sweep=(1, 4), spec_decode: bool = False,
+          draft_k: int = 4):
     """Run the policy × kv_quant grid; returns (rows, artifact).  The paged
     layout additionally runs the prefix-reuse workload on attention-only
     archs (others fall back to the ring grid — the paged pool requires
@@ -461,7 +576,13 @@ def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
     tracing-on vs tracing-off engines interleaved on a decode-heavy shape,
     reporting ``trace_overhead_pct`` (gated against an absolute ≤2%
     ceiling) and ``streams_bitwise_equal`` (tracing must not perturb any
-    token stream)."""
+    token stream).
+
+    Schema v9 adds the **spec-decode workload** (DESIGN.md §14) under
+    ``spec_decode=True``: draft-and-verify decode vs plain decode on
+    interleaved waves, reporting ``spec_speedup_vs_plain`` (gated ≥1.5×
+    at the replay-oracle accept ceiling), prompt-lookup accept rate, and
+    the bitwise stream-parity flag."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -553,6 +674,27 @@ def sweep(arch: str = "smollm_135m", *, smoke: bool = False,
         f"bitwise={int(res['streams_bitwise_equal'])} "
         f"decode={res['decode_tok_s']:.0f}tok/s"))
 
+    if spec_decode:
+        if not registry.supports_spec_decode(cfg):
+            print(f"arch {cfg.name} does not support spec-decode "
+                  f"(batched verify needs attention-only, non-MoE); "
+                  f"skipping the spec workload", file=sys.stderr)
+        else:
+            # decode-heavy like the trace workload: windows need room to
+            # amortise, and replay accept keeps every window at draft_k
+            spec_shape = dict(shape, max_new=4 * shape["max_new"])
+            res = bench_spec_decode(cfg, params, kv_layout=kv_layout,
+                                    block_size=block_size, mesh=mesh,
+                                    draft_k=draft_k, **spec_shape)
+            results.append(res)
+            rows.append((
+                f"serve[spec_decode|k={draft_k}|{kv_layout}{mesh_tag}]",
+                1e6 / res["decode_tok_s"] if res["decode_tok_s"] else 0.0,
+                f"speedup={res['spec_speedup_vs_plain']:.2f}x "
+                f"accept={res['spec_accept_rate']:.2f} "
+                f"pl_accept={res['spec_accept_rate_prompt_lookup']:.2f} "
+                f"bitwise={int(res['streams_bitwise_equal'])}"))
+
     if kv_layout == "paged":
         for kv_quant in (False, True):
             res = bench_prefix_reuse(cfg, params, block_size=block_size,
@@ -628,6 +770,12 @@ def main(argv=None) -> None:
     ap.add_argument("--decode-ticks", default="1,4", metavar="N,N,...",
                     help="tick-sweep settings for the schema-v6 overlapped "
                          "workload (DESIGN.md §11); '' disables the sweep")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="run the schema-v9 speculative-decode workload "
+                         "(DESIGN.md §14): replay-oracle speedup vs plain "
+                         "decode + prompt-lookup accept rate")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative window width for the spec workload")
     ap.add_argument("--out", default=DEFAULT_OUT,
                     help="JSON artifact path ('' to skip writing)")
     args = ap.parse_args(argv)
@@ -657,7 +805,8 @@ def main(argv=None) -> None:
                            kv_layout=args.kv_layout,
                            block_size=args.block_size,
                            mesh_shape=mesh_shape,
-                           tick_sweep=tick_sweep)
+                           tick_sweep=tick_sweep,
+                           spec_decode=args.spec_decode, draft_k=args.draft_k)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")

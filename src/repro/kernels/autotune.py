@@ -30,10 +30,12 @@ from typing import Callable, Dict, List, Optional, Tuple
 __all__ = [
     "VMEM_BUDGET_BYTES",
     "matmul_vmem_bytes", "quantize_vmem_bytes", "decode_attention_vmem_bytes",
+    "verify_attention_vmem_bytes",
     "matmul_candidates", "quantize_candidates", "decode_attention_candidates",
-    "paged_attention_candidates",
+    "paged_attention_candidates", "verify_attention_candidates",
     "best_block", "autotune_matmul", "autotune_quantize",
     "autotune_decode_attention", "autotune_paged_attention",
+    "autotune_verify_attention",
     "cache_key", "load_cache", "save_cache", "clear_cache",
     "register_observer",
 ]
@@ -111,6 +113,16 @@ def decode_attention_vmem_bytes(block: Tuple[int], *, hd: int, group: int,
     return kv_tiles + upcast + logits + scales + kpos + state + q_tile
 
 
+def verify_attention_vmem_bytes(block: Tuple[int], *, hd: int, kq: int,
+                                group: int, quantized: bool) -> int:
+    """Working-set model for the multi-token verify kernel: the flash-decode
+    model with the logit/weight tiles and softmax state widened from
+    ``group`` rows to the ``kq·group`` query rows scored per grid step (the
+    K/V tiles, scales and k_pos rows are shared across rows)."""
+    return decode_attention_vmem_bytes(block, hd=hd, group=kq * group,
+                                       quantized=quantized)
+
+
 def _tile_sizes(dim: int, quantum: int, ceiling: int) -> List[int]:
     """Power-of-two multiples of ``quantum`` up to min(dim, ceiling), falling
     back to the (smaller) dim itself so CPU-scale shapes stay tunable."""
@@ -157,6 +169,21 @@ def decode_attention_candidates(cap: int, *, hd: int, group: int,
         (bk,)
         for bk in _tile_sizes(cap, _LANE, 4096)
         if decode_attention_vmem_bytes((bk,), hd=hd, group=group,
+                                       quantized=quantized) <= budget
+    ]
+    return cands or [(cap,)]
+
+
+def verify_attention_candidates(cap: int, *, hd: int, kq: int, group: int,
+                                quantized: bool) -> List[Tuple[int]]:
+    """(bk,) cache-length tile candidates for the verify kernel: the decode
+    candidate grid filtered through the widened ``kq·group``-row working
+    set, so deep drafts shrink the tile instead of blowing VMEM."""
+    budget = VMEM_BUDGET_BYTES * _VMEM_USABLE_FRACTION
+    cands = [
+        (bk,)
+        for bk in _tile_sizes(cap, _LANE, 4096)
+        if verify_attention_vmem_bytes((bk,), hd=hd, kq=kq, group=group,
                                        quantized=quantized) <= budget
     ]
     return cands or [(cap,)]
@@ -281,6 +308,13 @@ def best_block(kind: str, shape: tuple, dtype, bits: int, scheme: str,
         # largest tile = fewest sequential cache blocks per (slot, head);
         # length-aware skipping still prunes at this granularity
         return max(cands, key=lambda b: b[0])
+    if kind == "verify_attention":
+        _b, cap, _nkv, kq, group, hd = shape
+        cands = verify_attention_candidates(
+            cap, hd=hd, kq=kq, group=group, quantized="int8" in str(dtype))
+        # same pick rule as decode: largest tile = fewest sequential cache
+        # blocks per (slot, head); the per-row freeze still prunes reads
+        return max(cands, key=lambda b: b[0])
     if kind == "paged_attention":
         _b, max_len, _nkv, group, hd = shape
         cands = paged_attention_candidates(
@@ -367,6 +401,22 @@ def autotune_decode_attention(b: int, cap: int, nkv: int, group: int, hd: int,
     cands = candidates or decode_attention_candidates(
         cap, hd=hd, group=group, quantized=quantized)
     return _sweep("decode_attention", (b, cap, nkv, group, hd), dtype,
+                  8 if quantized else 16, "flash", backend, cands, run,
+                  repeats)
+
+
+def autotune_verify_attention(b: int, cap: int, nkv: int, kq: int,
+                              group: int, hd: int, *, backend: str,
+                              run: Callable[[tuple], object],
+                              dtype="int8", repeats: int = 2,
+                              candidates: Optional[List[tuple]] = None):
+    """Measured (bk,) sweep for the multi-token verify kernel.  ``kq`` (the
+    draft depth) is part of the key — the logit tile is kq·group rows, so
+    winners don't transfer across depths."""
+    quantized = "int8" in str(dtype)
+    cands = candidates or verify_attention_candidates(
+        cap, hd=hd, kq=kq, group=group, quantized=quantized)
+    return _sweep("verify_attention", (b, cap, nkv, kq, group, hd), dtype,
                   8 if quantized else 16, "flash", backend, cands, run,
                   repeats)
 

@@ -48,6 +48,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["decode_attention_call", "paged_decode_attention_call",
+           "verify_attention_call", "paged_verify_attention_call",
            "shrink_block"]
 
 # renamed TPUCompilerParams -> CompilerParams across jax versions
@@ -216,6 +217,192 @@ def decode_attention_call(
 
 
 # ---------------------------------------------------------------------------
+# multi-token verify variant: k query positions per slot (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def _verify_body(
+    pos_ref,        # scalar prefetch: (B,) int32 base (first-row) positions
+    q_ref,          # (1, kq, 1, group, hd)
+    k_ref,          # (1, bk, 1, hd) int8 codes or bf16
+    v_ref,          # (1, bk, 1, hd)
+    ks_ref,         # (1, 1, bk) f32 — only when quantized
+    vs_ref,         # (1, 1, bk) f32 — only when quantized
+    kpos_ref,       # (1, bk) int32
+    out_ref,        # (1, kq, 1, group, hd) f32
+    m_ref,          # scratch (kq*group, 1) f32 — running max
+    s_ref,          # scratch (kq*group, 1) f32 — running sum of exp
+    acc_ref,        # scratch (kq*group, hd) f32 — value accumulator
+    *,
+    bk: int,
+    kq: int,
+    group: int,
+    hd: int,
+    window: int,
+    quantized: bool,
+):
+    """``_attn_body``'s split-K online-softmax recurrence run for kq query
+    rows per slot at positions pos_b .. pos_b+kq-1 (speculative verify,
+    DESIGN.md §14).  The row loop is a *static Python* loop so each row
+    runs the exact (group, bk) dot shapes, op order and mask of the
+    one-token kernel at position pos_b+t — a fused (kq·group, bk) logit
+    tile would change the float-summation shape and break the bitwise
+    stream-parity contract (batched dots are not row-pure across M on
+    every backend).  Row t freezes on blocks ``j > (pos_b+t)//bk``, the
+    per-row analogue of ``_attn_body``'s ``j <= last`` guard, so its
+    processed-block set matches sequential decode exactly."""
+    b, j = pl.program_id(0), pl.program_id(2)
+    nb = pl.num_programs(2)
+    pos_b = pos_ref[b]
+    rows = kq * group
+    last = (pos_b + kq - 1) // bk  # deepest block any query row can touch
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full((rows, 1), -jnp.inf, jnp.float32)
+        s_ref[...] = jnp.zeros((rows, 1), jnp.float32)
+        acc_ref[...] = jnp.zeros((rows, hd), jnp.float32)
+
+    @pl.when(j <= last)
+    def _accumulate():
+        qs = q_ref[...].reshape(kq, group, hd)
+        kc = k_ref[...].reshape(bk, hd)
+        vc = v_ref[...].reshape(bk, hd).astype(jnp.float32)
+        kp = kpos_ref[...].reshape(1, bk)
+        for t in range(kq):
+            sl = slice(t * group, (t + 1) * group)
+            q = qs[t]                                     # (group, hd)
+            logits = jax.lax.dot_general(
+                q, kc.astype(q.dtype),  # int8→bf16 upcast, tile only
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) * float(1.0 / math.sqrt(hd))                # (group, bk)
+            if quantized:
+                # per-position key scales fold in after the codes dot
+                logits = logits * (ks_ref[...].reshape(1, bk) * (1.0 / 127.0))
+            qp = pos_b + t                # this row's absolute query position
+            valid = (kp >= 0) & (kp <= qp)
+            if window:
+                valid = valid & (kp > qp - window)
+            logits = jnp.where(valid, logits, _NEG_BIG)
+
+            m_prev, s_prev, acc_prev = m_ref[sl], s_ref[sl], acc_ref[sl]
+            m_new = jnp.maximum(m_prev,
+                                jnp.max(logits, axis=-1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(logits - m_new)                   # (group, bk)
+            s_new = s_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            if quantized:
+                # per-position value scales attach to the weights
+                p = p * (vs_ref[...].reshape(1, bk) * (1.0 / 127.0))
+            acc_new = acc_prev * alpha + jax.lax.dot_general(
+                p, vc, dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            act = j <= qp // bk           # row-t processed-block freeze
+            m_ref[sl] = jnp.where(act, m_new, m_prev)
+            s_ref[sl] = jnp.where(act, s_new, s_prev)
+            acc_ref[sl] = jnp.where(act, acc_new, acc_prev)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        out_ref[...] = (acc_ref[...] / s_ref[...]).reshape(
+            1, kq, 1, group, hd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block", "interpret"),
+)
+def verify_attention_call(
+    q: jax.Array,        # (B, kq, n_kv, group, hd) — post-RoPE draft queries
+    k: jax.Array,        # (B, cap, n_kv, hd) int8 codes or bf16
+    v: jax.Array,        # (B, cap, n_kv, hd)
+    k_pos: jax.Array,    # (B, cap) int32 — absolute position per ring slot
+    pos: jax.Array,      # (B,) int32 — per-slot base (first-row) position
+    k_scale: jax.Array | None = None,   # (B, cap, n_kv) f32 when int8
+    v_scale: jax.Array | None = None,
+    *,
+    window: int = 0,
+    block: tuple = (512,),
+    interpret: bool = True,
+) -> jax.Array:
+    """Multi-token verify attention over the ring cache →
+    (B, kq, n_kv, group, hd) f32.
+
+    Query row t of slot b attends as if decoding at absolute position
+    ``pos[b] + t`` — the draft rows' K/V must already sit in the cache
+    (the verify forward writes them before attending, mirroring the decode
+    write-then-attend order).  ``block = (bk,)`` is the cache-length tile
+    (shrunk to a divisor of cap), shared with the one-token kernel so the
+    per-row recurrence matches it bit-for-bit.
+    """
+    bsz, cap, nkv, hd = k.shape
+    kq, group = q.shape[1], q.shape[3]
+    quantized = k_scale is not None
+    (bk,) = block
+    bk = shrink_block(bk, cap)
+    nb = cap // bk
+
+    def kv_clamp(j, p_, b):
+        return jnp.minimum(j, (p_[b] + kq - 1) // bk)
+
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (bsz,))
+    inputs = [q, k, v]
+    in_specs = [
+        pl.BlockSpec((1, kq, 1, group, hd),
+                     lambda b, h, j, p_: (b, 0, h, 0, 0)),
+        pl.BlockSpec((1, bk, 1, hd),
+                     lambda b, h, j, p_: (b, kv_clamp(j, p_, b), h, 0)),
+        pl.BlockSpec((1, bk, 1, hd),
+                     lambda b, h, j, p_: (b, kv_clamp(j, p_, b), h, 0)),
+    ]
+    body = _verify_body
+    if quantized:
+        # (B, cap, n_kv) → (B, n_kv, cap): lane dim = tiled cache axis
+        inputs += [k_scale.transpose(0, 2, 1), v_scale.transpose(0, 2, 1)]
+        in_specs += [
+            pl.BlockSpec((1, 1, bk),
+                         lambda b, h, j, p_: (b, h, kv_clamp(j, p_, b))),
+            pl.BlockSpec((1, 1, bk),
+                         lambda b, h, j, p_: (b, h, kv_clamp(j, p_, b))),
+        ]
+    else:
+        def body(pos_ref, q_ref, k_ref, v_ref, kpos_ref, out_ref,
+                 m_ref, s_ref, acc_ref, **kw):
+            return _verify_body(pos_ref, q_ref, k_ref, v_ref, None, None,
+                                kpos_ref, out_ref, m_ref, s_ref, acc_ref,
+                                **kw)
+    inputs.append(k_pos)
+    in_specs.append(
+        pl.BlockSpec((1, bk), lambda b, h, j, p_: (b, kv_clamp(j, p_, b)))
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, nkv, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, kq, 1, group, hd),
+                               lambda b, h, j, p_: (b, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kq * group, 1), jnp.float32),
+            pltpu.VMEM((kq * group, 1), jnp.float32),
+            pltpu.VMEM((kq * group, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(body, bk=bk, kq=kq, group=group, hd=hd,
+                          window=window, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, kq, nkv, group, hd),
+                                       jnp.float32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pos, *inputs)
+
+
+# ---------------------------------------------------------------------------
 # paged variant: block-table gather over the shared block pool (DESIGN.md §6)
 # ---------------------------------------------------------------------------
 
@@ -370,6 +557,179 @@ def paged_decode_attention_call(
                           quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, nkv, group, hd), jnp.float32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pos, block_tables, *inputs)
+
+
+def _paged_verify_body(
+    pos_ref,        # scalar prefetch: (B,) int32 base (first-row) positions
+    bt_ref,         # scalar prefetch: (B, nbmax) int32 physical block ids
+    q_ref,          # (1, kq, 1, group, hd)
+    k_ref,          # (1, bs, 1, hd) int8 codes or bf16 — one pool block
+    v_ref,          # (1, bs, 1, hd)
+    ks_ref,         # (1, 1, bs) f32 — only when quantized
+    vs_ref,         # (1, 1, bs) f32 — only when quantized
+    out_ref,        # (1, kq, 1, group, hd) f32
+    m_ref,          # scratch (kq*group, 1) f32 — running max
+    s_ref,          # scratch (kq*group, 1) f32 — running sum of exp
+    acc_ref,        # scratch (kq*group, hd) f32 — value accumulator
+    *,
+    bs: int,
+    kq: int,
+    group: int,
+    hd: int,
+    window: int,
+    quantized: bool,
+):
+    """``_verify_body`` over pool blocks: implicit key positions
+    ``j·bs + t`` (no k_pos tile), block-table gather in the index maps,
+    per-row ``j <= (pos_b+t)//bs`` freezing.  The static per-row loop runs
+    the exact (group, bs) dot shapes of ``_paged_attn_body`` at position
+    pos_b+t, so each row is bit-identical to sequential paged decode on
+    the same pool block (see ``_verify_body`` on why a fused row tile
+    would break that)."""
+    b, j = pl.program_id(0), pl.program_id(2)
+    nb = pl.num_programs(2)
+    pos_b = pos_ref[b]
+    rows = kq * group
+    last = (pos_b + kq - 1) // bs  # deepest logical block any row can touch
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full((rows, 1), -jnp.inf, jnp.float32)
+        s_ref[...] = jnp.zeros((rows, 1), jnp.float32)
+        acc_ref[...] = jnp.zeros((rows, hd), jnp.float32)
+
+    @pl.when(j <= last)
+    def _accumulate():
+        qs = q_ref[...].reshape(kq, group, hd)
+        kc = k_ref[...].reshape(bs, hd)
+        vc = v_ref[...].reshape(bs, hd).astype(jnp.float32)
+        # implicit key positions of this logical block
+        kp = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        for t in range(kq):
+            sl = slice(t * group, (t + 1) * group)
+            q = qs[t]                                     # (group, hd)
+            logits = jax.lax.dot_general(
+                q, kc.astype(q.dtype),
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) * float(1.0 / math.sqrt(hd))                # (group, bs)
+            if quantized:
+                logits = logits * (ks_ref[...].reshape(1, bs) * (1.0 / 127.0))
+            qp = pos_b + t                # this row's absolute query position
+            valid = kp <= qp
+            if window:
+                valid = valid & (kp > qp - window)
+            logits = jnp.where(valid, logits, _NEG_BIG)
+
+            m_prev, s_prev, acc_prev = m_ref[sl], s_ref[sl], acc_ref[sl]
+            m_new = jnp.maximum(m_prev,
+                                jnp.max(logits, axis=-1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(logits - m_new)                   # (group, bs)
+            s_new = s_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            if quantized:
+                p = p * (vs_ref[...].reshape(1, bs) * (1.0 / 127.0))
+            acc_new = acc_prev * alpha + jax.lax.dot_general(
+                p, vc, dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            act = j <= qp // bs           # row-t processed-block freeze
+            m_ref[sl] = jnp.where(act, m_new, m_prev)
+            s_ref[sl] = jnp.where(act, s_new, s_prev)
+            acc_ref[sl] = jnp.where(act, acc_new, acc_prev)
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        out_ref[...] = (acc_ref[...] / s_ref[...]).reshape(
+            1, kq, 1, group, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_verify_attention_call(
+    q: jax.Array,        # (B, kq, n_kv, group, hd) — post-RoPE draft queries
+    k: jax.Array,        # (n_blocks, bs, n_kv, hd) int8 codes or bf16 pool
+    v: jax.Array,        # (n_blocks, bs, n_kv, hd)
+    block_tables: jax.Array,  # (B, nbmax) int32 physical block per logical
+    pos: jax.Array,      # (B,) int32 — per-slot base (first-row) position
+    k_scale: jax.Array | None = None,   # (n_blocks, bs, n_kv) f32 when int8
+    v_scale: jax.Array | None = None,
+    *,
+    window: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paged multi-token verify attention → (B, kq, n_kv, group, hd) f32.
+
+    The cache tile is the pool block (bs = ``k.shape[1]``) — the same tile
+    the one-token paged kernel uses — so each query row's recurrence is
+    bit-identical to sequential paged decode at position ``pos[b] + t``
+    regardless of backend or autotuning (the pool pins the association
+    order).  The engine must have allocated blocks covering every row it
+    intends to accept; deeper rows read whatever the (clamped) table gather
+    returns and their output is discarded host-side."""
+    nblk, bs, nkv, hd = k.shape
+    bsz = q.shape[0]
+    nbmax = block_tables.shape[1]
+    kq, group = q.shape[1], q.shape[3]
+    quantized = k_scale is not None
+
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (bsz,))
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+
+    def bt_clamp(j, p_, bt_, b):
+        return bt_[b, jnp.minimum(j, (p_[b] + kq - 1) // bs)]
+
+    def kv_map(b, h, j, p_, bt_):
+        return (bt_clamp(j, p_, bt_, b), 0, h, 0)
+
+    inputs = [q, k, v]
+    in_specs = [
+        pl.BlockSpec((1, kq, 1, group, hd),
+                     lambda b, h, j, p_, bt_: (b, 0, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+        pl.BlockSpec((1, bs, 1, hd), kv_map),
+    ]
+    body = _paged_verify_body
+    if quantized:
+        # (n_blocks, bs, n_kv) → (n_blocks, n_kv, bs): lane dim in-block
+        inputs += [k_scale.transpose(0, 2, 1), v_scale.transpose(0, 2, 1)]
+        in_specs += [
+            pl.BlockSpec((1, 1, bs),
+                         lambda b, h, j, p_, bt_:
+                         (bt_clamp(j, p_, bt_, b), h, 0)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda b, h, j, p_, bt_:
+                         (bt_clamp(j, p_, bt_, b), h, 0)),
+        ]
+    else:
+        def body(pos_ref, bt_ref, q_ref, k_ref, v_ref, out_ref,
+                 m_ref, s_ref, acc_ref, **kw):
+            return _paged_verify_body(pos_ref, bt_ref, q_ref, k_ref, v_ref,
+                                      None, None, out_ref, m_ref, s_ref,
+                                      acc_ref, **kw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, nkv, nbmax),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, kq, 1, group, hd),
+                               lambda b, h, j, p_, bt_: (b, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kq * group, 1), jnp.float32),
+            pltpu.VMEM((kq * group, 1), jnp.float32),
+            pltpu.VMEM((kq * group, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(body, bs=bs, kq=kq, group=group, hd=hd,
+                          window=window, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, kq, nkv, group, hd),
+                                       jnp.float32),
         compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),

@@ -3,8 +3,10 @@
 One entry point per hot-path kernel — ``matmul`` (the fused §VIII 'separate'
 quantise+multiply), ``quantize`` (elementwise codes), ``decode_attention``
 (flash-decode over the serving ring KV cache, int8 dither codes consumed
-in-kernel) and ``paged_decode_attention`` (the same recurrence over the
-paged block pool, gathered through a scalar-prefetched block table) —
+in-kernel), ``paged_decode_attention`` (the same recurrence over the
+paged block pool, gathered through a scalar-prefetched block table) and
+their multi-token ``verify_attention`` / ``paged_verify_attention``
+variants (k speculative query rows per slot, DESIGN.md §14) —
 routed to one of three interchangeable backends:
 
 * ``pallas-tpu``       — the compiled Pallas kernels (real TPU).
@@ -47,12 +49,15 @@ import jax.numpy as jnp
 from repro.kernels import autotune, ref
 from repro.kernels import ops as kops
 from repro.kernels.decode_attention import (decode_attention_call,
-                                            paged_decode_attention_call)
+                                            paged_decode_attention_call,
+                                            paged_verify_attention_call,
+                                            verify_attention_call)
 
 __all__ = [
     "KernelBackend", "register_backend", "available_backends",
     "resolve_backend", "resolve_policy_backend", "matmul", "quantize",
-    "decode_attention", "paged_decode_attention", "DEFAULT_CPU_BACKEND",
+    "decode_attention", "paged_decode_attention",
+    "verify_attention", "paged_verify_attention", "DEFAULT_CPU_BACKEND",
 ]
 
 ENV_VAR = "REPRO_KERNEL_BACKEND"
@@ -82,6 +87,12 @@ class KernelBackend:
     quantize: Callable
     decode_attention: Optional[Callable] = None
     paged_decode_attention: Optional[Callable] = None
+    # multi-token verify variants (speculative decoding, DESIGN.md §14):
+    # ``verify_attention(q, k, v, k_pos, pos, *, k_scale, v_scale, window,
+    # block)`` scores (B, kq, n_kv, group, hd) draft queries; the paged
+    # variant again takes no block (tile = pool block)
+    verify_attention: Optional[Callable] = None
+    paged_verify_attention: Optional[Callable] = None
 
 
 _REGISTRY: dict = {}
@@ -128,9 +139,22 @@ def _make_pallas(name: str, interpret: bool) -> KernelBackend:
             q, k, v, block_tables, pos, k_scale, v_scale, window=window,
             interpret=interpret)
 
+    def _verify_attention(q, k, v, k_pos, pos, *, k_scale, v_scale, window,
+                          block):
+        return verify_attention_call(
+            q, k, v, k_pos, pos, k_scale, v_scale, window=window,
+            block=tuple(block), interpret=interpret)
+
+    def _paged_verify_attention(q, k, v, block_tables, pos, *, k_scale,
+                                v_scale, window):
+        return paged_verify_attention_call(
+            q, k, v, block_tables, pos, k_scale, v_scale, window=window,
+            interpret=interpret)
+
     return register_backend(
         KernelBackend(name, _matmul, _quantize, _decode_attention,
-                      _paged_decode_attention))
+                      _paged_decode_attention, _verify_attention,
+                      _paged_verify_attention))
 
 
 def _make_xla_ref() -> KernelBackend:
@@ -198,9 +222,37 @@ def _make_xla_ref() -> KernelBackend:
                           jnp.asarray(pos, jnp.int32), k_scale, v_scale,
                           window=window)
 
+    @functools.partial(jax.jit, static_argnames=("window", "block"))
+    def _verify_jit(q, k, v, k_pos, pos, k_scale, v_scale, *, window, block):
+        return ref.verify_attention_ref(
+            q, k, v, k_pos, pos, k_scale, v_scale, window=window, block=block)
+
+    def _verify_attention(q, k, v, k_pos, pos, *, k_scale, v_scale, window,
+                          block):
+        # same block semantics as decode: None collapses to one whole-cap
+        # block, which is also what the serving decode path uses off-TPU —
+        # keeping verify and decode on the same association order is what
+        # makes the spec-decode stream bitwise ≡ plain decode (DESIGN.md §14)
+        return _verify_jit(q, k, v, k_pos, jnp.asarray(pos, jnp.int32),
+                           k_scale, v_scale, window=window,
+                           block=None if block is None else tuple(block))
+
+    @functools.partial(jax.jit, static_argnames=("window",))
+    def _paged_verify_jit(q, k, v, block_tables, pos, k_scale, v_scale, *,
+                          window):
+        return ref.paged_verify_attention_ref(
+            q, k, v, block_tables, pos, k_scale, v_scale, window=window)
+
+    def _paged_verify_attention(q, k, v, block_tables, pos, *, k_scale,
+                                v_scale, window):
+        return _paged_verify_jit(q, k, v, block_tables,
+                                 jnp.asarray(pos, jnp.int32), k_scale,
+                                 v_scale, window=window)
+
     return register_backend(
         KernelBackend("xla-ref", _matmul, _quantize, _decode_attention,
-                      _paged_decode_attention))
+                      _paged_decode_attention, _verify_attention,
+                      _paged_verify_attention))
 
 
 _make_pallas("pallas-tpu", interpret=False)
@@ -364,5 +416,67 @@ def paged_decode_attention(
     """
     be = resolve_backend(backend)
     return be.paged_decode_attention(q, k, v, block_tables, pos,
+                                     k_scale=k_scale, v_scale=v_scale,
+                                     window=window)
+
+
+def verify_attention(
+    q: jax.Array,        # (B, kq, n_kv_heads, group, hd) — draft queries
+    k: jax.Array,        # (B, cap, n_kv_heads, hd) int8 codes or bf16
+    v: jax.Array,        # (B, cap, n_kv_heads, hd)
+    k_pos: jax.Array,    # (B, cap) int32 absolute position per ring slot
+    pos: jax.Array,      # (B,) int32 per-slot base (first-row) position
+    *,
+    k_scale: Optional[jax.Array] = None,   # (B, cap, n_kv_heads) f32
+    v_scale: Optional[jax.Array] = None,
+    window: int = 0,
+    block: Optional[tuple] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Multi-token verify attention over the ring KV cache →
+    (B, kq, n_kv, group, hd) f32, through the selected backend
+    (DESIGN.md §14).
+
+    Query row t of slot b attends as if decoding at position ``pos[b]+t``
+    (per-row causal mask and processed-block freeze), so accepted draft
+    rows reproduce sequential decode's attention bitwise on the same tile.
+    Pallas backends autotune ``block=(bk,)`` under the kq·group-row working
+    set; xla-ref defaults to one whole-cap block — the same association
+    order as its one-token decode path, which is what the engine's
+    spec-decode stream-parity contract relies on off-TPU.
+    """
+    be = resolve_backend(backend)
+    if block is None and be.name.startswith("pallas"):
+        b, cap, nkv, hd = k.shape
+        kq, group = q.shape[1], q.shape[3]
+        bits = 8 if k.dtype == jnp.int8 else 16
+        block = autotune.best_block("verify_attention",
+                                    (b, cap, nkv, kq, group, hd),
+                                    str(k.dtype), bits, "flash", be.name)
+    return be.verify_attention(q, k, v, k_pos, pos, k_scale=k_scale,
+                               v_scale=v_scale, window=window, block=block)
+
+
+def paged_verify_attention(
+    q: jax.Array,        # (B, kq, n_kv_heads, group, hd) — draft queries
+    k: jax.Array,        # (n_blocks, bs, n_kv_heads, hd) int8 codes or bf16
+    v: jax.Array,        # (n_blocks, bs, n_kv_heads, hd)
+    block_tables: jax.Array,  # (B, nbmax) int32 physical block per logical
+    pos: jax.Array,      # (B,) int32 per-slot base (first-row) position
+    *,
+    k_scale: Optional[jax.Array] = None,  # (n_blocks, bs, n_kv) f32
+    v_scale: Optional[jax.Array] = None,
+    window: int = 0,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Paged multi-token verify attention → (B, kq, n_kv, group, hd) f32.
+
+    The tile is the pool block (no per-call ``block``), so every backend
+    runs the identical per-row recurrence and row t matches sequential
+    paged decode at position pos+t bitwise — tile-pinned stream parity on
+    every backend, not just xla-ref (DESIGN.md §14).
+    """
+    be = resolve_backend(backend)
+    return be.paged_verify_attention(q, k, v, block_tables, pos,
                                      k_scale=k_scale, v_scale=v_scale,
                                      window=window)

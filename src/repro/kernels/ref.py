@@ -21,6 +21,8 @@ __all__ = [
     "dither_matmul_ref",
     "decode_attention_ref",
     "paged_decode_attention_ref",
+    "verify_attention_ref",
+    "paged_verify_attention_ref",
 ]
 
 
@@ -301,3 +303,61 @@ def paged_decode_attention_ref(
     (m, s, acc), _ = jax.lax.scan(step, init,
                                   jnp.arange(nbmax, dtype=jnp.int32))
     return acc / s
+
+
+def verify_attention_ref(
+    q: jax.Array,        # (B, kq, n_kv, group, hd) — post-RoPE draft queries
+    k: jax.Array,        # (B, cap, n_kv, hd) int8 codes or bf16
+    v: jax.Array,        # (B, cap, n_kv, hd)
+    k_pos: jax.Array,    # (B, cap) int32
+    pos: jax.Array,      # (B,) int32 per-slot base (first-row) position
+    k_scale: jax.Array | None = None,   # (B, cap, n_kv) f32 when int8
+    v_scale: jax.Array | None = None,
+    *,
+    window: int = 0,
+    block: tuple | None = None,
+) -> jax.Array:
+    """Oracle for the multi-token verify kernel → (B, kq, n_kv, group, hd)
+    f32 (DESIGN.md §14).
+
+    *Literally* ``decode_attention_ref`` once per query row: row t runs
+    the one-token recurrence at position pos+t over the same cache, and
+    the rows stack on axis 1.  That construction — rather than one fused
+    (kq·group, bk) logit tile — is deliberate: batched dots are not
+    row-pure across the M dimension on every XLA backend (1-ulp
+    association drift), and the spec-decode contract is that row t's
+    output is *bitwise* what sequential decode at pos+t would produce.
+    The Pallas verify kernels mirror this with a static per-row loop over
+    one-token-shaped dots, so kernel↔oracle parity holds per row too
+    (tests/test_spec_decode.py)."""
+    kq = q.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.stack(
+        [decode_attention_ref(q[:, t], k, v, k_pos, pos + t,
+                              k_scale, v_scale, window=window, block=block)
+         for t in range(kq)], axis=1)
+
+
+def paged_verify_attention_ref(
+    q: jax.Array,        # (B, kq, n_kv, group, hd) — post-RoPE draft queries
+    k: jax.Array,        # (n_blocks, bs, n_kv, hd) int8 codes or bf16 pool
+    v: jax.Array,        # (n_blocks, bs, n_kv, hd)
+    block_tables: jax.Array,  # (B, nbmax) int32 physical block per logical
+    pos: jax.Array,      # (B,) int32 per-slot base (first-row) position
+    k_scale: jax.Array | None = None,   # (n_blocks, bs, n_kv) f32 when int8
+    v_scale: jax.Array | None = None,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Oracle for the paged multi-token verify kernel →
+    (B, kq, n_kv, group, hd) f32.  ``paged_decode_attention_ref`` once per
+    query row at position pos+t, stacked on axis 1 — by construction
+    bitwise what sequential paged decode produces per row, on every
+    backend (the tile is pinned to the pool block; see
+    ``verify_attention_ref`` on why the rows are not fused)."""
+    kq = q.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.stack(
+        [paged_decode_attention_ref(q[:, t], k, v, block_tables, pos + t,
+                                    k_scale, v_scale, window=window)
+         for t in range(kq)], axis=1)

@@ -58,6 +58,14 @@ def serve_main(argv=None):
                     help="decode ticks fused into one device dispatch; the "
                          "host drains tokens/metrics once per window "
                          "(DESIGN.md §11)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative draft-and-verify decode (DESIGN.md "
+                         "§14): prompt-lookup drafting + one multi-token "
+                         "verify dispatch per window; the emitted stream "
+                         "stays bitwise the plain-decode stream")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative window width: 1 pending token + "
+                         "draft-k - 1 drafted tokens per verify dispatch")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="piggyback chunked prefill: admit prompts in chunks "
                          "of this many tokens between decode windows "
@@ -135,7 +143,8 @@ def serve_main(argv=None):
                     decode_ticks=args.decode_ticks,
                     prefill_chunk=args.prefill_chunk,
                     queue_cap=args.queue_cap, shed_policy=args.shed_policy,
-                    snapshot_path=args.snapshot_path)
+                    snapshot_path=args.snapshot_path,
+                    spec_decode=args.spec_decode, draft_k=args.draft_k)
     resumed = False
     if args.resume and args.snapshot_path and os.path.exists(args.snapshot_path):
         with open(args.snapshot_path) as fh:
@@ -176,6 +185,15 @@ def serve_main(argv=None):
               f"prefix_hit_tokens={st['prefix_hit_tokens']} "
               f"preemptions={st['preemptions']} "
               f"cached_now={ps['cached']}")
+    if args.spec_decode:
+        mc0 = engine.metrics.summary()["counters"]
+        drafted = int(mc0.get("spec_draft_tokens", 0))
+        acc = int(mc0.get("spec_accepted_tokens", 0))
+        rate = acc / drafted if drafted else 0.0
+        print(f"spec-decode: k={args.draft_k} "
+              f"windows={int(mc0.get('spec_windows', 0))} "
+              f"drafted={drafted} accepted={acc} accept_rate={rate:.2f} "
+              f"emitted={int(mc0.get('spec_emitted_tokens', 0))}")
     if mesh is not None:
         print(f"mesh: data={engine.dp} model={engine.tp} "
               f"heads_sharded={engine.heads_sharded} "

@@ -26,7 +26,8 @@ __all__ = [
     "init_model", "apply_model", "make_cache", "apply_decode", "batch_spec",
     "apply_prefill", "apply_prefill_chunked", "apply_prefill_paged",
     "merge_prefill", "supports_batched_prefill", "supports_paged_kv",
-    "supports_chunked_prefill",
+    "supports_chunked_prefill", "supports_spec_decode", "apply_verify",
+    "spec_commit",
 ]
 
 
@@ -104,6 +105,31 @@ def supports_batched_prefill(cfg: ModelConfig) -> bool:
     prefill inside ``apply_prefill`` instead (DESIGN.md §6)."""
     return (not cfg.is_encdec
             and all(cfg.layer_kind(i) == "attn" for i in range(cfg.n_layers)))
+
+
+def supports_spec_decode(cfg: ModelConfig) -> bool:
+    """True when draft-and-verify decode (DESIGN.md §14) preserves the
+    bitwise stream contract: attention-only decoders without MoE.  SSM /
+    RG-LRU recurrences have no multi-token verify form, and MoE capacity
+    ranks are a cumsum over every token in a dispatch — a k-token verify row
+    would compete for expert capacity with its own future draft positions,
+    which sequential decode never does."""
+    return supports_batched_prefill(cfg) and not cfg.n_experts
+
+
+def apply_verify(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                 cache: Params, *, policy=None, counter=0, kv_offset=None,
+                 alive=None, wcap=None):
+    """Score K draft positions per slot in one forward (transformer
+    ``verify_step``); requires ``supports_spec_decode(cfg)``."""
+    return transformer.verify_step(params, cfg, tokens, cache, policy=policy,
+                                   counter=counter, kv_offset=kv_offset,
+                                   alive=alive, wcap=wcap)
+
+
+def spec_commit(cache: Params, new_pos, written, *, draft_k: int) -> Params:
+    """Bulk-commit + rejected-suffix scrub after a verify forward."""
+    return transformer.spec_commit(cache, new_pos, written, draft_k=draft_k)
 
 
 def supports_paged_kv(cfg: ModelConfig) -> bool:

@@ -35,7 +35,7 @@ Params = Dict[str, Any]
 __all__ = [
     "init_params", "forward", "decode_step", "init_cache", "prefill",
     "prefill_with_cache", "prefill_with_cache_chunked",
-    "prefill_with_cache_paged", "merge_cache",
+    "prefill_with_cache_paged", "merge_cache", "verify_step", "spec_commit",
 ]
 
 
@@ -1155,3 +1155,282 @@ def decode_step(
     if block_tables is not None:
         new_cache["block_tables"] = block_tables
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# speculative verify: k-token scoring + bulk commit (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def _attention_verify(params, cfg: ModelConfig, x, cache, pos, policy, counter,
+                      kv_offset=None, alive=None, wcap=None,
+                      block_tables=None):
+    """k-token verify attention against the KV cache.  x: (B, K, d).
+
+    Row t scores draft position ``pos + t``; every op is the *row-pure*
+    analogue of ``_attention_decode`` so row t is bitwise what a one-token
+    decode at ``pos + t`` would compute (given the same inputs — the
+    bulk-commit contract, DESIGN.md §14).  The dense projections run fused
+    over (B, K, d) — XLA keeps plain matmuls row-pure across M — but the
+    attention dots go through the per-row verify kernels, and the dither
+    quantiser sees the same (value, position + offset, element index)
+    triples decode would.
+
+    All K draft positions are written up-front; the per-position causal mask
+    (``k_pos``/implicit block positions ≤ query position) hides not-yet-
+    "real" slots from earlier rows exactly as empty slots are hidden in
+    decode.  ``alive`` (B,) bool and ``wcap`` (B,) bound the writes: row t
+    of slot b writes only when ``alive[b] and t < wcap[b]`` — dead rows and
+    over-budget draft positions route to a dropped out-of-bounds ring index
+    or the paged trash block, so the verify forward never dirties cache
+    state the commit cannot account for.
+    """
+    b, kq = x.shape[0], x.shape[1]
+    hd, nh, nkv = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    paged = block_tables is not None
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+
+    q = dense(x, params["wq"], policy, counter, seed=1).reshape(b, kq, nh, hd)
+    k = dense(x, params["wk"], policy, counter, seed=2).reshape(b, kq, nkv, hd)
+    v = dense(x, params["wv"], policy, counter, seed=3).reshape(b, kq, nkv, hd)
+    if cfg.qkv_bias and "bq" in params:
+        q = q + params["bq"].reshape(1, 1, nh, hd)
+        k = k + params["bk"].reshape(1, 1, nkv, hd)
+        v = v + params["bv"].reshape(1, 1, nkv, hd)
+    offs = jnp.arange(kq, dtype=jnp.int32)[None, :]
+    posv = pos[:, None] + offs                                  # (B, K)
+    q = layers.rope(q, posv, cfg.rope_theta)
+    k = layers.rope(k, posv, cfg.rope_theta)
+
+    if alive is None:
+        alive = jnp.ones((b,), bool)
+    if wcap is None:
+        wcap = jnp.full((b,), kq, jnp.int32)
+    writable = ((offs < jnp.asarray(wcap, jnp.int32)[:, None])
+                & jnp.asarray(alive, bool)[:, None])            # (B, K)
+
+    if paged:
+        bs = cache["k"].shape[1]
+        nbp = cache["k"].shape[0]
+        lb = jnp.clip(posv // bs, 0, block_tables.shape[1] - 1)
+        phys = jnp.take_along_axis(block_tables, lb, axis=1)
+        # non-writable draft positions go to the trash block (their logical
+        # block may be unallocated or beyond this row's write budget)
+        phys = jnp.where(writable, phys, nbp - 1)
+        slot = jnp.mod(posv, bs)
+    else:
+        cap = cache["k"].shape[1]
+        rows = jnp.arange(b)[:, None]
+        # slot == cap is out of bounds: the scatter drops those writes
+        slot = jnp.where(writable, jnp.mod(posv, cap), cap)
+    quantized = cache["k"].dtype == jnp.int8
+    if quantized:
+        ctr = posv if kv_offset is None else posv + jnp.broadcast_to(
+            jnp.asarray(kv_offset, jnp.int32), (b,))[:, None]
+        ctr4 = ctr.reshape(b, kq, 1, 1)
+        idx4 = _kv_elem_idx(nkv, hd)
+        k8, ks = _kv_q8(k, ctr4, idx4, 101)
+        v8, vs = _kv_q8(v, ctr4, idx4, 102)
+        if paged:
+            new_cache = {
+                "k": cache["k"].at[phys, slot].set(k8),
+                "v": cache["v"].at[phys, slot].set(v8),
+                "k_scale": cache["k_scale"].at[phys, slot].set(ks),
+                "v_scale": cache["v_scale"].at[phys, slot].set(vs),
+            }
+        else:
+            new_cache = {
+                "k": cache["k"].at[rows, slot].set(k8),
+                "v": cache["v"].at[rows, slot].set(v8),
+                "k_scale": cache["k_scale"].at[rows, slot].set(ks),
+                "v_scale": cache["v_scale"].at[rows, slot].set(vs),
+                "k_pos": cache["k_pos"].at[rows, slot].set(posv),
+            }
+    elif paged:
+        new_cache = {
+            "k": cache["k"].at[phys, slot].set(k.astype(cache["k"].dtype)),
+            "v": cache["v"].at[phys, slot].set(v.astype(cache["v"].dtype)),
+        }
+    else:
+        ck = cache["k"].at[rows, slot].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot].set(v.astype(cache["v"].dtype))
+        k_pos = cache["k_pos"].at[rows, slot].set(posv)
+        new_cache = {"k": ck, "v": cv, "k_pos": k_pos}
+
+    from repro.kernels import dispatch as _dispatch
+
+    group = nh // nkv
+    qg = q.reshape(b, kq, nkv, group, hd)
+    if paged:
+        attn = _dispatch.paged_verify_attention(
+            qg, new_cache["k"], new_cache["v"], block_tables, pos,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"),
+            window=cfg.window or 0,
+        )
+    else:
+        attn = _dispatch.verify_attention(
+            qg, new_cache["k"], new_cache["v"], new_cache["k_pos"], pos,
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"),
+            window=cfg.window or 0,
+        )
+    out = dist_ctx.gather_heads(attn.astype(x.dtype).reshape(b, kq, nh * hd))
+    return dense(out, params["wo"], policy, counter, seed=4), new_cache
+
+
+def _apply_verify_block(bp, cfg: ModelConfig, x, *, policy, counter,
+                        cache_entry, pos, kv_offset, alive, wcap,
+                        block_tables):
+    """Verify-forward transformer block: attention-only archs (the
+    ``supports_spec_decode`` gate), so no SSM/RG-LRU branches.  MLP and
+    norms are row-pure as-is; MoE is excluded by the gate (its capacity
+    ranks cumsum over every token in the dispatch, so a verify row would
+    compete with its own future draft positions)."""
+    h = layers.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    out, new_cache = _attention_verify(bp["attn"], cfg, h, cache_entry, pos,
+                                       policy, counter, kv_offset=kv_offset,
+                                       alive=alive, wcap=wcap,
+                                       block_tables=block_tables)
+    x = x + out
+    if "mlp" in bp or "moe" in bp:
+        h2 = layers.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if "moe" in bp:
+            x = x + moe.moe_ffn(bp["moe"], cfg, h2, policy, counter)
+        else:
+            x = x + layers.mlp(bp["mlp"], h2, cfg.mlp_act, policy, counter)
+    return x, new_cache
+
+
+def verify_step(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, K) int32 — last committed token + k-1 drafts
+    cache: Params,
+    *,
+    policy: Optional[QuantPolicy] = None,
+    counter=0,
+    kv_offset=None,
+    alive=None,         # (B,) bool — rows holding a live request
+    wcap=None,          # (B,) int32 — per-row cache-write budget (≤ K)
+):
+    """Score K draft positions per slot in one forward → (B, K, vocab)
+    logits + the cache with all K positions written (DESIGN.md §14).
+
+    ``logits[:, t]`` is bitwise the (B, vocab) logits ``decode_step`` would
+    return at position ``pos + t`` after sequentially committing
+    ``tokens[:, 1..t]`` — provided those tokens match what the sequential
+    stream would have sampled (the accept condition the engine checks).
+    ``cache["pos"]`` is *not* advanced: the caller commits the accepted
+    prefix with ``spec_commit`` once accept lengths are known.
+    """
+    pos = cache["pos"]
+    block_tables = cache.get("block_tables")
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    p_ = _period(cfg)
+
+    def body(carry, xs):
+        h = carry
+        bp, ce = xs
+        new_entries = []
+        for pos_i in range(p_):
+            h, ne = _apply_verify_block(
+                bp[pos_i], cfg, h, policy=policy, counter=counter,
+                cache_entry=ce[pos_i], pos=pos, kv_offset=kv_offset,
+                alive=alive, wcap=wcap, block_tables=block_tables,
+            )
+            new_entries.append(ne)
+        return h, tuple(new_entries)
+
+    if params["blocks"]:
+        x, new_layer_caches = jax.lax.scan(
+            body, x, (tuple(params["blocks"]), tuple(cache["layers"]))
+        )
+    else:
+        new_layer_caches = ()
+    rep = cfg.n_layers // p_
+    new_rem = []
+    for i, bp in enumerate(params["remainder"]):
+        x, ne = _apply_verify_block(
+            bp, cfg, x, policy=policy, counter=counter,
+            cache_entry=cache["remainder"][i], pos=pos, kv_offset=kv_offset,
+            alive=alive, wcap=wcap, block_tables=block_tables,
+        )
+        new_rem.append(ne)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = dense(x, head, policy, counter, seed=9).astype(jnp.float32)
+    logits = logits[..., : cfg.vocab_size]
+    new_cache = {
+        "pos": pos,
+        "layers": list(new_layer_caches),
+        "remainder": new_rem,
+    }
+    if block_tables is not None:
+        new_cache["block_tables"] = block_tables
+    return logits, new_cache
+
+
+def spec_commit(cache: Params, new_pos, written, *, draft_k: int) -> Params:
+    """Bulk-commit a verified window: ``pos`` advances to ``new_pos`` and the
+    rejected suffix — draft positions in ``[new_pos, pos + written)`` — is
+    scrubbed back to the never-written state (codes/scales zeroed, ring
+    ``k_pos`` reset to -1) so the cache is byte-identical to one that only
+    ever decoded the accepted tokens (DESIGN.md §14).
+
+    The accepted prefix needs no touch-up: dither codes are position-pure,
+    so the bytes the verify forward wrote at positions ``< new_pos`` are
+    already exactly what sequential decode would have written.  ``written``
+    (B,) is the per-row write budget the verify forward ran with (0 for
+    dead rows); ``draft_k`` is the static window width.
+    """
+    old = jnp.asarray(cache["pos"], jnp.int32)
+    new_pos = jnp.asarray(new_pos, jnp.int32)
+    written = jnp.asarray(written, jnp.int32)
+    b = old.shape[0]
+    offs = jnp.arange(draft_k, dtype=jnp.int32)[None, :]
+    p = old[:, None] + offs                                     # (B, K)
+    stale = (offs < written[:, None]) & (p >= new_pos[:, None])
+    block_tables = cache.get("block_tables")
+    paged = block_tables is not None
+
+    def scrub_ring(e, lead):
+        cap = e["k"].shape[-3]
+        rows = jnp.arange(b)[:, None]
+        slot = jnp.where(stale, jnp.mod(p, cap), cap)  # cap → dropped OOB
+        ix = (slice(None), rows, slot) if lead else (rows, slot)
+        out = {
+            "k": e["k"].at[ix].set(0),
+            "v": e["v"].at[ix].set(0),
+            "k_pos": e["k_pos"].at[ix].set(-1),
+        }
+        if "k_scale" in e:
+            out["k_scale"] = e["k_scale"].at[ix].set(0.0)
+            out["v_scale"] = e["v_scale"].at[ix].set(0.0)
+        return out
+
+    def scrub_paged(e, lead):
+        nbp, bs = e["k"].shape[-4], e["k"].shape[-3]
+        lb = jnp.clip(p // bs, 0, block_tables.shape[1] - 1)
+        phys = jnp.take_along_axis(block_tables, lb, axis=1)
+        phys = jnp.where(stale, phys, nbp - 1)         # non-stale → trash
+        slot = jnp.mod(p, bs)
+        ix = (slice(None), phys, slot) if lead else (phys, slot)
+        out = {"k": e["k"].at[ix].set(0), "v": e["v"].at[ix].set(0)}
+        if "k_scale" in e:
+            out["k_scale"] = e["k_scale"].at[ix].set(0.0)
+            out["v_scale"] = e["v_scale"].at[ix].set(0.0)
+        return out
+
+    scrub = scrub_paged if paged else scrub_ring
+    new_cache = {
+        "pos": new_pos,
+        "layers": [scrub(e, True) for e in cache["layers"]],
+        "remainder": [scrub(e, False) for e in cache["remainder"]],
+    }
+    if paged:
+        new_cache["block_tables"] = block_tables
+    return new_cache

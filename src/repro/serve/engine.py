@@ -46,6 +46,7 @@ from repro.dist.fault_tolerance import StragglerWatchdog
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.numerics.policy import QuantPolicy
+from repro.serve.draft import Drafter, PromptLookupDrafter
 from repro.serve.kvpool import KVPool
 from repro.serve.metrics import Metrics
 from repro.serve.sampling import SamplingParams, sample_tokens
@@ -53,9 +54,9 @@ from repro.serve.scheduler import Scheduler
 from repro.serve.trace import Tracer
 
 __all__ = ["make_serve_fns", "make_decode_and_sample", "make_fused_decode",
-           "make_paged_prefill", "make_chunked_prefill",
+           "make_paged_prefill", "make_chunked_prefill", "make_spec_verify",
            "Engine", "Request", "SamplingParams", "Scheduler", "KVPool",
-           "Metrics"]
+           "Metrics", "Drafter", "PromptLookupDrafter"]
 
 
 def make_serve_fns(cfg: ModelConfig, policy: Optional[QuantPolicy] = None, *,
@@ -186,6 +187,54 @@ def make_fused_decode(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
         return toks_all, token, counters, cache
 
     return fused_decode
+
+
+def make_spec_verify(cfg: ModelConfig, policy: Optional[QuantPolicy] = None,
+                     *, draft_k: int):
+    """Build the speculative verify dispatch (DESIGN.md §14).
+
+    ``spec_verify(params, drafts, cache, kv_offset, counter, temps, topks,
+    seeds, counters, alive, wcap)`` scores ``draft_k`` positions per slot in
+    one jitted call and returns ``(sampled (B, K) int32, cache')``.
+    ``drafts[:, 0]`` is each slot's last committed token (the pending decode
+    input) and ``drafts[:, 1:]`` the drafter's proposals; ``sampled[:, t]``
+    is what the engine's sampler — stateless in (seed, counter + t) — draws
+    from row t's logits, which are bitwise the sequential decode logits at
+    position ``pos + t`` whenever rows 1..t matched (the accept condition
+    the host walk checks).  All K positions are written to the (donated)
+    cache up to each row's ``wcap`` budget; ``pos`` does not advance — the
+    host follows up with one ``spec_commit`` dispatch once accept lengths
+    are known.  Dead rows (``alive`` false) write nothing: ring writes
+    route out of bounds and paged writes (plus their block-table reads)
+    route to the trash block, mirroring the fused decode window's masking.
+    """
+    policy = policy.resolved() if policy is not None else None
+
+    def spec_verify(params, drafts, cache, kv_offset, counter,
+                    temps, topks, seeds, counters, alive, wcap):
+        paged = "block_tables" in cache
+        step_cache = cache
+        if paged:
+            leaf = (jax.tree.leaves(cache["layers"][0])[0] if cache["layers"]
+                    else jax.tree.leaves(cache["remainder"][0])[0])
+            nbp = leaf.shape[1] if cache["layers"] else leaf.shape[0]
+            step_cache = dict(cache)
+            step_cache["block_tables"] = jnp.where(
+                alive[:, None], cache["block_tables"], jnp.int32(nbp - 1))
+        logits, new_cache = registry.apply_verify(
+            params, cfg, drafts, step_cache, policy=policy, counter=counter,
+            kv_offset=kv_offset, alive=alive, wcap=wcap)
+        if paged:
+            new_cache["block_tables"] = cache["block_tables"]
+        # row t samples with the counter sequential decode would have used
+        # at position pos + t — with bitwise-equal logits the draw is
+        # bitwise the sequential draw, for greedy and temperature alike
+        sampled = jnp.stack(
+            [sample_tokens(logits[:, t], temps, topks, seeds, counters + t)
+             for t in range(draft_k)], axis=1)
+        return sampled, new_cache
+
+    return spec_verify
 
 
 def make_chunked_prefill(cfg: ModelConfig,
@@ -361,7 +410,10 @@ class Engine:
                  snapshot_path: Optional[str] = None,
                  snapshot_every: int = 1,
                  degrade_high: float = 0.90,
-                 degrade_low: float = 0.70):
+                 degrade_low: float = 0.70,
+                 spec_decode: bool = False,
+                 draft_k: int = 4,
+                 drafter: Optional[Drafter] = None):
         self.params, self.cfg, self.batch, self.max_len = params, cfg, batch, max_len
         policy = policy.resolved() if policy is not None else None
         self.policy = policy
@@ -384,6 +436,32 @@ class Engine:
                 raise ValueError("chunked prefill requires an attention-only "
                                  f"decoder; {cfg.name!r} is not one")
         self.prefill_chunk = prefill_chunk
+
+        # ---- speculative decoding (DESIGN.md §14): draft-and-verify decode
+        # windows; every gate protects the bitwise stream contract
+        self.spec_decode = bool(spec_decode)
+        self.draft_k = int(draft_k)
+        self.drafter = drafter if drafter is not None else PromptLookupDrafter()
+        if self.spec_decode:
+            if self.draft_k < 2:
+                raise ValueError(f"draft_k must be >= 2, got {draft_k}")
+            if not registry.supports_spec_decode(cfg):
+                raise ValueError(
+                    "spec_decode requires an attention-only decoder without "
+                    f"MoE; {cfg.name!r} is not one (SSM/RG-LRU recurrences "
+                    "have no multi-token verify form, and MoE capacity ranks "
+                    "couple a verify row to its own future draft positions)")
+            if policy is not None and policy.enabled:
+                raise ValueError(
+                    "spec_decode requires policy=None: the activation "
+                    "quantiser's tensor-global absmax couples verify rows, "
+                    "so they would not be bitwise the sequential steps")
+            if kv_layout == "ring" and cfg.window and cfg.window < max_len:
+                raise ValueError(
+                    "spec_decode over the ring layout needs ring capacity "
+                    f"= max_len; window={cfg.window} < max_len={max_len} "
+                    "would let the verify forward overwrite positions its "
+                    "own earlier rows still attend (use kv_layout='paged')")
 
         # ---- fault-tolerance / overload knobs (DESIGN.md §12)
         if shed_policy not in self.SHED_POLICIES:
@@ -508,6 +586,9 @@ class Engine:
         # windowed decode dispatches compile once per distinct window length
         # (decode_ticks plus any shorter drain tails) — see _fused_for
         self._fused_variants: dict = {}
+        # speculative verify/commit dispatches, one pair per draft_k
+        self._spec_variants: dict = {}
+        self._commit_variants: dict = {}
         if mesh is None:
             self._prefill = jax.jit(prefill_step)
             if kv_layout == "paged":
@@ -539,6 +620,11 @@ class Engine:
             self._in_specs_fused = (self._pspec, row, self._cspec, row, sc,
                                     row, row, row, row, row, row, tok2)
             self._out_specs_fused = (P(None, "data"), row, row, self._cspec)
+            # speculative verify: drafts/sampled (B, K) shard rows on 'data'
+            self._in_specs_spec = (self._pspec, tok2, self._cspec, row, sc,
+                                   row, row, row, row, row, row)
+            self._out_specs_spec = (tok2, self._cspec)
+            self._in_specs_commit = (self._cspec, row, row)
             if kv_layout == "paged":
                 self._in_specs_paged = (self._pspec, tok2, row, row, tok2,
                                         self._cspec, row, sc)
@@ -647,6 +733,36 @@ class Engine:
             self._fused_variants[n] = fn
         return fn
 
+    def _spec_for(self, k: int):
+        """The speculative verify dispatch for a ``k``-row window, compiled
+        on first use (steady state uses ``draft_k`` only)."""
+        fn = self._spec_variants.get(k)
+        if fn is None:
+            base = make_spec_verify(self._cfg_local, self.policy, draft_k=k)
+            if self.mesh is None:
+                fn = jax.jit(base, donate_argnums=(2,))
+            else:
+                fn = jax.jit(self._mesh_wrap(base, self._in_specs_spec,
+                                             self._out_specs_spec),
+                             donate_argnums=(2,))
+            self._spec_variants[k] = fn
+        return fn
+
+    def _spec_commit_for(self, k: int):
+        """The bulk-commit + rejected-suffix-scrub dispatch for ``k``-row
+        windows: ``fn(cache, new_pos, written) -> cache`` (cache donated)."""
+        fn = self._commit_variants.get(k)
+        if fn is None:
+            base = functools.partial(registry.spec_commit, draft_k=k)
+            if self.mesh is None:
+                fn = jax.jit(base, donate_argnums=(0,))
+            else:
+                fn = jax.jit(self._mesh_wrap(base, self._in_specs_commit,
+                                             self._cspec),
+                             donate_argnums=(0,))
+            self._commit_variants[k] = fn
+        return fn
+
     # ------------------------------------------------------ pool aggregates
 
     @property
@@ -736,7 +852,10 @@ class Engine:
         self._update_pressure()
         self._admit_and_prefill()
         if any(s is not None for s in self.slots):
-            self._decode_tick()
+            if self.spec_decode:
+                self._spec_decode_tick()
+            else:
+                self._decode_tick()
         self._observe_window(self._now() - t0)
         self._maybe_fail("sink_write")
         self._record_tick_metrics()
@@ -1395,7 +1514,7 @@ class Engine:
             return True
         return made_room
 
-    def _pre_decode_paged(self):
+    def _pre_decode_paged(self, window: Optional[int] = None):
         """Before each decode window: the window writes this slot's next
         ``w = min(decode_ticks, budget)`` positions, so blocks covering
         ``[p, p + w)`` must exist *now* — the host cannot allocate
@@ -1406,7 +1525,10 @@ class Engine:
         exactly like decode_ticks=1; zero coverage preempts-and-requeues,
         and ``max_len`` is a hard stop ('length' — the paged pool has no
         ring wrap to overwrite).  Slots still mid-prefill are skipped: they
-        decode nothing and their blocks are already allocated."""
+        decode nothing and their blocks are already allocated.  ``window``
+        overrides the window length (the speculative tick passes
+        ``draft_k``; rollback gives surplus coverage back, so partial
+        acceptance never strands blocks)."""
         self._maybe_fail("pool_alloc")
         bs = self.block_size
         for i, req in [(i, s) for i, s in enumerate(self.slots)
@@ -1417,7 +1539,8 @@ class Engine:
                 self._finish(i, req, "length")
                 continue
             self._seal_full_blocks(req, p)
-            w = min(self._window_ticks(), self.max_len - p,
+            w = min(self._window_ticks() if window is None else window,
+                    self.max_len - p,
                     max(1, req.effective_max_new() - len(req.out)))
             pre = len(pool.table(req.rid))
             need = (p + w - 1) // bs + 1
@@ -1567,6 +1690,140 @@ class Engine:
             [(req.rid, f"decode[w{self._step_tick}]",
               {"slot": i, "tokens": kept[i]}) for i, req in active],
             tick=self._step_tick, n_ticks=n)
+
+    def _spec_decode_tick(self):
+        """One speculative window (DESIGN.md §14): draft ``draft_k - 1``
+        tokens per slot host-side, score all ``draft_k`` positions in one
+        verify dispatch, then commit the longest prefix each slot's own
+        sampler agrees with.  Acceptance is *exact token match* — row t's
+        logits are bitwise the sequential decode logits whenever rows 1..t
+        matched, and the sampler is stateless in (seed, counter) — so the
+        emitted stream is bitwise the plain-decode stream for greedy and
+        temperature alike; a window always commits at least row 0's sampled
+        token (plain decode's tick), so wrong drafts cost latency, never
+        progress.  Supersedes ``decode_ticks`` while spec_decode is on: the
+        verify window *is* the engine window.  Rejected suffixes roll back
+        in the same commit dispatch (scrub to never-written bytes); paged
+        slots then return surplus draft-coverage blocks via
+        ``KVPool.truncate``, leaving pool state as if never drafted."""
+        K = self.draft_k
+        self._paged_cap = {}
+        if self.kv_layout == "paged":
+            self._pre_decode_paged(window=K)
+            self._sync_block_tables()
+        active = [(i, s) for i, s in enumerate(self.slots)
+                  if s is not None and s.state == "active"]
+        if not active:
+            return
+        td0 = time.time()
+        alive = np.zeros((self.batch,), bool)
+        budgets = np.zeros((self.batch,), np.int32)
+        drafts = np.zeros((self.batch, K), np.int32)
+        n_drafted = {}
+        for i, req in active:
+            b = min(K, req.effective_max_new() - len(req.out),
+                    self.max_len - int(self._slot_pos[i]))
+            if self.kv_layout == "paged":
+                b = min(b, self._paged_cap[i])
+            alive[i] = True
+            budgets[i] = b
+            drafts[i, 0] = self._last_token[i]
+            prop = self.drafter.propose(list(req.prompt) + req.out, K - 1)
+            nd = min(len(prop), K - 1)
+            if nd:
+                drafts[i, 1:1 + nd] = prop[:nd]
+            n_drafted[i] = nd
+        td1 = time.time()
+
+        self._refresh_device_state()
+        t0 = time.time()
+        toks_dev, self.cache = self._spec_for(K)(
+            self.params, jnp.asarray(drafts), self.cache,
+            self._dev["offsets"], self.tick,
+            self._dev["temps"], self._dev["topks"], self._dev["seeds"],
+            self._dev["counters"], jnp.asarray(alive), jnp.asarray(budgets))
+        toks = np.asarray(toks_dev)               # (B, K) sampled per row
+        self._maybe_fail("mid_window")
+        dt = time.time() - t0
+        self.tick += 1
+        self.stats["decode_s"] += dt
+        self.stats["decode_calls"] += 1
+
+        # host accept walk: row t committed iff its *input* draft matched
+        # row t-1's sampled token (= what sequential decode would have fed),
+        # cut at the first stop/EOS hit like the plain window drain
+        tc0 = time.time()
+        accept = {}
+        for i, req in active:
+            b = int(budgets[i])
+            m = 1
+            while m < b and drafts[i, m] == toks[i, m - 1]:
+                m += 1
+            ss = set(req.sampling.stop_set())
+            if req.sampling.eos_id is not None:
+                ss.add(req.sampling.eos_id)
+            for j in range(m):
+                if int(toks[i, j]) in ss:
+                    m = j + 1
+                    break
+            accept[i] = m
+        # bulk commit + rejected-suffix scrub in one dispatch, against the
+        # *pre-truncation* block tables (the scrub needs the draft mapping)
+        new_pos = np.asarray(self._slot_pos, np.int32)
+        for i, _ in active:
+            new_pos[i] += accept[i]
+        self.cache = self._spec_commit_for(K)(
+            self.cache, jnp.asarray(new_pos), jnp.asarray(budgets))
+        if self.kv_layout == "paged":
+            bs = self.block_size
+            # reverse slot order, truncate returning newest-first: the
+            # appends to each pool's free list exactly mirror the pop order
+            # of this window's draft-coverage allocation across *all* slots,
+            # so the free list (order included) is restored to its
+            # never-drafted state — the pool-state parity the rollback
+            # tests pin (DESIGN.md §14)
+            for i, req in reversed(active):
+                pool = self.pools[self._slot_shard(i)]
+                keep = max(1, -(-int(new_pos[i]) // bs))
+                have = len(pool.table(req.rid))
+                if have > keep:
+                    pool.truncate(req.rid, keep)
+                    self._bt[i, keep:have] = self._trash
+                    self._bt_dirty = True
+        tc1 = time.time()
+
+        now = time.time()
+        for i, req in active:
+            m = accept[i]
+            t_prev = req.t_last if req.t_last is not None else now
+            share = (now - t_prev) / m
+            for j in range(m):
+                self._slot_pos[i] += 1
+                self._emit(i, req, int(toks[i, j]), t_prev + share * (j + 1))
+            self.stats["decode_tokens"] += m
+            self.metrics.inc("spec_draft_tokens", int(budgets[i]) - 1)
+            self.metrics.inc("spec_accepted_tokens", m - 1)
+            self.metrics.inc("spec_emitted_tokens", m)
+        self.metrics.inc("spec_windows")
+        # the device sampling counters ran ahead (all K rows drew); the
+        # host mirrors advanced by the accept length in _emit — re-upload
+        self._dev_dirty = True
+        self.trace.wave(
+            "spec_draft", td0, td1,
+            [(req.rid, f"draft[w{self._step_tick}]",
+              {"slot": i, "drafted": n_drafted[i]}) for i, req in active],
+            tick=self._step_tick)
+        self.trace.wave(
+            "spec_verify", t0, t0 + dt,
+            [(req.rid, f"verify[w{self._step_tick}]",
+              {"slot": i, "k": K, "budget": int(budgets[i])})
+             for i, req in active],
+            tick=self._step_tick, n_ticks=K)
+        self.trace.wave(
+            "spec_commit", tc0, tc1,
+            [(req.rid, f"commit[w{self._step_tick}]",
+              {"slot": i, "accepted": accept[i]}) for i, req in active],
+            tick=self._step_tick)
 
     def _emit(self, i: int, req: Request, tok: int, now: float):
         req.out.append(tok)

@@ -249,6 +249,30 @@ class KVPool:
             self._hash[phys] = h
             self._lookup[h] = phys
 
+    def truncate(self, rid: int, n_blocks: int) -> List[int]:
+        """Give back ``rid``'s tail blocks beyond the first ``n_blocks`` —
+        the speculative-decode rollback path (DESIGN.md §14): draft coverage
+        allocated ahead of a verify forward can outrun the committed
+        position when a suffix is rejected.  Only unsealed, uniquely-owned
+        tail blocks are ever truncated (the engine seals nothing until
+        tokens commit), so popping reverses ``append_block`` exactly — the
+        ids return to the free-list end they were taken from, leaving the
+        allocator byte-identical to one that never over-allocated.  Returns
+        the popped ids (newest first) so the engine can reset their
+        block-table entries."""
+        table = self._tables[rid]
+        assert n_blocks >= 1
+        popped = []
+        while len(table) > n_blocks:
+            phys = table[-1]
+            assert self._ref[phys] == 1 and self._hash[phys] is None, \
+                "spec rollback must only drop unsealed private tail blocks"
+            table.pop()
+            self._ref[phys] = 0
+            self._free.append(phys)
+            popped.append(phys)
+        return popped
+
     # ---------------------------------------------------------------- release
 
     def release(self, rid: int) -> None:

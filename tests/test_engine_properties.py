@@ -188,6 +188,53 @@ def test_invariants_hold_under_shedding_and_deadlines(name, draws, expire,
         eng.queue_cap, eng.shed_policy = None, "reject-new"
 
 
+SPEC_CONFIGS = {name: dict(cfg, spec_decode=True, draft_k=4)
+                for name, cfg in CONFIGS.items()}
+
+
+def _spec_engine(name):
+    key = "spec-" + name
+    if key not in _ENGINES:
+        _ENGINES[key] = Engine(PARAMS, CFG, batch=2, max_len=MAX_LEN,
+                               scheduler="priority", **SPEC_CONFIGS[name])
+    eng = _ENGINES[key]
+    eng.finished = []
+    eng.reset_stats()
+    return eng
+
+
+@pytest.mark.parametrize("name", sorted(SPEC_CONFIGS))
+@settings(max_examples=6, deadline=None)
+@given(draws=st.lists(req_st, min_size=1, max_size=6))
+def test_spec_engine_invariants_and_accept_accounting(name, draws):
+    """Speculative decode under every overlap configuration keeps the full
+    invariant set, and its accept counters reconcile exactly with the
+    emitted streams: every post-prefill token flows through a spec window
+    (``spec_emitted_tokens`` equals the decode-token ground truth), the
+    accepted count never exceeds the drafted count, and since each slot a
+    window serves emits its accepted prefix plus one sampled token,
+    ``emitted - accepted`` is the number of slot servings — bounded by
+    [windows, windows * batch]."""
+    eng = _spec_engine(name)
+    reqs = _submit(eng, draws)
+    eng.run(ticks=600)
+    _check_invariants(eng, reqs)
+    ms = eng.metrics.summary()["counters"]
+    drafted = ms.get("spec_draft_tokens", 0)
+    accepted = ms.get("spec_accepted_tokens", 0)
+    emitted = ms.get("spec_emitted_tokens", 0)
+    windows = ms.get("spec_windows", 0)
+    decode_emitted = sum(len(r.out) - 1 for r in reqs if r.out)
+    assert emitted == decode_emitted
+    assert 0 <= accepted <= drafted
+    if decode_emitted:
+        assert windows >= 1
+        servings = emitted - accepted
+        assert windows <= servings <= windows * eng.batch
+    else:
+        assert (windows, drafted, accepted) == (0, 0, 0)
+
+
 @settings(max_examples=6, deadline=None)
 @given(draws=st.lists(req_st, min_size=2, max_size=6),
        victim=st.integers(0, 5))

@@ -85,6 +85,57 @@ def check_asymptotic_slopes(seed: int):
         assert d < s
 
 
+def check_kv_bulk_quantise_equals_sequential(seed: int, k: int):
+    """Speculative bulk commit's statistical footing (DESIGN.md §14):
+    dither-quantising a length-k span of K/V values in one shot produces
+    *bitwise* the int8 codes and scales of k sequential single-position
+    quantisations — the codes are a pure function of (value, absolute
+    position, element index), never of write width or path."""
+    from repro.models.transformer import _kv_elem_idx, _kv_q8
+    nkv, hd, pos0 = 2, 16, 37
+    key = jax.random.PRNGKey(seed)
+    t = jax.random.normal(key, (2, k, nkv, hd), jnp.float32)
+    idx = _kv_elem_idx(nkv, hd)
+    ctr = (pos0 + jnp.arange(k)).reshape(1, k, 1, 1)
+    bulk_c, bulk_s = _kv_q8(t, ctr, idx, seed)
+    for j in range(k):
+        cj, sj = _kv_q8(t[:, j:j + 1],
+                        jnp.full((1, 1, 1, 1), pos0 + j, jnp.int32),
+                        idx, seed)
+        assert jnp.array_equal(bulk_c[:, j:j + 1], cj), (seed, k, j)
+        assert jnp.array_equal(bulk_s[:, j:j + 1], sj), (seed, k, j)
+
+
+def check_kv_quant_window_unbiased_emse(seed: int, pos0: int):
+    """The KV quantiser is the paper's N=16 dither rounder on the int8
+    lattice: over any 16 consecutive absolute positions each element's LCG
+    permutation visits every slot exactly once, so the windowed average of
+    the code residual is unbiased with EMSE ≤ 2/N² (§II-D / §VII) — at any
+    window start, which is why a spec window can land anywhere in the
+    stream.  Rows carry distinct counter offsets (the per-request
+    ``counter_offset`` pattern) so their hash draws are independent."""
+    from repro.models.transformer import _kv_elem_idx, _kv_q8
+    rows, nkv, hd, N = 8, 2, 16, 16
+    key = jax.random.PRNGKey(seed)
+    t = jnp.broadcast_to(
+        jax.random.normal(key, (rows, 1, nkv, hd), jnp.float32),
+        (rows, N, nkv, hd))
+    idx = _kv_elem_idx(nkv, hd)
+    ctr = (pos0 + 997 * jnp.arange(rows)[:, None] +
+           jnp.arange(N)[None, :]).reshape(rows, N, 1, 1)
+    codes, scale = _kv_q8(t, ctr, idx, seed)
+    scaled = t / scale[..., None] * 127.0 + 128.0
+    resid = codes.astype(jnp.float32) + 128.0 - scaled     # lattice units
+    avg = jnp.mean(resid, axis=1)                          # N-window average
+    bias = float(jnp.mean(avg))
+    # per-window σ ≤ √2/N (the §II-D variance bound), 8σ CLT slack over
+    # rows·nkv·hd independent windows
+    tol = 8.0 * math.sqrt(2.0) / (N * math.sqrt(avg.size))
+    assert abs(bias) <= tol, (seed, pos0, bias, tol)
+    emse_n2 = float(jnp.mean(avg ** 2)) * N * N
+    assert emse_n2 <= 3.0, (seed, pos0, emse_n2)
+
+
 # -- fixed-seed pins: always run, hypothesis or not -------------------------
 
 
@@ -106,6 +157,16 @@ def test_stochastic_emse_n_bounded_below(seed, n):
 @pytest.mark.parametrize("seed", [0, 3])
 def test_asymptotic_slopes(seed):
     check_asymptotic_slopes(seed)
+
+
+@pytest.mark.parametrize("seed,k", [(0, 2), (1, 4), (2, 6)])
+def test_kv_bulk_quantise_equals_sequential(seed, k):
+    check_kv_bulk_quantise_equals_sequential(seed, k)
+
+
+@pytest.mark.parametrize("seed,pos0", [(0, 0), (1, 5), (2, 1000)])
+def test_kv_quant_window_unbiased_emse(seed, pos0):
+    check_kv_quant_window_unbiased_emse(seed, pos0)
 
 
 # -- property layer: drawn (seed, N) in CI ----------------------------------
@@ -132,6 +193,16 @@ def test_stochastic_emse_n_bounded_below_property(seed, n):
 @given(seed=_SEEDS)
 def test_asymptotic_slopes_property(seed):
     check_asymptotic_slopes(seed)
+
+
+@given(seed=_SEEDS, k=st.integers(min_value=2, max_value=8))
+def test_kv_bulk_quantise_equals_sequential_property(seed, k):
+    check_kv_bulk_quantise_equals_sequential(seed, k)
+
+
+@given(seed=_SEEDS, pos0=st.integers(min_value=0, max_value=2 ** 16))
+def test_kv_quant_window_unbiased_emse_property(seed, pos0):
+    check_kv_quant_window_unbiased_emse(seed, pos0)
 
 
 def test_property_layer_active_or_skipped():

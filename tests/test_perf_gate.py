@@ -15,7 +15,7 @@ ARTIFACTS_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                              "artifacts")
 
 
-def _serve_artifact(decode_tok_s=1000.0, calib_us=100.0, version=8):
+def _serve_artifact(decode_tok_s=1000.0, calib_us=100.0, version=9):
     return {
         "version": version,
         "calibration": {"probe": "matmul_f32_256", "repeats": 5,
@@ -247,6 +247,42 @@ def test_trace_overhead_gates_against_absolute_ceiling(tmp_path):
                       with_trace(0.0, bitwise=False, spans=60))
     bad = {f.metric for f in _fails(gate_directories(ref, cand))}
     assert {"streams_bitwise_equal", "trace_phase_spans"} <= bad
+
+
+def test_spec_decode_rows_gate_against_absolute_floor(tmp_path):
+    """Schema v9: ``spec_speedup_vs_plain`` uses the reference-independent
+    floor mode (the ceiling's dual) — 1.4× fails even when the reference
+    also reads 1.4× (no drift erosion), draft_k is an identity key, and
+    the accept counters plus the bitwise pin are frozen."""
+    def with_spec(speedup, bitwise=True, accepted=33):
+        art = _serve_artifact()
+        row = copy.deepcopy(art["results"][0])
+        row.update(workload="spec_decode", draft_k=4, max_new=16,
+                   spec_speedup_vs_plain=speedup,
+                   decode_tok_s_plain=1000.0,
+                   streams_bitwise_equal=bitwise,
+                   spec_windows=8, spec_draft_tokens=33,
+                   spec_accepted_tokens=accepted, spec_emitted_tokens=45,
+                   spec_accept_rate=accepted / 33.0,
+                   spec_accept_rate_prompt_lookup=0.01)
+        art["results"].append(row)
+        return art
+
+    a = with_spec(2.6)["results"][1]
+    assert row_key("serve", a) != row_key("serve", dict(a, draft_k=8))
+
+    ref, cand = _dirs(tmp_path, with_spec(2.6), with_spec(2.2))
+    assert not _fails(gate_directories(ref, cand))       # band + above floor
+
+    ref, cand = _dirs(tmp_path, with_spec(1.4), with_spec(1.4))
+    assert any(f.metric == "spec_speedup_vs_plain"       # floor is absolute:
+               for f in _fails(gate_directories(ref, cand)))  # ref ≡ cand still fails
+
+    ref, cand = _dirs(tmp_path, with_spec(2.6),
+                      with_spec(2.6, bitwise=False, accepted=30))
+    bad = {f.metric for f in _fails(gate_directories(ref, cand))}
+    assert {"streams_bitwise_equal", "spec_accepted_tokens",
+            "spec_accept_rate"} <= bad
 
 
 def test_row_key_and_kind_mapping():

@@ -45,11 +45,12 @@ def _params(cfg):
     return _PARAMS[key]
 
 
-def _stream(cfg, mesh, kv_layout, kv_quant, *, temperature=0.0):
+def _stream(cfg, mesh, kv_layout, kv_quant, *, temperature=0.0, spec=False):
     """Serve a fixed 6-request mix; return the full per-request streams."""
     eng = Engine(_params(cfg), cfg, batch=4, max_len=48, kv_quant=kv_quant,
                  kv_layout=kv_layout,
-                 block_size=8 if kv_layout == "paged" else None, mesh=mesh)
+                 block_size=8 if kv_layout == "paged" else None, mesh=mesh,
+                 **(dict(spec_decode=True, draft_k=4) if spec else {}))
     for r in range(6):
         prompt = [(7 * r + i) % (cfg.vocab_size - 1) + 1
                   for i in range(5 + r % 3)]
@@ -59,6 +60,8 @@ def _stream(cfg, mesh, kv_layout, kv_quant, *, temperature=0.0):
                                                    counter_offset=1000 * r)))
     done = eng.run(ticks=200)
     assert len(done) == 6
+    if spec:
+        assert eng.metrics.summary()["counters"].get("spec_windows", 0) > 0
     return sorted((r.rid, tuple(r.out), r.finish_reason) for r in done)
 
 
@@ -91,6 +94,30 @@ def test_mesh_parity(mesh_shape, kv_layout, kv_quant):
     single-device stream (the ISSUE-5 acceptance criterion)."""
     got = _stream(CFG, make_serve_mesh(*mesh_shape), kv_layout, kv_quant)
     assert got == _baseline(CFG, kv_layout, kv_quant)
+
+
+@pytest.mark.parametrize("kv_layout", ["ring", "paged"])
+def test_spec_mesh_1x1_parity(kv_layout):
+    """Speculative decode through the shard_map serve path on a (1, 1)
+    mesh is bitwise the unmeshed *plain* engine — the spec window's verify
+    and bulk-commit dispatches preserve the stream contract under mesh
+    placement (tier-1, single CPU device)."""
+    got = _stream(CFG, make_serve_mesh(1, 1), kv_layout, False, spec=True)
+    assert got == _baseline(CFG, kv_layout, False)
+
+
+@needs4
+@pytest.mark.parametrize("kv_layout", ["ring", "paged"])
+@pytest.mark.parametrize("mesh_shape", [(2, 1), (1, 2), (2, 2)],
+                         ids=["dp2", "tp2", "dp2tp2"])
+def test_spec_mesh_parity(mesh_shape, kv_layout):
+    """Speculative streams on data-, model- and jointly-sharded meshes are
+    bitwise the single-device plain stream: dither KV codes hash absolute
+    coordinates, so a bulk-committed window is placement-independent just
+    like sequential decode (DESIGN.md §14)."""
+    got = _stream(CFG, make_serve_mesh(*mesh_shape), kv_layout, False,
+                  spec=True)
+    assert got == _baseline(CFG, kv_layout, False)
 
 
 @needs4
